@@ -1,0 +1,178 @@
+"""Shared benchmark plumbing: the trained HAR/bearing classifiers, trained
+recovery generator, timing helper, and CSV emission.
+
+Every benchmark module exposes ``run() -> list[dict]`` rows; benchmarks/run.py
+aggregates them into the ``name,us_per_call,derived`` CSV contract plus a
+human-readable table per paper artifact.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.seeker_har import BEARING, HAR
+from repro.core.recovery import (DiscriminatorParams, GeneratorParams,
+                                 discriminator_apply, generator_apply,
+                                 init_discriminator, init_generator)
+from repro.data.sensors import (bearing_dataset, class_signatures,
+                                har_dataset)
+from repro.models.har import HARConfig, har_apply, har_init
+
+__all__ = ["trained_har", "trained_bearing", "trained_generator", "timeit_us",
+           "accuracy", "train_classifier"]
+
+
+def train_classifier(cfg: HARConfig, dataset_fn, steps: int = 400,
+                     n: int = 1536, lr: float = 3e-2, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = har_init(key, cfg)
+    xs, ys = dataset_fn(jax.random.fold_in(key, 1), n)
+
+    def loss_fn(p, x, y):
+        logp = jax.nn.log_softmax(har_apply(p, x))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(p, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+
+    for i in range(steps):
+        idx = jax.random.randint(jax.random.fold_in(key, 100 + i), (64,),
+                                 0, xs.shape[0])
+        params, _ = step(params, xs[idx], ys[idx])
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def trained_har():
+    params = train_classifier(HAR, har_dataset)
+    x, y = har_dataset(jax.random.PRNGKey(2), 512)
+    return params, x, y
+
+
+@functools.lru_cache(maxsize=None)
+def trained_bearing():
+    fn = lambda k, n: bearing_dataset(k, n, t=BEARING.window)
+    params = train_classifier(BEARING, fn, steps=500)
+    x, y = bearing_dataset(jax.random.PRNGKey(2), 512, t=BEARING.window)
+    return params, x, y
+
+
+@functools.lru_cache(maxsize=None)
+def trained_generator(t: int = 60, channels: int = 3, steps: int = 300):
+    """Adversarially train the recovery generator (paper A.1) on HAR data."""
+    key = jax.random.PRNGKey(0)
+    gen = init_generator(key, t, channels)
+    disc = init_discriminator(key, t, channels)
+    xs, _ = har_dataset(jax.random.fold_in(key, 1), 512, t=t,
+                        channels=channels)
+
+    def gen_windows(g, k, n):
+        noise = jax.random.normal(k, (n, 16))
+        mean = jnp.mean(xs[:n], axis=1)
+        var = jnp.var(xs[:n], axis=1)
+        return jax.vmap(lambda nz, m, v: generator_apply(g, nz, m, v))(
+            noise, mean, var)
+
+    def d_loss(d, g, k, n=64):
+        fake = gen_windows(g, k, n)
+        real = xs[jax.random.randint(k, (n,), 0, xs.shape[0])]
+        ls_real = discriminator_apply(d, real)
+        ls_fake = discriminator_apply(d, fake)
+        return (jnp.mean(jax.nn.softplus(-ls_real))
+                + jnp.mean(jax.nn.softplus(ls_fake)))
+
+    def g_loss(g, d, k, n=64):
+        fake = gen_windows(g, k, n)
+        # non-saturating GAN loss + moment matching stabilizer
+        adv = jnp.mean(jax.nn.softplus(-discriminator_apply(d, fake)))
+        mm = jnp.mean((jnp.mean(fake, 1) - jnp.mean(xs[:n], 1)) ** 2)
+        return adv + 10.0 * mm
+
+    @jax.jit
+    def step(g, d, k):
+        k1, k2 = jax.random.split(k)
+        dl, dg = jax.value_and_grad(d_loss)(d, g, k1)
+        d = jax.tree_util.tree_map(lambda a, b: a - 1e-3 * b, d, dg)
+        gl, gg = jax.value_and_grad(g_loss)(g, d, k2)
+        g = jax.tree_util.tree_map(lambda a, b: a - 1e-3 * b, g, gg)
+        return g, d
+
+    for i in range(steps):
+        gen, disc = step(gen, disc, jax.random.fold_in(key, i))
+    return gen
+
+
+def recover_cluster_batch(x, k: int = 12, seed: int = 0):
+    """Per-channel cluster coresets + recovery for a window batch."""
+    from repro.core.coreset import channel_cluster_coresets
+    from repro.core.recovery import recover_cluster_window
+    keys = jax.random.split(jax.random.PRNGKey(seed), x.shape[0])
+
+    def rec(w, kk):
+        cs = channel_cluster_coresets(w, k=k, iters=4)
+        return recover_cluster_window(cs, kk, x.shape[1])
+
+    return jax.jit(jax.vmap(rec))(x, keys)
+
+
+def finetune_on(params, xs, ys, steps: int = 150, lr: float = 2e-2,
+                seed: int = 7):
+    """Fine-tune a classifier on a transformed window set (the paper's
+    'retrain the DNN models to recognize the compressed representation')."""
+    key = jax.random.PRNGKey(seed)
+
+    def loss_fn(p, x, y):
+        logp = jax.nn.log_softmax(har_apply(p, x))
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(p, x, y):
+        _, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+
+    for i in range(steps):
+        idx = jax.random.randint(jax.random.fold_in(key, i), (64,),
+                                 0, xs.shape[0])
+        params = step(params, xs[idx], ys[idx])
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def trained_host_recovered(k: int = 12):
+    """Host-side classifier fine-tuned on recovered-coreset windows
+    (cluster + generator recoveries mixed), starting from the raw net."""
+    params, _, _ = trained_har()
+    key = jax.random.PRNGKey(11)
+    xs, ys = har_dataset(key, 1024)
+    x_cluster = recover_cluster_batch(xs, k=k)
+    gen = trained_generator()
+    from repro.core.coreset import importance_coreset
+    from repro.core.recovery import recover_sampling_window
+    keys = jax.random.split(key, xs.shape[0])
+
+    def rec_s(w, kk):
+        sc = importance_coreset(w, 20, kk)
+        return recover_sampling_window(gen, sc, kk, xs.shape[1])
+
+    x_sampling = jax.jit(jax.vmap(rec_s))(xs, keys)
+    x_mix = jnp.concatenate([x_cluster, x_sampling, xs], axis=0)
+    y_mix = jnp.concatenate([ys, ys, ys], axis=0)
+    return finetune_on(params, x_mix, y_mix)
+
+
+def timeit_us(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def accuracy(params, x, y, apply=har_apply, **kw) -> float:
+    return float(jnp.mean(jnp.argmax(apply(params, x, **kw), -1) == y))

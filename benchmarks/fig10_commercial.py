@@ -1,0 +1,54 @@
+"""Paper Fig. 10: Seeker's recoverable codecs vs raw / DCT / DWT on
+commercial hardware — compression ratio, recovered accuracy, and codec
+latency (the CotS deployment of §5.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance_coreset
+from repro.core.classical import (classical_payload_bytes, dct_compress,
+                                  dwt_compress)
+from repro.core.coreset import (cluster_payload_bytes, raw_payload_bytes,
+                                sampling_payload_bytes)
+from repro.core.recovery import recover_sampling_window
+
+from .common import (accuracy, recover_cluster_batch, timeit_us,
+                     trained_generator, trained_har, trained_host_recovered)
+
+
+def run() -> list[dict]:
+    params, x, y = trained_har()
+    gen = trained_generator()
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, x.shape[0])
+    t = x.shape[1]
+    raw = raw_payload_bytes(t)
+    rows = [{"name": "fig10/raw", "us_per_call": 0.0, "ratio": 1.0,
+             "acc": accuracy(params, x, y)}]
+
+    for name, fn, payload in [
+        ("dct", lambda w: dct_compress(w, 14), classical_payload_bytes(14)),
+        ("dwt", lambda w: dwt_compress(w, 14), classical_payload_bytes(14)),
+    ]:
+        jfn = jax.jit(jax.vmap(fn))
+        rows.append({"name": f"fig10/{name}", "ratio": raw / payload,
+                     "acc": accuracy(params, jfn(x), y),
+                     "us_per_call": timeit_us(jfn, x, iters=3)})
+
+    host = trained_host_recovered()
+    rows.append({"name": "fig10/seeker_recoverable_cluster",
+                 "ratio": raw / cluster_payload_bytes(12),
+                 "acc": accuracy(host, recover_cluster_batch(x, 12), y),
+                 "us_per_call": 0.0})
+
+    def rec_sampling(w, kk):
+        sc = importance_coreset(w, 20, kk)
+        return recover_sampling_window(gen, sc, kk, t)
+
+    jfn = jax.jit(jax.vmap(rec_sampling))
+    rows.append({"name": "fig10/seeker_recoverable_sampling",
+                 "ratio": raw / sampling_payload_bytes(20, channels=3),
+                 "acc": accuracy(host, jfn(x, keys), y),
+                 "us_per_call": timeit_us(jfn, x, keys, iters=3)})
+    return rows

@@ -1,0 +1,82 @@
+"""Paper Fig. 11 (a) data volume with dynamic (activity-aware) coresets,
+(b) fraction of inferences completed per EH source, (c) compute breakdown
+across components — the full-system simulation."""
+from __future__ import annotations
+
+import collections
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.seeker_har import HAR
+from repro.core import EH_SOURCES, harvest_trace, make_aac_table
+from repro.core.coreset import cluster_payload_bytes, raw_payload_bytes
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.serving import seeker_simulate
+
+from .common import (trained_generator, trained_har,
+                     trained_host_recovered)
+from .fig6_clusters import AAC_TABLE_PATH
+
+
+def _aac_table():
+    if os.path.exists(AAC_TABLE_PATH):
+        with open(AAC_TABLE_PATH) as f:
+            d = json.load(f)
+        return make_aac_table(jnp.asarray(d["acc"]), d["ks"])
+    return None
+
+
+def run() -> list[dict]:
+    params, _, _ = trained_har()
+    host = trained_host_recovered()
+    gen = trained_generator()
+    key = jax.random.PRNGKey(0)
+    sigs = class_signatures()
+    wins, labels = har_stream(key, 128)
+    t = wins.shape[1]
+    c = wins.shape[2]
+    raw = raw_payload_bytes(t) * c          # 3-channel window on the wire
+    rows = []
+
+    # (a) data volume: fixed-k clustering vs activity-aware (3-channel wire
+    # bytes on both sides)
+    for k in (8, 12, 16):
+        payload = cluster_payload_bytes(k) * c
+        rows.append({"name": f"fig11a/fixed_k{k}", "us_per_call": 0.0,
+                     "volume_frac": payload / raw,
+                     "reduction_x": raw / payload})
+    aac = _aac_table()
+    res = seeker_simulate(wins, labels, harvest_trace(key, 128, "wifi"),
+                          signatures=sigs, qdnn_params=params,
+                          host_params=host, gen_params=gen, har_cfg=HAR,
+                          aac_table=aac)
+    d3 = np.asarray(res["decisions"]) == 3
+    if d3.any():
+        aac_bytes = float(np.mean(np.asarray(res["payload_bytes"])[d3]))
+        rows.append({"name": "fig11a/activity_aware", "us_per_call": 0.0,
+                     "volume_frac": aac_bytes / raw,
+                     "reduction_x": raw / aac_bytes})
+
+    # (b) completion fraction + (c) component breakdown per EH source
+    for src in EH_SOURCES:
+        res = seeker_simulate(wins, labels, harvest_trace(key, 128, src),
+                              signatures=sigs, qdnn_params=params,
+                              host_params=host, gen_params=gen,
+                              har_cfg=HAR, aac_table=aac)
+        dec = collections.Counter(np.asarray(res["decisions"]).tolist())
+        n = len(labels)
+        rows.append({
+            "name": f"fig11b/{src}", "us_per_call": 0.0,
+            "completed_frac": float(res["completed_frac"]),
+            "acc_completed": float(res["accuracy_completed"]),
+            "memo_frac": dec.get(0, 0) / n,
+            "edge_dnn_frac": (dec.get(1, 0) + dec.get(2, 0)) / n,
+            "offload_frac": (dec.get(3, 0) + dec.get(4, 0)) / n,
+            "defer_frac": dec.get(5, 0) / n,
+        })
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Fig. 13/15 + A.2: predictive maintenance (bearing fault).
+
+Energy-aware-only AAC (no class conditioning), wider windows, more clusters
+(paper: 15-20 for the 48 kHz CWRU data).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.seeker_har import BEARING, SYSTEM
+from repro.core.coreset import cluster_payload_bytes, raw_payload_bytes
+from repro.data.sensors import bearing_dataset
+from repro.models.har import har_apply_quantized
+
+from .common import (accuracy, finetune_on, recover_cluster_batch,
+                     trained_bearing)
+
+
+def run() -> list[dict]:
+    params, x, y = trained_bearing()
+    t = x.shape[1]
+    acc_full = accuracy(params, x, y)
+    rows = [{"name": "fig13/full_power", "us_per_call": 0.0, "acc": acc_full}]
+    rows.append({"name": "fig13/quant16_edge", "us_per_call": 0.0,
+                 "acc": accuracy(params, x, y, har_apply_quantized, bits=16)})
+    # host net fine-tuned on recovered bearing windows (paper A.2: the
+    # bearing data needs 15-20 clusters)
+    xs_tr, ys_tr = bearing_dataset(jax.random.PRNGKey(9), 768, t=t)
+    for k in (12, SYSTEM.bearing_clusters, 24):
+        host = finetune_on(params, recover_cluster_batch(xs_tr, k=k), ys_tr)
+        xr = recover_cluster_batch(x, k=k, seed=1)
+        rows.append({
+            "name": f"fig13/recovered_coreset_k{k}", "us_per_call": 0.0,
+            "acc": accuracy(host, xr, y),
+            "reduction_x": raw_payload_bytes(t) / cluster_payload_bytes(k),
+        })
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig. 2c: accuracy as a function of post-training quantization."""
+from __future__ import annotations
+
+from repro.models.har import har_apply_quantized
+
+from .common import accuracy, trained_har
+
+
+def run() -> list[dict]:
+    params, x, y = trained_har()
+    rows = [{"name": "fig2c/float32", "us_per_call": 0.0,
+             "acc": accuracy(params, x, y), "bits": 32}]
+    for bits in (16, 12, 10, 8, 6, 4):
+        rows.append({
+            "name": f"fig2c/int{bits}",
+            "us_per_call": 0.0,
+            "bits": bits,
+            "acc": accuracy(params, x, y, har_apply_quantized, bits=bits),
+        })
+    return rows

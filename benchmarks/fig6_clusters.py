@@ -1,0 +1,40 @@
+"""Paper Fig. 6: accuracy vs number of clusters (k); also emits the
+per-class AAC table used by activity-aware construction (§5.2)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.har import har_apply
+
+from .common import recover_cluster_batch, trained_har, trained_host_recovered
+
+KS = (4, 6, 8, 10, 12, 16)
+AAC_TABLE_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                              "aac_table.json")
+
+
+def run() -> list[dict]:
+    _params, x, y = trained_har()
+    host = trained_host_recovered()
+    rows = []
+    per_class = np.zeros((12, len(KS)))
+    for ki, k in enumerate(KS):
+        xr = recover_cluster_batch(x, k=k)
+        preds = jnp.argmax(har_apply(host, xr), -1)
+        acc = float(jnp.mean(preds == y))
+        for cl in range(12):
+            mask = np.asarray(y == cl)
+            if mask.sum():
+                per_class[cl, ki] = float(np.mean(np.asarray(preds == y)[mask]))
+        rows.append({"name": f"fig6/k{k}", "us_per_call": 0.0, "k": k,
+                     "acc": acc})
+    # persist the AAC lookup table (used by repro.core.aac at runtime)
+    os.makedirs(os.path.dirname(AAC_TABLE_PATH), exist_ok=True)
+    with open(AAC_TABLE_PATH, "w") as f:
+        json.dump({"ks": list(KS), "acc": per_class.tolist()}, f)
+    return rows

@@ -1,0 +1,73 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV (derived = the module's headline
+metric per row) followed by human-readable tables, and writes the raw rows
+to experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+MODULES = [
+    "table1_compression",
+    "table2_strategies",
+    "fig2_quantization",
+    "fig6_clusters",
+    "fig10_commercial",
+    "fig11_system",
+    "fig12_endtoend",
+    "fig13_bearing",
+    "comm_volume",
+]
+
+
+def _derived(row: dict) -> str:
+    for k in ("acc", "acc_scheduled", "total_uj", "reduction_x",
+              "completed_frac", "wire_bytes_per_dev", "volume_frac"):
+        if k in row:
+            return f"{k}={row[k]:.4f}" if isinstance(row[k], float) \
+                else f"{k}={row[k]}"
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single module (substring match)")
+    args = ap.parse_args()
+
+    import importlib
+    all_rows: list[dict] = []
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{modname}")
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness alive per-module
+            print(f"{modname}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for row in rows:
+            print(f"{row['name']},{row.get('us_per_call', 0.0):.1f},"
+                  f"{_derived(row)}")
+        all_rows.extend(rows)
+        all_rows.append({"name": f"_meta/{modname}",
+                         "wall_s": round(time.time() - t0, 1)})
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# wrote {os.path.normpath(out)}")
+
+
+if __name__ == "__main__":
+    main()

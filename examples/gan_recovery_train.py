@@ -1,0 +1,90 @@
+"""Train the importance-sampling recovery GAN (paper §3.2.2 + appendix A.1).
+
+    PYTHONPATH=src python examples/gan_recovery_train.py [--steps 400]
+
+Generator g(noise, mean, var) synthesizes the samples that importance
+sampling dropped; the discriminator drives realism; transmitted samples are
+written back verbatim.  Reports the paper's A.1 metric: correlation of the
+recovered signal with the original (paper: >=0.9 typical, ~0.6 worst-case).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.seeker_har import HAR
+from repro.core import importance_coreset, pearson
+from repro.core.recovery import (discriminator_apply, generator_apply,
+                                 init_discriminator, init_generator,
+                                 recover_sampling_window)
+from repro.data.sensors import har_dataset
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    key = jax.random.PRNGKey(0)
+    t, c = HAR.window, HAR.channels
+    xs, _ = har_dataset(jax.random.fold_in(key, 1), 768)
+
+    gen = init_generator(key, t, c)
+    disc = init_discriminator(key, t, c)
+    n_gen = sum(p.size for p in jax.tree_util.tree_leaves(gen))
+    print(f"generator: {n_gen/1e3:.0f}k params "
+          f"(paper: 'few hundred thousand')")
+
+    def synth(g, k, n=64):
+        noise = jax.random.normal(k, (n, 16))
+        batch = xs[jax.random.randint(k, (n,), 0, xs.shape[0])]
+        mean, var = jnp.mean(batch, 1), jnp.var(batch, 1)
+        fake = jax.vmap(lambda nz, m, v: generator_apply(g, nz, m, v))(
+            noise, mean, var)
+        return fake, batch
+
+    def d_loss(d, g, k):
+        fake, real = synth(g, k)
+        return (jnp.mean(jax.nn.softplus(-discriminator_apply(d, real)))
+                + jnp.mean(jax.nn.softplus(discriminator_apply(d, fake))))
+
+    def g_loss(g, d, k):
+        fake, real = synth(g, k)
+        adv = jnp.mean(jax.nn.softplus(-discriminator_apply(d, fake)))
+        # moment + spectrum matching stabilizers (paper: conditioning on
+        # first/second order moments of the signal)
+        mm = jnp.mean((jnp.mean(fake, 1) - jnp.mean(real, 1)) ** 2)
+        sm = jnp.mean((jnp.abs(jnp.fft.rfft(fake, axis=1))
+                       - jnp.abs(jnp.fft.rfft(real, axis=1))) ** 2)
+        return adv + 10.0 * mm + 0.5 * sm
+
+    @jax.jit
+    def step(g, d, k):
+        k1, k2 = jax.random.split(k)
+        dl, dg = jax.value_and_grad(d_loss)(d, g, k1)
+        d = jax.tree_util.tree_map(lambda a, b: a - 1e-3 * b, d, dg)
+        gl, gg = jax.value_and_grad(g_loss)(g, d, k2)
+        g = jax.tree_util.tree_map(lambda a, b: a - 1e-3 * b, g, gg)
+        return g, d, dl, gl
+
+    for i in range(args.steps):
+        gen, disc, dl, gl = step(gen, disc, jax.random.fold_in(key, i))
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:4d}  d_loss {float(dl):.3f}  g_loss {float(gl):.3f}")
+
+    # evaluate: recover windows and measure correlation with the original
+    test, _ = har_dataset(jax.random.fold_in(key, 2), 64)
+    corrs = []
+    for i in range(64):
+        kk = jax.random.fold_in(key, 1000 + i)
+        sc = importance_coreset(test[i], 20, kk)
+        rec = recover_sampling_window(gen, sc, kk, t)
+        corrs.append(float(jnp.mean(jax.vmap(
+            lambda a, b: pearson(a, b), in_axes=1)(rec, test[i]))))
+    corrs = jnp.asarray(corrs)
+    print(f"\nrecovered-vs-original correlation: median "
+          f"{float(jnp.median(corrs)):.3f}, worst {float(jnp.min(corrs)):.3f}"
+          f"  (paper A.1: >=0.9 typical, ~0.6 worst)")
+
+
+if __name__ == "__main__":
+    main()

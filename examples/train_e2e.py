@@ -1,0 +1,79 @@
+"""End-to-end training driver (deliverable b): trains a ~100M-param LM for a
+few hundred steps on CPU with the full production stack — sharded train step,
+checkpointing, simulated preemption + restart, and (optionally) Seeker
+gradient-coreset compression over the DP axis.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--compress]
+
+The model is a width-reduced tinyllama-family config (~large enough to be a
+real training run, small enough for CPU).  Loss on the synthetic-template LM
+task drops from ~ln(V) to well below it within a couple hundred steps.
+"""
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import CompressionConfig
+from repro.data.lm import LMTask, lm_batches
+from repro.models.config import ModelConfig
+from repro.train import (TrainHyper, TrainLoopConfig, init_train_state,
+                         make_compressed_train_step, make_train_step,
+                         run_training)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--compress", action="store_true",
+                    help="Seeker coreset gradient compression (needs >1 dev)")
+    ap.add_argument("--params-m", type=int, default=100,
+                    help="target model size in millions")
+    args = ap.parse_args()
+
+    # ~100M params: 12L x 512d x 8H, 32k vocab, llama-style
+    d = 512 if args.params_m >= 50 else 256
+    cfg = ModelConfig(name="e2e-100m", vocab=32_000, d_model=d, n_layers=12,
+                      n_heads=8, n_kv=4, d_ff=4 * d, mlp="swiglu",
+                      dtype=jnp.float32, tie_embeddings=False)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    hyper = TrainHyper(peak_lr=1e-3, warmup=20, total_steps=args.steps)
+    # CPU-sized token budget; on accelerators raise seq/batch freely
+    task = LMTask(vocab=cfg.vocab, seq_len=128, batch=4)
+    ccfg = CompressionConfig() if args.compress else None
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hyper, ccfg)
+
+    if args.compress:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        step = jax.jit(make_compressed_train_step(cfg, hyper, ccfg, mesh,
+                                                  dp_axes=("data",)))
+    else:
+        step = jax.jit(make_train_step(cfg, hyper))
+
+    ckpt_dir = os.path.join(tempfile.gettempdir(), "seeker_e2e_ckpt")
+    loop = TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=ckpt_dir,
+        ckpt_every=max(args.steps // 4, 10),
+        log_every=max(args.steps // 20, 1),
+        preempt_at=(args.steps // 2,),         # simulated preemption mid-run
+    )
+    t0 = time.time()
+    state, log = run_training(state, step, lambda s: lm_batches(task, s), loop)
+    dt = time.time() - t0
+    losses = [(m["step"], m["loss"]) for m in log if "loss" in m]
+    events = [m for m in log if "event" in m]
+    print(f"\ntrained {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * task.batch * task.seq_len / dt:.0f} tok/s)")
+    print(f"loss: {losses[0][1]:.3f} (step {losses[0][0]}) -> "
+          f"{losses[-1][1]:.3f} (step {losses[-1][0]})")
+    print(f"fault-tolerance events: {events}")
+    assert losses[-1][1] < losses[0][1], "loss did not decrease!"
+
+
+if __name__ == "__main__":
+    main()

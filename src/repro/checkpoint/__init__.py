@@ -1,0 +1,3 @@
+from .store import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, list_steps,
+)

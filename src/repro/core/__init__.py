@@ -1,0 +1,29 @@
+"""Seeker's core contribution: coresets, recovery, memoization, energy model,
+decision flow, and the distributed coreset codecs."""
+from .coreset import (  # noqa: F401
+    ClusterCoreset, SamplingCoreset, points_from_window, window_from_points,
+    kmeans_coreset, importance_weights, importance_coreset,
+    topk_importance_coreset, quantize_uniform, dequantize_uniform,
+    encode_cluster_coreset, decode_cluster_coreset, raw_payload_bytes,
+    cluster_payload_bytes, sampling_payload_bytes,
+)
+from .recovery import (  # noqa: F401
+    recover_cluster_points, recover_cluster_window, GeneratorParams,
+    init_generator, generator_apply, recover_sampling_window,
+    init_discriminator, discriminator_apply,
+)
+from .memo import pearson, signature_correlations, memo_decision, MemoResult  # noqa: F401
+from .energy import (  # noqa: F401
+    EnergyCosts, TABLE2_COSTS, harvest_trace, EH_SOURCES, supercap_step,
+    PredictorState, predictor_init, predictor_update, predictor_forecast,
+)
+from .aac import AACTable, make_aac_table, select_k  # noqa: F401
+from .decision import (  # noqa: F401
+    D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING, DEFER,
+    DecisionOutcome, choose_decision, decision_energy,
+)
+from .compression import (  # noqa: F401
+    CompressionConfig, topk_compress, topk_decompress, kmeans1d,
+    kmeans1d_decompress, Kmeans1dCoreset, coreset_allreduce,
+    compress_activation, decompress_activation,
+)

@@ -1,0 +1,90 @@
+"""Activity-Aware Coreset construction (AAC — paper §5.2).
+
+Not every activity needs the default 12 clusters: simple periodic activities
+(walking, running) survive with as few as 8, complex ones need the full
+budget.  Naively this is circular — you need the class to size the coreset
+that detects the class — which the paper breaks with the *temporal
+continuity* of human activity: the previously completed inference predicts
+the current class.
+
+Runtime structure:
+
+* an offline-built **accuracy table** ``acc[class, k]`` (built by
+  ``benchmarks/fig6_clusters.py``, analogous to paper Fig. 6),
+* :func:`select_k` picks the smallest ``k`` whose predicted accuracy drop is
+  within tolerance *and* whose construction+tx energy fits the budget —
+  falling back to fewer clusters under energy pressure (paper: "if the system
+  does not have enough energy to form the default 12 clusters, it will resort
+  to forming a smaller number of clusters with minimum accuracy loss").
+
+For the bearing-fault workload the paper tweaks AAC to be *energy-aware
+only* (no class conditioning): pass ``class_aware=False``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .coreset import cluster_payload_bytes
+
+__all__ = ["AACTable", "make_aac_table", "select_k", "aac_payload_bytes"]
+
+
+class AACTable(NamedTuple):
+    """``acc``: (n_classes, n_k) accuracy estimate per (class, k-index).
+    ``ks``: (n_k,) the cluster counts the table indexes (ascending)."""
+
+    acc: jnp.ndarray
+    ks: jnp.ndarray
+
+
+def make_aac_table(acc: jnp.ndarray, ks) -> AACTable:
+    ks = jnp.asarray(ks, dtype=jnp.int32)
+    assert acc.shape[-1] == ks.shape[0]
+    return AACTable(acc=jnp.asarray(acc, jnp.float32), ks=ks)
+
+
+def _cluster_energy_uj(k: jnp.ndarray, base_cost: float, tx_per_byte: float,
+                       bytes_center: int = 2, bytes_radius: int = 1) -> jnp.ndarray:
+    """Energy of building + transmitting a k-cluster coreset: construction is
+    ~linear in k (the parallel engine does all clusters at once but reads all
+    points per iteration), tx is linear in payload bytes."""
+    payload = k.astype(jnp.float32) * (bytes_center + bytes_radius) + jnp.ceil(k / 2.0)
+    return base_cost * k.astype(jnp.float32) / 12.0 + tx_per_byte * payload
+
+
+def select_k(table: AACTable, pred_class: jnp.ndarray, energy_uj: jnp.ndarray,
+             acc_tol: float = 0.02, base_cost: float = 1.07,
+             tx_per_byte: float = 0.38, class_aware: bool = True) -> jnp.ndarray:
+    """Pick the number of clusters for the *current* window.
+
+    Args:
+        table: offline accuracy table.
+        pred_class: () int32 — previous inference's label (temporal continuity).
+        energy_uj: () float — predicted available energy for this slot.
+        acc_tol: acceptable accuracy drop vs the table's per-class max.
+        class_aware: False = paper's bearing-fault variant (energy-only).
+
+    Returns () int32: a value from ``table.ks`` (smallest acceptable; if none
+    is affordable, the cheapest k — degrade rather than drop, paper §5.2).
+    """
+    if class_aware:
+        row = table.acc[pred_class]                     # (n_k,)
+    else:
+        row = jnp.min(table.acc, axis=0)                # worst-class bound
+    best = jnp.max(row)
+    acc_ok = row >= best - acc_tol
+    cost = _cluster_energy_uj(table.ks, base_cost, tx_per_byte)
+    energy_ok = cost <= energy_uj
+    ok = acc_ok & energy_ok
+    # smallest acceptable k; fall back to the smallest k in the table
+    idx = jnp.argmax(ok)                                 # first True (ks ascending)
+    any_ok = jnp.any(ok)
+    return jnp.where(any_ok, table.ks[idx], table.ks[0])
+
+
+def aac_payload_bytes(ks: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized payload accounting for a trace of selected k values."""
+    per_k = jnp.asarray([cluster_payload_bytes(int(k)) for k in ks])
+    return per_k

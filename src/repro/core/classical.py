@@ -1,0 +1,96 @@
+"""Classical lossy compression baselines (paper Table 1 / Fig 10 rivals).
+
+Top-m coefficient selection in three transform domains, with the same wire
+accounting as the coresets (1 B index + 2 B quantized value per kept
+coefficient, per channel):
+
+* DCT-II (orthonormal, via explicit basis matmul — T is tiny),
+* Haar DWT (as many doubling levels as T admits),
+* Fourier (rFFT; complex coefficients cost two values).
+
+These are *context-blind*: the paper's point is that at iso-ratio they shred
+the class-discriminative features of low-dimensional sensor data while
+coresets preserve geometry (Table 1: 5-18% accuracy loss vs <=0.76%).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dct_compress", "dwt_compress", "fourier_compress",
+           "classical_payload_bytes"]
+
+
+def _dct_basis(t: int) -> jnp.ndarray:
+    n = jnp.arange(t)
+    k = jnp.arange(t)[:, None]
+    basis = jnp.cos(math.pi / t * (n[None, :] + 0.5) * k)
+    scale = jnp.where(k == 0, jnp.sqrt(1.0 / t), jnp.sqrt(2.0 / t))
+    return basis * scale                                   # (T, T) orthonormal
+
+
+def _topm_reconstruct(coeffs: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Zero all but the m largest-|.| coefficients (per channel)."""
+    mag = jnp.abs(coeffs)
+    thresh = -jnp.sort(-mag, axis=0)[m - 1:m, :]
+    return jnp.where(mag >= thresh, coeffs, 0.0)
+
+
+def dct_compress(window: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(T, C) -> (T, C) reconstruction from m DCT coefficients/channel."""
+    t = window.shape[0]
+    B = _dct_basis(t)
+    coeffs = B @ window                                    # (T, C)
+    kept = _topm_reconstruct(coeffs, m)
+    return B.T @ kept
+
+
+def _haar_levels(t: int, max_levels: int = 8) -> int:
+    lv = 0
+    while t % 2 == 0 and lv < max_levels:
+        t //= 2
+        lv += 1
+    return lv
+
+
+def dwt_compress(window: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Haar DWT, top-m coefficients, inverse transform."""
+    t, c = window.shape
+    levels = max(_haar_levels(t), 1)
+    s = window
+    details = []
+    for _ in range(levels):
+        even, odd = s[0::2], s[1::2]
+        details.append((even - odd) / jnp.sqrt(2.0))
+        s = (even + odd) / jnp.sqrt(2.0)
+    flat = jnp.concatenate([s] + details[::-1], axis=0)
+    kept = _topm_reconstruct(flat, m)
+    # inverse
+    n_s = s.shape[0]
+    s_rec = kept[:n_s]
+    off = n_s
+    for d in details[::-1]:
+        dd = kept[off:off + d.shape[0]]
+        off += d.shape[0]
+        even = (s_rec + dd) / jnp.sqrt(2.0)
+        odd = (s_rec - dd) / jnp.sqrt(2.0)
+        s_rec = jnp.stack([even, odd], axis=1).reshape(-1, c)
+    return s_rec
+
+
+def fourier_compress(window: jnp.ndarray, m: int) -> jnp.ndarray:
+    """rFFT, keep m/2 complex coefficients (m real values), inverse."""
+    t = window.shape[0]
+    coeffs = jnp.fft.rfft(window, axis=0)
+    keep = max(m // 2, 1)
+    mag = jnp.abs(coeffs)
+    thresh = -jnp.sort(-mag, axis=0)[keep - 1:keep, :]
+    kept = jnp.where(mag >= thresh, coeffs, 0.0)
+    return jnp.fft.irfft(kept, n=t, axis=0)
+
+
+def classical_payload_bytes(m: int, bytes_index: int = 1,
+                            bytes_value: int = 2) -> int:
+    return m * (bytes_index + bytes_value)

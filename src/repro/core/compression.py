@@ -1,0 +1,288 @@
+"""Coreset codecs for distributed collectives — Seeker's C1–C3 mapped to TPU.
+
+The paper compresses the sensor→host radio payload with coresets; on a TPU
+fleet the scarce link is ICI, and the two dominant payloads are
+
+* **data-parallel gradient reductions** (training), and
+* **edge-tier → host-tier activation transfers** (disaggregated serving,
+  the literal D3/D4 offload path).
+
+Two codecs, direct images of the paper's two constructions:
+
+* :func:`topk_compress` — *importance sampling*: keep the k largest-magnitude
+  entries (importance ∝ |g|), ship ``(value, index)`` pairs, accumulate what
+  was dropped into an **error-feedback** residual (the unbiased-estimator role
+  the paper's Horvitz-Thompson weights play).
+
+* :func:`kmeans1d` — *clustering*: a 1-D k-means codebook over tensor values;
+  the wire format is the paper's ``(center, radius, count)`` triple per
+  cluster plus a 4-bit code per element.  Recovery can optionally re-dither
+  uniformly within each cluster radius — the 2r-approximation of §3.2.2.
+
+:func:`coreset_allreduce` runs inside ``shard_map``: compress locally,
+``all_gather`` the compact payload over the reduction axes, decompress + sum.
+Wire-byte accounting (:func:`wire_bytes_dense_psum` vs
+:func:`wire_bytes_topk_allgather`) feeds the roofline collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CompressionConfig", "topk_compress", "topk_decompress",
+    "topk_block_compress", "topk_block_decompress", "kmeans1d",
+    "kmeans1d_decompress", "Kmeans1dCoreset", "coreset_allreduce",
+    "compress_activation", "decompress_activation",
+    "wire_bytes_dense_psum", "wire_bytes_topk_allgather",
+    "wire_bytes_kmeans1d",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "topk"              # "topk" | "topk_block" | "none"
+    topk_ratio: float = 1.0 / 64.0    # fraction of entries kept
+    block: int = 32768                # topk_block span (int16 offsets)
+    kmeans_k: int = 16                # codebook size (4-bit codes)
+    kmeans_iters: int = 4             # paper's fixed Lloyd budget
+    error_feedback: bool = True
+    min_size: int = 2048              # leaves smaller than this go uncompressed
+
+
+# ---------------------------------------------------------------------------
+# Importance-sampling codec (top-k by magnitude + error feedback)
+# ---------------------------------------------------------------------------
+
+def topk_compress(flat: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(values, indices) of the k largest-|.| entries of a 1-D tensor."""
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_decompress(values: jnp.ndarray, indices: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jnp.zeros((n,), dtype=values.dtype).at[indices].add(values)
+
+
+def topk_block_compress(flat: jnp.ndarray, ratio: float,
+                        block: int = 32768) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-local top-k: keep k_b largest-|.| entries of every ``block``-span
+    and address them with int16 *offsets* (block id is implicit in position).
+
+    Wire cost per kept entry drops from 6 B (bf16 value + int32 index) to
+    4 B (bf16 value + int16 offset) — a 1.5x payload cut that moves the
+    compression-vs-dense crossover fan-in from ~85 to ~128 devices at 1/64
+    sparsity (§Perf cell C iteration log).  Block-local selection is also
+    what the paper's fixed-function sampler computes (per-window, not
+    global).
+
+    Returns (values (n_blocks, k_b) same-dtype, offsets (n_blocks, k_b)
+    int16).  The tensor is zero-padded to a block multiple by the caller.
+    """
+    n = flat.size
+    assert n % block == 0, (n, block)
+    nb = n // block
+    k_b = max(1, int(block * ratio))
+    x = flat.reshape(nb, block)
+    _, off = jax.lax.top_k(jnp.abs(x), k_b)                  # (nb, k_b)
+    vals = jnp.take_along_axis(x, off, axis=1)
+    return vals, off.astype(jnp.int16)
+
+
+def topk_block_decompress(values: jnp.ndarray, offsets: jnp.ndarray,
+                          n: int) -> jnp.ndarray:
+    nb, k_b = values.shape
+    block = n // nb
+    out = jnp.zeros((nb, block), values.dtype)
+    out = out.at[jnp.arange(nb)[:, None], offsets.astype(jnp.int32)].add(values)
+    return out.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# Clustering codec (1-D k-means codebook = the paper's center/radius/count)
+# ---------------------------------------------------------------------------
+
+class Kmeans1dCoreset(NamedTuple):
+    centers: jnp.ndarray   # (k,)
+    radii: jnp.ndarray     # (k,)  max |x - center| per cluster
+    counts: jnp.ndarray    # (k,)  int32
+    codes: jnp.ndarray     # (N,)  int32 in [0, k) — 4 bits on the wire for k<=16
+
+
+def kmeans1d(flat: jnp.ndarray, k: int = 16, iters: int = 4) -> Kmeans1dCoreset:
+    """Fixed-budget 1-D Lloyd (sorted-centroid bucketing via searchsorted)."""
+    lo = jnp.min(flat)
+    hi = jnp.max(flat)
+    centers0 = jnp.linspace(lo, hi, k).astype(flat.dtype)
+
+    def lloyd(centers, _):
+        mids = 0.5 * (centers[1:] + centers[:-1])
+        codes = jnp.searchsorted(mids, flat)
+        onehot = jax.nn.one_hot(codes, k, dtype=flat.dtype)
+        counts = jnp.sum(onehot, axis=0)
+        sums = onehot.T @ flat
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centers)
+        return jnp.sort(new), None
+
+    centers, _ = jax.lax.scan(lloyd, centers0, None, length=iters)
+    mids = 0.5 * (centers[1:] + centers[:-1])
+    codes = jnp.searchsorted(mids, flat).astype(jnp.int32)
+    onehot = jax.nn.one_hot(codes, k, dtype=flat.dtype)
+    counts = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    err = jnp.abs(flat - centers[codes])
+    radii = jnp.max(onehot * err[:, None], axis=0)
+    return Kmeans1dCoreset(centers=centers, radii=radii, counts=counts, codes=codes)
+
+
+def kmeans1d_decompress(cs: Kmeans1dCoreset, key: jax.Array | None = None) -> jnp.ndarray:
+    """codes -> values; with a key, dithers uniformly within each cluster
+    radius (the paper's uniform-redistribution recovery)."""
+    vals = cs.centers[cs.codes]
+    if key is not None:
+        u = jax.random.uniform(key, cs.codes.shape, minval=-1.0, maxval=1.0)
+        vals = vals + u * cs.radii[cs.codes]
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# shard_map collective: compressed all-reduce over one or more mesh axes
+# ---------------------------------------------------------------------------
+
+def _leaf_allreduce_topk(g: jnp.ndarray, e: jnp.ndarray | None, axis_names,
+                         cfg: CompressionConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    flat = g.reshape(-1).astype(jnp.float32)
+    if e is not None:
+        flat = flat + e.reshape(-1)
+    n = flat.size
+    k = max(1, int(n * cfg.topk_ratio))
+    vals, idx = topk_compress(flat, k)
+    wire_vals = vals.astype(jnp.bfloat16)
+    gathered_v = wire_vals
+    gathered_i = idx
+    for ax in axis_names:
+        gathered_v = jax.lax.all_gather(gathered_v, ax).reshape(-1)
+        gathered_i = jax.lax.all_gather(gathered_i, ax).reshape(-1)
+    ndev = 1
+    for ax in axis_names:
+        ndev *= jax.lax.psum(1, ax)
+    dense = jnp.zeros((n,), jnp.float32).at[gathered_i].add(
+        gathered_v.astype(jnp.float32))
+    mean = dense / ndev
+    residual = flat - topk_decompress(wire_vals.astype(jnp.float32), idx, n)
+    return mean.reshape(g.shape).astype(g.dtype), residual.reshape(g.shape)
+
+
+def _leaf_allreduce_block(g: jnp.ndarray, e: jnp.ndarray | None, axis_names,
+                          cfg: CompressionConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-local top-k variant: int16 offsets on the wire (4 B/entry)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    if e is not None:
+        flat = flat + e.reshape(-1)
+    n = flat.size
+    block = min(cfg.block, n)
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad))
+    vals, off = topk_block_compress(fp, cfg.topk_ratio, block)
+    wire_vals = vals.astype(jnp.bfloat16)
+    gv, go = wire_vals, off
+    for ax in axis_names:
+        gv = jax.lax.all_gather(gv, ax).reshape(-1, vals.shape[1])
+        go = jax.lax.all_gather(go, ax).reshape(-1, off.shape[1])
+    ndev = 1
+    for ax in axis_names:
+        ndev *= jax.lax.psum(1, ax)
+    nb = fp.size // block
+    # gathered rows cycle through the nb local blocks per device
+    row_block = jnp.tile(jnp.arange(nb), gv.shape[0] // nb)
+    idx = row_block[:, None] * block + go.astype(jnp.int32)
+    dense = jnp.zeros((fp.size,), jnp.float32).at[idx.reshape(-1)].add(
+        gv.reshape(-1).astype(jnp.float32))
+    mean = dense[:n] / ndev
+    local = topk_block_decompress(wire_vals.astype(jnp.float32), off, fp.size)
+    residual = flat - local[:n]
+    return mean.reshape(g.shape).astype(g.dtype), residual.reshape(g.shape)
+
+
+def coreset_allreduce(grads, axis_names, cfg: CompressionConfig,
+                      ef_state=None):
+    """Compressed mean-all-reduce of a gradient pytree inside shard_map.
+
+    Args:
+        grads: local (per data-shard) gradient pytree.
+        axis_names: tuple of mesh axis names to reduce over (("data",) or
+            ("pod", "data")).
+        cfg: codec config.
+        ef_state: pytree like grads with the error-feedback residuals
+            (pass None to disable / on step 0 use zeros).
+
+    Returns (mean_grads, new_ef_state).
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    ef_leaves = (jax.tree_util.tree_flatten(ef_state)[0]
+                 if ef_state is not None else [None] * len(leaves))
+    out, new_ef = [], []
+    for g, e in zip(leaves, ef_leaves):
+        if cfg.method == "none" or g.size < cfg.min_size:
+            m = g
+            for ax in axis_names:
+                m = jax.lax.pmean(m, ax)
+            out.append(m)
+            new_ef.append(jnp.zeros_like(g))
+        elif cfg.method == "topk_block":
+            m, r = _leaf_allreduce_block(g, e if cfg.error_feedback else None,
+                                         axis_names, cfg)
+            out.append(m)
+            new_ef.append(r.astype(g.dtype))
+        else:
+            m, r = _leaf_allreduce_topk(g, e if cfg.error_feedback else None,
+                                        axis_names, cfg)
+            out.append(m)
+            new_ef.append(r.astype(g.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, new_ef))
+
+
+# ---------------------------------------------------------------------------
+# Activation codec for the edge->host offload (D3 path, distributed)
+# ---------------------------------------------------------------------------
+
+def compress_activation(x: jnp.ndarray, cfg: CompressionConfig) -> Kmeans1dCoreset:
+    """Clustering-coreset compression of an activation tensor (any shape)."""
+    return kmeans1d(x.reshape(-1).astype(jnp.float32), cfg.kmeans_k, cfg.kmeans_iters)
+
+
+def decompress_activation(cs: Kmeans1dCoreset, shape, dtype=jnp.float32,
+                          key: jax.Array | None = None) -> jnp.ndarray:
+    return kmeans1d_decompress(cs, key).reshape(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte accounting (feeds the roofline collective term)
+# ---------------------------------------------------------------------------
+
+def wire_bytes_dense_psum(n_elems: int, ndev: int, bytes_per_elem: int = 2) -> float:
+    """Ring all-reduce moves ~2·(N/ndev)·(ndev-1) ≈ 2N bytes per device."""
+    return 2.0 * n_elems * bytes_per_elem * (ndev - 1) / ndev
+
+
+def wire_bytes_topk_allgather(n_elems: int, ndev: int, ratio: float,
+                              bytes_val: int = 2, bytes_idx: int = 4) -> float:
+    """All-gather of compressed payloads: each device receives
+    (ndev-1)·k·(val+idx) bytes."""
+    k = max(1, int(n_elems * ratio))
+    return (ndev - 1) * k * (bytes_val + bytes_idx)
+
+
+def wire_bytes_kmeans1d(n_elems: int, k: int = 16, bits_code: int = 4,
+                        bytes_center: int = 2, bytes_radius: int = 1,
+                        bits_count: int = 4) -> float:
+    """Point-to-point transfer of a clustering-coreset payload."""
+    return (n_elems * bits_code / 8.0
+            + k * (bytes_center + bytes_radius)
+            + k * bits_count / 8.0)

@@ -1,0 +1,89 @@
+"""Seeker's energy-aware decision flow (paper §4.1, Fig. 8).
+
+Per sensing window the node chooses one of:
+
+====  =========================================================== ============
+code  action                                                      paper
+====  =========================================================== ============
+0     D0 — memoization hit: transmit the label only               §3.2.1
+1     D1 — full-precision DNN on-node, transmit result            Table 2
+2     D2 — quantized (16/12-bit) DNN on-node, transmit result     §4
+3     D3 — clustering coreset, offload; host recovers + infers    §3.2.2
+4     D4 — sampling coreset, offload; host GAN-recovers + infers  §3.2.2/A.1
+5     DEFER — not even D4 affordable: store-and-execute later     §2 (ERR)
+====  =========================================================== ============
+
+The selector is a pure jnp function of (correlation, stored energy, forecast
+income, costs) so it can run inside ``lax.scan`` over a trace; the *executor*
+applies the chosen compute with ``lax.switch`` so all branches have a single
+static shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .energy import EnergyCosts
+
+__all__ = ["D0_MEMO", "D1_DNN_FULL", "D2_DNN_QUANT", "D3_CLUSTER", "D4_SAMPLING",
+           "DEFER", "DecisionOutcome", "choose_decision", "decision_energy"]
+
+D0_MEMO = 0
+D1_DNN_FULL = 1
+D2_DNN_QUANT = 2
+D3_CLUSTER = 3
+D4_SAMPLING = 4
+DEFER = 5
+
+
+class DecisionOutcome(NamedTuple):
+    decision: jnp.ndarray   # () int32 in [0, 5]
+    spend: jnp.ndarray      # () float µJ this slot will consume
+
+
+def decision_energy(costs: EnergyCosts) -> jnp.ndarray:
+    """(6,) µJ cost vector indexed by decision code (DEFER costs only sensing)."""
+    return jnp.asarray([
+        costs.sense + costs.tx_result,
+        costs.dnn_full + costs.tx_result,
+        costs.dnn16 + costs.tx_result,
+        costs.sense + costs.coreset_cluster + costs.tx_coreset,
+        costs.sense + costs.coreset_sampling + costs.tx_coreset,
+        costs.sense,
+    ], dtype=jnp.float32)
+
+
+def choose_decision(max_corr: jnp.ndarray, stored_uj: jnp.ndarray,
+                    forecast_uj: jnp.ndarray, costs: EnergyCosts,
+                    corr_threshold: float = 0.95,
+                    allow_full_dnn: bool = False) -> DecisionOutcome:
+    """Fig. 8 walk: memo gate -> local DNN if affordable -> cluster coreset ->
+    sampling coreset -> defer.
+
+    ``allow_full_dnn`` mirrors the paper's deployment choice: the EH node
+    normally runs only the quantized DNNs (D2); D1 exists for the fully
+    powered baselines.
+    """
+    budget = stored_uj + forecast_uj
+    cost = decision_energy(costs)
+
+    memo_hit = max_corr >= corr_threshold
+    can_full = budget >= cost[D1_DNN_FULL]
+    can_quant = budget >= cost[D2_DNN_QUANT]
+    can_cluster = budget >= cost[D3_CLUSTER]
+    can_sample = budget >= cost[D4_SAMPLING]
+
+    dnn_choice = jnp.where(jnp.logical_and(allow_full_dnn, can_full),
+                           D1_DNN_FULL, D2_DNN_QUANT)
+    can_dnn = jnp.where(allow_full_dnn, jnp.logical_or(can_full, can_quant), can_quant)
+
+    # prefer clustering over sampling when affordable (paper: "the former is
+    # preferred, when possible")
+    offload = jnp.where(can_cluster, D3_CLUSTER,
+                        jnp.where(can_sample, D4_SAMPLING, DEFER))
+    local = jnp.where(can_dnn, dnn_choice, offload)
+    decision = jnp.where(memo_hit, D0_MEMO, local).astype(jnp.int32)
+    spend = cost[decision]
+    return DecisionOutcome(decision=decision, spend=spend)

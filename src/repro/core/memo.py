@@ -1,0 +1,58 @@
+"""Data memoization via signature correlation (paper §3.2.1, decision D0).
+
+For two instances of the same class the sensor signal is highly correlated;
+the node stores one ground-truth trace per label and, on a fresh window,
+computes the Pearson correlation against every stored signature.  If any
+coefficient clears the threshold (paper default 0.95) the node skips DNN
+inference entirely and transmits only the label (~6% of compute removed,
+paper Fig. 11c).
+
+The Pallas-accelerated signature bank lives in ``repro.kernels.correlation``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = ["pearson", "signature_correlations", "memo_decision", "MemoResult"]
+
+
+def pearson(a: jnp.ndarray, b: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pearson correlation along ``axis`` (broadcasting elsewhere)."""
+    am = a - jnp.mean(a, axis=axis, keepdims=True)
+    bm = b - jnp.mean(b, axis=axis, keepdims=True)
+    num = jnp.sum(am * bm, axis=axis)
+    den = jnp.sqrt(jnp.sum(am * am, axis=axis) * jnp.sum(bm * bm, axis=axis))
+    return num / jnp.maximum(den, 1e-9)
+
+
+def signature_correlations(window: jnp.ndarray, signatures: jnp.ndarray) -> jnp.ndarray:
+    """Correlate a (T, C) window against an (L, T, C) signature bank.
+
+    Per-channel Pearson correlations are averaged across channels (the
+    paper's multi-channel FIFO treats channels independently).
+    Returns (L,) mean correlations.
+    """
+    if window.ndim == 1:
+        window = window[:, None]
+    if signatures.ndim == 2:
+        signatures = signatures[:, :, None]
+    corr = pearson(signatures, window[None], axis=1)   # (L, C)
+    return jnp.mean(corr, axis=-1)
+
+
+class MemoResult(NamedTuple):
+    hit: jnp.ndarray        # () bool — some signature cleared the threshold
+    label: jnp.ndarray      # () int32 — argmax signature (valid iff hit)
+    max_corr: jnp.ndarray   # () float — best coefficient (for logging/decision)
+
+
+def memo_decision(window: jnp.ndarray, signatures: jnp.ndarray,
+                  threshold: float = 0.95) -> MemoResult:
+    """The D0 gate of the paper's decision flow (Fig. 8, steps 1a/1b)."""
+    corr = signature_correlations(window, signatures)
+    best = jnp.argmax(corr)
+    max_corr = corr[best]
+    return MemoResult(hit=max_corr >= threshold, label=best.astype(jnp.int32),
+                      max_corr=max_corr)

@@ -1,0 +1,4 @@
+from .sensors import (  # noqa: F401
+    har_stream, bearing_stream, har_dataset, bearing_dataset, class_signatures,
+)
+from .lm import lm_batches, LMTask  # noqa: F401

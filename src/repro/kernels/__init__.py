@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for Seeker's fixed-function sensor hardware (paper
+§4.2), validated in interpret mode against the pure-jnp oracles in ref.py.
+
+Kernels:
+    kmeans_coreset    — clustering-coreset engine (4-iteration Lloyd)
+    importance_select — importance-sampling engine (top-m selection)
+    signature_corr    — memoization correlation engine
+    fake_quant        — 16/12/8-bit quantized-inference building block
+"""
+from .ops import (  # noqa: F401
+    kmeans_coreset_op, importance_select_op, signature_corr_op, fake_quant_op,
+    default_interpret,
+)
+from . import ref  # noqa: F401

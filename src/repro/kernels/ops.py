@@ -1,0 +1,94 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype coercion, interpret-mode selection
+(``interpret=True`` everywhere except a real TPU backend), and un-padding of
+the results.  Call these, not the kernels, from library code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fake_quant import fake_quant_pallas
+from .importance_select import importance_select_pallas
+from .kmeans_coreset import kmeans_coreset_pallas
+from .signature_corr import signature_corr_pallas
+
+__all__ = ["kmeans_coreset_op", "importance_select_op", "signature_corr_op",
+           "fake_quant_op", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: Python-evaluated kernel body off-TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, mode="edge"), n
+
+
+def kmeans_coreset_op(points: jnp.ndarray, k: int, iters: int = 4,
+                      block_b: int = 8, interpret: bool | None = None):
+    """Batched clustering coresets. points: (B, N, D) -> (centers, radii, counts)."""
+    interpret = default_interpret() if interpret is None else interpret
+    padded, b = _pad_axis(points, 0, block_b)
+    centers, radii, counts = kmeans_coreset_pallas(
+        padded, k=k, iters=iters, block_b=block_b, interpret=interpret)
+    return centers[:b], radii[:b], counts[:b]
+
+
+def importance_select_op(windows: jnp.ndarray, m: int, spread: float = 0.25,
+                         avg_width: int = 8, block_b: int = 8,
+                         interpret: bool | None = None):
+    """Batched top-m importance selection. windows: (B, T, C)."""
+    interpret = default_interpret() if interpret is None else interpret
+    padded, b = _pad_axis(windows, 0, block_b)
+    idx, vals, weights = importance_select_pallas(
+        padded, m=m, spread=spread, avg_width=avg_width, block_b=block_b,
+        interpret=interpret)
+    return idx[:b], vals[:b], weights[:b]
+
+
+def signature_corr_op(windows: jnp.ndarray, signatures: jnp.ndarray,
+                      block_b: int = 8, block_l: int = 8,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """(B, T, C) vs (L, T, C) -> (B, L) correlations."""
+    interpret = default_interpret() if interpret is None else interpret
+    wp, b = _pad_axis(windows, 0, block_b)
+    # Signatures pad with zeros NOT edge: a zero signature correlates ~0 and
+    # never wins the memo argmax.
+    l = signatures.shape[0]
+    pad_l = (-l) % block_l
+    sp = jnp.pad(signatures, ((0, pad_l), (0, 0), (0, 0)))
+    out = signature_corr_pallas(wp, sp, block_b=block_b, block_l=block_l,
+                                interpret=interpret)
+    return out[:b, :l]
+
+
+def fake_quant_op(x: jnp.ndarray, bits: int, per_channel: bool = False,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Fake-quantize an arbitrary-shape tensor at ``bits`` precision."""
+    interpret = default_interpret() if interpret is None else interpret
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    x2d = x.reshape(-1, orig_shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    r, c = x2d.shape
+    block_r = min(256, r)
+    block_c = min(512, c)
+    # pad with zeros (zeros quantize to zero; amax computed pre-pad inside on
+    # padded array is unchanged because |0| adds nothing)
+    pr = (-r) % block_r
+    pc = (-c) % block_c
+    xp = jnp.pad(x2d, ((0, pr), (0, pc)))
+    out = fake_quant_pallas(xp, bits=bits, per_channel=per_channel,
+                            block_r=block_r, block_c=block_c,
+                            interpret=interpret)
+    return out[:r, :c].reshape(orig_shape).astype(orig_dtype)

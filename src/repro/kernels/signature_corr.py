@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: batched signature-bank Pearson correlation.
+
+The paper's correlation/memoization engine (§3.2.1): every fresh window is
+correlated against one stored ground-truth trace per class; corr ≥ 0.95 skips
+DNN inference outright.
+
+TPU adaptation: per-channel Pearson correlation of (B, T, C) windows against
+an (L, T, C) signature bank is a *fused normalize-then-matmul*: center both
+operands along T, compute the (B, L) numerator with a C-batched (T-contracted)
+``dot_general`` on the MXU, and divide by the outer product of the L2 norms.
+Grid tiles (B, L); the signature block is re-streamed per B-tile (L is tiny —
+the whole bank usually fits VMEM, making this effectively signature-stationary
+like the paper's engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["signature_corr_pallas"]
+
+
+def _corr_kernel(win_ref, sig_ref, out_ref):
+    w = win_ref[...].astype(jnp.float32)                    # (BB, T, C)
+    s = sig_ref[...].astype(jnp.float32)                    # (BL, T, C)
+
+    wm = w - jnp.mean(w, axis=1, keepdims=True)
+    sm = s - jnp.mean(s, axis=1, keepdims=True)
+
+    # (C, BB, T) x (C, BL, T) -> (C, BB, BL): channel-batched MXU matmul
+    num = jax.lax.dot_general(
+        wm.transpose(2, 0, 1), sm.transpose(2, 0, 1),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                                       # (C, BB, BL)
+    wn = jnp.sqrt(jnp.sum(wm * wm, axis=1))                 # (BB, C)
+    sn = jnp.sqrt(jnp.sum(sm * sm, axis=1))                 # (BL, C)
+    den = wn.T[:, :, None] * sn.T[:, None, :]               # (C, BB, BL)
+    corr = num / jnp.maximum(den, 1e-9)
+    out_ref[...] = jnp.mean(corr, axis=0)                   # (BB, BL)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_l", "interpret"))
+def signature_corr_pallas(windows: jnp.ndarray, signatures: jnp.ndarray,
+                          block_b: int = 8, block_l: int = 8,
+                          interpret: bool = True) -> jnp.ndarray:
+    """(B, T, C) x (L, T, C) -> (B, L) mean per-channel Pearson correlations."""
+    b, t, c = windows.shape
+    l, t2, c2 = signatures.shape
+    assert (t, c) == (t2, c2)
+    assert b % block_b == 0 and l % block_l == 0
+    grid = (b // block_b, l // block_l)
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, t, c), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_l, t, c), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_l), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        interpret=interpret,
+    )(windows.astype(jnp.float32), signatures.astype(jnp.float32))

@@ -1,0 +1,75 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``.
+
+Prefill + batched decode with the serving engine; ``--edge-host`` runs the
+Seeker HAR edge-host pipeline instead (the paper's system, §4).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import init_params
+from repro.serving import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--edge-host", action="store_true",
+                    help="run the Seeker HAR edge-host pipeline instead")
+    args = ap.parse_args()
+
+    if args.edge_host:
+        from repro.configs.seeker_har import HAR
+        from repro.core.recovery import init_generator
+        from repro.data.sensors import class_signatures, har_stream
+        from repro.core.energy import harvest_trace
+        from repro.models.har import har_init
+        from repro.serving import seeker_simulate
+
+        key = jax.random.PRNGKey(0)
+        params = har_init(key, HAR)
+        gen = init_generator(key, HAR.window, HAR.channels)
+        wins, labels = har_stream(key, 64)
+        res = seeker_simulate(
+            wins, labels, harvest_trace(key, 64, "rf"),
+            signatures=class_signatures(), qdnn_params=params,
+            host_params=params, gen_params=gen, har_cfg=HAR)
+        print(f"completed {float(res['completed_frac'])*100:.1f}% | "
+              f"acc(completed) {float(res['accuracy_completed'])*100:.1f}% | "
+              f"mean payload {float(jnp.mean(res['payload_bytes'])):.1f} B "
+              f"vs raw {float(res['raw_bytes'][0]):.0f} B")
+        return
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    extra = {}
+    if cfg.encoder_layers:
+        extra["enc_frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    if cfg.vision_patches:
+        extra["patch_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.vision_patches, cfg.d_model), cfg.dtype)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    out = generate(params, cfg, prompt, args.max_new,
+                   key=key, temperature=args.temperature, **extra)
+    out.block_until_ready()
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.max_new / dt:.1f} tok/s)")
+    print(out[:, :16])
+
+
+if __name__ == "__main__":
+    main()

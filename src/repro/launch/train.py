@@ -1,0 +1,85 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Wires together configs, mesh, sharded train step, synthetic data, and the
+fault-tolerant loop.  On this CPU container use ``--smoke`` (reduced config,
+1 device); on a real fleet drop ``--smoke`` and the same code path builds the
+production mesh and shards the full model (the dry-run proves the program
+compiles for it).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.core.compression import CompressionConfig
+from repro.data.lm import LMTask, lm_batches
+from repro.launch.mesh import make_production_mesh
+from repro.train import (TrainHyper, TrainLoopConfig, init_train_state,
+                         make_compressed_train_step, make_train_step,
+                         run_training)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="Seeker coreset gradient compression over DP")
+    ap.add_argument("--budget-source", default=None,
+                    help="EH trace gating steps (rf|wifi|piezo|solar)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    hyper = TrainHyper(peak_lr=args.lr, warmup=max(args.steps // 10, 1),
+                       total_steps=args.steps)
+    task = LMTask(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+    compression = (CompressionConfig() if args.compress_grads else None)
+
+    state = init_train_state(jax.random.PRNGKey(0), cfg, hyper, compression)
+    if args.smoke:
+        step = (jax.jit(make_train_step(cfg, hyper))
+                if not args.compress_grads else None)
+        if step is None:
+            mesh = jax.make_mesh(
+                (jax.device_count(),), ("data",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+            step = jax.jit(make_compressed_train_step(
+                cfg, hyper, compression, mesh, dp_axes=("data",)))
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = shd.DP_TP_RULES if args.compress_grads else shd.FSDP_RULES
+        ctx = shd.use_sharding(mesh, rules)
+        ctx.__enter__()
+        if args.compress_grads:
+            dp = ("pod", "data") if args.multi_pod else ("data",)
+            step = jax.jit(make_compressed_train_step(cfg, hyper, compression,
+                                                      mesh, dp_axes=dp))
+        else:
+            step = jax.jit(make_train_step(cfg, hyper))
+
+    def batch_fn(s):
+        return lm_batches(task, s)
+
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=max(args.steps // 4, 1),
+                           log_every=max(args.steps // 20, 1),
+                           budget_source=args.budget_source)
+    state, log = run_training(state, step, batch_fn, loop)
+    for m in log:
+        print(m)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: run-structured transformer LM (all 10 assigned archs) + the
+paper's HAR/bearing edge classifiers + the coreset-recovery generator."""
+from .config import ModelConfig, MoEConfig, pattern_runs  # noqa: F401
+from .transformer import (  # noqa: F401
+    init_params, abstract_params, param_specs, forward, decode_step,
+    init_cache, abstract_cache, cache_specs, build_mrope_positions,
+)
+from .har import (  # noqa: F401
+    HARConfig, har_init, har_apply, har_apply_quantized, quantize_params,
+)

@@ -1,0 +1,271 @@
+"""Flash-style exact attention with custom VJP (pure XLA ops).
+
+Why: differentiating ``lax.scan``-based chunked attention makes JAX save the
+scan carries for every step — for a (B,4096,56,128) query block that is
+~8 GiB of residuals PER LAYER, the dominant memory term of the big train
+cells (see EXPERIMENTS.md §Perf, yi-34b iteration log).  The classic fix is
+FlashAttention's recompute-backward: forward saves only (out, LSE); backward
+re-walks the chunk pairs, recomputing probabilities.  Since both walks live
+inside ``jax.custom_vjp`` they are never themselves differentiated, so no
+scan carries are ever saved.
+
+Two variants, both numerically exact (validated against dense attention in
+tests/test_models.py):
+
+* :func:`flash_causal_attention` — lower-triangular chunk-pair walk
+  (FLOPs = T(T+1)/2 pairs; no masked-garbage compute).
+* :func:`flash_banded_attention` — sliding-window band walk
+  (FLOPs ~ S*(window+chunk)).
+
+Shapes follow layers.py: q (B,S,G,R,D), k/v (B,T,G,D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+__all__ = ["flash_causal_attention", "flash_banded_attention"]
+
+
+# ---------------------------------------------------------------------------
+# Causal (lower-triangular chunk pairs)
+# ---------------------------------------------------------------------------
+
+def _pairs(t: int):
+    pi = jnp.concatenate([jnp.full((i + 1,), i, jnp.int32) for i in range(t)])
+    pj = jnp.concatenate([jnp.arange(i + 1, dtype=jnp.int32) for i in range(t)])
+    return pi, pj
+
+
+def _causal_fwd_walk(q, k, v, chunk: int, softcap: float):
+    b, s, g, r, d = q.shape
+    t = s // chunk
+    scale = 1.0 / math.sqrt(d)
+    pi, pj = _pairs(t)
+
+    out0 = jnp.zeros_like(q)
+    lse0 = jnp.zeros((b, g, r, s), jnp.float32)
+    m0 = jnp.full((b, g, r, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, r, chunk), jnp.float32)
+    acc0 = jnp.zeros((b, chunk, g, r, d), jnp.float32)
+
+    def step(carry, ij):
+        out, lse, m, l, acc = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qi, kj).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrst,btgd->bsgrd", p.astype(q.dtype), vj).astype(jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        row = acc_new / jnp.maximum(l_new, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        out = jax.lax.dynamic_update_slice_in_dim(out, row.astype(q.dtype),
+                                                  i * chunk, axis=1)
+        lse_row = m_new + jnp.log(jnp.maximum(l_new, 1e-30))
+        lse = jax.lax.dynamic_update_slice_in_dim(lse, lse_row, i * chunk,
+                                                  axis=3)
+        is_end = (j == i)
+        m = jnp.where(is_end, jnp.full_like(m_new, NEG_INF), m_new)
+        l = jnp.where(is_end, jnp.zeros_like(l_new), l_new)
+        acc = jnp.where(is_end, jnp.zeros_like(acc_new), acc_new)
+        return (out, lse, m, l, acc), None
+
+    (out, lse, _, _, _), _ = jax.lax.scan(step, (out0, lse0, m0, l0, acc0),
+                                          (pi, pj))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_causal_attention(q, k, v, chunk: int = 512, softcap: float = 0.0):
+    out, _ = _causal_fwd_walk(q, k, v, chunk, softcap)
+    return out
+
+
+def _causal_fwd(q, k, v, chunk, softcap):
+    out, lse = _causal_fwd_walk(q, k, v, chunk, softcap)
+    return out, (q, k, v, out, lse)
+
+
+def _causal_bwd(chunk, softcap, res, dout):
+    q, k, v, out, lse = res
+    b, s, g, r, d = q.shape
+    t = s // chunk
+    scale = 1.0 / math.sqrt(d)
+    pi, pj = _pairs(t)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                  # (b,s,g,r)
+    delta = delta.transpose(0, 2, 3, 1)                       # (b,g,r,s)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def step(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        doi = jax.lax.dynamic_slice_in_dim(dout, i * chunk, chunk, axis=1)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * chunk, chunk, axis=3)
+        del_i = jax.lax.dynamic_slice_in_dim(delta, i * chunk, chunk, axis=3)
+
+        raw = jnp.einsum("bsgrd,btgd->bgrst", qi, kj).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            capped = jnp.tanh(raw / softcap)
+            scores = capped * softcap
+        else:
+            scores = raw
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jnp.exp(scores - lse_i[..., None])                # (b,g,r,s,t)
+        dp = jnp.einsum("bsgrd,btgd->bgrst", doi, vj).astype(jnp.float32)
+        ds = p * (dp - del_i[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - capped ** 2)                     # softcap chain
+        ds = jnp.where(mask, ds, 0.0) * scale
+        dq_i = jnp.einsum("bgrst,btgd->bsgrd", ds.astype(q.dtype), kj)
+        dk_j = jnp.einsum("bgrst,bsgrd->btgd", ds.astype(q.dtype), qi)
+        dv_j = jnp.einsum("bgrst,bsgrd->btgd", p.astype(q.dtype), doi)
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, jax.lax.dynamic_slice_in_dim(dq, i * chunk, chunk, 1)
+            + dq_i.astype(jnp.float32), i * chunk, axis=1)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, jax.lax.dynamic_slice_in_dim(dk, j * chunk, chunk, 1)
+            + dk_j.astype(jnp.float32), j * chunk, axis=1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, jax.lax.dynamic_slice_in_dim(dv, j * chunk, chunk, 1)
+            + dv_j.astype(jnp.float32), j * chunk, axis=1)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), (pi, pj))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_causal_attention.defvjp(_causal_fwd, _causal_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Banded (sliding window)
+# ---------------------------------------------------------------------------
+
+def _band_scores(qi, kb, i, chunk, window, band, scale, softcap):
+    raw = jnp.einsum("bsgrd,btgd->bgrst", qi, kb).astype(jnp.float32) * scale
+    capped = None
+    if softcap > 0.0:
+        capped = jnp.tanh(raw / softcap)
+        raw = capped * softcap
+    qpos = i * chunk + jnp.arange(chunk)
+    kpos = i * chunk - window + jnp.arange(band)
+    mask = ((kpos[None, :] >= 0) & (qpos[:, None] >= kpos[None, :])
+            & (qpos[:, None] - kpos[None, :] < window))[None, None, None]
+    return jnp.where(mask, raw, NEG_INF), mask, capped
+
+
+def _banded_fwd_walk(q, k, v, window: int, chunk: int, softcap: float):
+    b, s, g, r, d = q.shape
+    t = s // chunk
+    band = window + chunk
+    scale = 1.0 / math.sqrt(d)
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def row(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * chunk, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * chunk, band, axis=1)
+        scores, _, _ = _band_scores(qi, kb, i, chunk, window, band, scale,
+                                    softcap)
+        m = jnp.max(scores, axis=-1)
+        p = jnp.exp(scores - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bgrst,btgd->bsgrd", (p / jnp.maximum(l, 1e-30)[..., None]
+                                             ).astype(q.dtype), vb)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return o, lse
+
+    outs, lses = jax.lax.map(row, jnp.arange(t))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, g, r, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, g, r, s)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_banded_attention(q, k, v, window: int, chunk: int = 512,
+                           softcap: float = 0.0):
+    out, _ = _banded_fwd_walk(q, k, v, window, chunk, softcap)
+    return out
+
+
+def _banded_fwd(q, k, v, window, chunk, softcap):
+    out, lse = _banded_fwd_walk(q, k, v, window, chunk, softcap)
+    return out, (q, k, v, out, lse)
+
+
+def _banded_bwd(window, chunk, softcap, res, dout):
+    q, k, v, out, lse = res
+    b, s, g, r, d = q.shape
+    t = s // chunk
+    band = window + chunk
+    scale = 1.0 / math.sqrt(d)
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1).transpose(0, 2, 3, 1)            # (b,g,r,s)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dkp0 = jnp.zeros(kp.shape, jnp.float32)
+    dvp0 = jnp.zeros(vp.shape, jnp.float32)
+
+    def step(carry, i):
+        dq, dkp, dvp = carry
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * chunk, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * chunk, band, axis=1)
+        doi = jax.lax.dynamic_slice_in_dim(dout, i * chunk, chunk, axis=1)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * chunk, chunk, axis=3)
+        del_i = jax.lax.dynamic_slice_in_dim(delta, i * chunk, chunk, axis=3)
+        scores, mask, capped = _band_scores(qi, kb, i, chunk, window, band,
+                                            scale, softcap)
+        p = jnp.exp(scores - lse_i[..., None])
+        dp = jnp.einsum("bsgrd,btgd->bgrst", doi, vb).astype(jnp.float32)
+        ds = p * (dp - del_i[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - capped ** 2)
+        ds = jnp.where(mask, ds, 0.0) * scale
+        dq_i = jnp.einsum("bgrst,btgd->bsgrd", ds.astype(q.dtype), kb)
+        dk_b = jnp.einsum("bgrst,bsgrd->btgd", ds.astype(q.dtype), qi)
+        dv_b = jnp.einsum("bgrst,bsgrd->btgd", p.astype(q.dtype), doi)
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, dq_i.astype(jnp.float32), i * chunk, axis=1)
+        dkp = jax.lax.dynamic_update_slice_in_dim(
+            dkp, jax.lax.dynamic_slice_in_dim(dkp, i * chunk, band, 1)
+            + dk_b.astype(jnp.float32), i * chunk, axis=1)
+        dvp = jax.lax.dynamic_update_slice_in_dim(
+            dvp, jax.lax.dynamic_slice_in_dim(dvp, i * chunk, band, 1)
+            + dv_b.astype(jnp.float32), i * chunk, axis=1)
+        return (dq, dkp, dvp), None
+
+    (dq, dkp, dvp), _ = jax.lax.scan(step, (dq0, dkp0, dvp0), jnp.arange(t))
+    return (dq.astype(q.dtype), dkp[:, window:].astype(k.dtype),
+            dvp[:, window:].astype(v.dtype))
+
+
+flash_banded_attention.defvjp(_banded_fwd, _banded_bwd)

@@ -1,0 +1,100 @@
+"""The paper's edge workloads: HAR / bearing-fault 1-D CNN classifiers.
+
+Architecture follows Ha & Choi [26] as optimized for edge deployment in the
+paper (two conv/pool stages + dense head), with three deployment variants:
+
+* full-precision (Baseline-1 / host-side inference),
+* 16-bit and 12-bit post-training fake-quantized copies (the sensor's two
+  ReRAM crossbars, decision D1/D2) via the :mod:`repro.kernels` quant op,
+* a *coreset-input* variant whose first layer consumes the (recovered or
+  raw-coreset) representation (paper §3.2 "retrain the DNN models to
+  recognize the compressed representation").
+
+Pure functional JAX: params dict + apply fns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import fake_quant_op
+
+__all__ = ["HARConfig", "har_init", "har_apply", "har_apply_quantized",
+           "quantize_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HARConfig:
+    window: int = 60          # samples per window (paper: 60 @ 50 Hz)
+    channels: int = 3         # IMU channels per sensor
+    n_classes: int = 12       # MHEALTH activities
+    conv1: int = 32
+    conv2: int = 64
+    kernel: int = 5
+    hidden: int = 128
+
+
+def har_init(key: jax.Array, cfg: HARConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def norm(k, shape, fan_in):
+        return jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+
+    flat = (cfg.window // 4) * cfg.conv2
+    return {
+        "conv1_w": norm(k1, (cfg.kernel, cfg.channels, cfg.conv1),
+                        cfg.kernel * cfg.channels),
+        "conv1_b": jnp.zeros((cfg.conv1,)),
+        "conv2_w": norm(k2, (cfg.kernel, cfg.conv1, cfg.conv2),
+                        cfg.kernel * cfg.conv1),
+        "conv2_b": jnp.zeros((cfg.conv2,)),
+        "dense_w": norm(k3, (flat, cfg.hidden), flat),
+        "dense_b": jnp.zeros((cfg.hidden,)),
+        "head_w": norm(k4, (cfg.hidden, cfg.n_classes), cfg.hidden),
+        "head_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x (B, T, Cin), w (K, Cin, Cout) -> (B, T, Cout), SAME padding."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    b, t, c = x.shape
+    return jnp.max(x.reshape(b, t // 2, 2, c), axis=2)
+
+
+def har_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, C) float windows -> (B, n_classes) logits."""
+    h = jax.nn.relu(_conv1d(x, params["conv1_w"], params["conv1_b"]))
+    h = _maxpool2(h)
+    h = jax.nn.relu(_conv1d(h, params["conv2_w"], params["conv2_b"]))
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense_w"] + params["dense_b"])
+    return h @ params["head_w"] + params["head_b"]
+
+
+def quantize_params(params: dict, bits: int) -> dict:
+    """Post-training quantization of every weight tensor (paper Fig. 2c)."""
+    return {k: (fake_quant_op(v, bits) if v.ndim >= 2 else v)
+            for k, v in params.items()}
+
+
+def har_apply_quantized(params: dict, x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantized inference: weights *and* activations fake-quantized — the
+    ReRAM-crossbar deployment model of decisions D1/D2."""
+    qp = quantize_params(params, bits)
+    h = jax.nn.relu(_conv1d(fake_quant_op(x, bits), qp["conv1_w"], qp["conv1_b"]))
+    h = fake_quant_op(_maxpool2(h), bits)
+    h = jax.nn.relu(_conv1d(h, qp["conv2_w"], qp["conv2_b"]))
+    h = fake_quant_op(_maxpool2(h), bits)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ qp["dense_w"] + qp["dense_b"])
+    return h @ qp["head_w"] + qp["head_b"]

@@ -1,0 +1,258 @@
+"""Shared transformer layers: norms, projections, RoPE/M-RoPE, attention.
+
+Attention comes in four execution shapes, chosen by the caller for memory
+*and* FLOP fidelity (the roofline reads HLO FLOPs, so we never compute masked
+garbage at scale):
+
+* :func:`dense_attention`       — materialized scores; short sequences & decode.
+* :func:`pair_chunked_attention`— causal online-softmax over the *lower
+  triangle of chunk pairs only* (~2x fewer FLOPs than mask-everything
+  flash-style scans; exact).
+* :func:`banded_attention`      — sliding-window attention via per-chunk KV
+  band slices: FLOPs scale with S*(window+chunk), not S^2.
+* :func:`decode_attention`      — one query step against a (ring or linear)
+  KV cache with position-validity masking.
+
+All attention functions take q:(B,S,G,R,D), k/v:(B,T,G,D) — GQA is expressed
+by the (G=kv heads, R=q heads per kv head) split so repeated K/V are never
+materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+
+__all__ = [
+    "rms_norm", "swiglu", "geglu", "rope_sincos", "apply_rope", "apply_mrope",
+    "dense_attention", "pair_chunked_attention", "banded_attention",
+    "decode_attention", "sinusoidal_positions", "NEG_INF",
+]
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_sincos(positions: jnp.ndarray, head_dim: int,
+                theta) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> sin/cos (..., S, head_dim//2). ``theta`` may be a
+    traced scalar (per-layer theta inside a scanned run)."""
+    half = head_dim // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); sin/cos: (B, S, D/2) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, sections: tuple[int, ...],
+                theta: float) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: ``positions`` (3, B, S) carries (temporal, h,
+    w) ids; ``sections`` split the half-dim among the three components
+    (sum(sections) == head_dim // 2)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    sins, coss = [], []
+    for comp, sec in enumerate(sections):
+        freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+        lo = sum(sections[:comp])
+        ang = positions[comp].astype(jnp.float32)[..., None] * freq[lo:lo + sec]
+        sins.append(jnp.sin(ang))
+        coss.append(jnp.cos(ang))
+    sin = jnp.concatenate(sins, axis=-1)
+    cos = jnp.concatenate(coss, axis=-1)
+    return apply_rope(x, sin, cos)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embedding table (n, d)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(n)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding evaluated at arbitrary (possibly traced)
+    positions (..., ) -> (..., d).  Used when RoPE is disabled (whisper)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention bodies
+# ---------------------------------------------------------------------------
+
+def _softmax_f32(scores: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    s = scores.astype(jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    return jax.nn.softmax(s, axis=-1)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, softcap: float = 0.0) -> jnp.ndarray:
+    """Materialized-score attention.  q (B,S,G,R,D); k,v (B,T,G,D)."""
+    b, s, g, r, d = q.shape
+    t = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    scores = (jnp.einsum("bsgrd,btgd->bgrst", q, k) * scale).astype(jnp.float32)
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap   # BEFORE masking
+    qpos = q_offset + jnp.arange(s)
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrst,btgd->bsgrd", probs, v)
+
+
+def pair_chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           chunk: int = 512, softcap: float = 0.0) -> jnp.ndarray:
+    """Exact causal attention scanning ONLY the lower-triangular chunk pairs.
+
+    One sequential scan walks (i, j) pairs with j <= i in row-major order,
+    carrying the online-softmax state (m, l, acc) of the current query row;
+    each step writes the row's current normalized estimate back to the output
+    buffer, so the final step of a row leaves the exact result.  FLOPs match
+    T(T+1)/2 chunk pairs — no masked-garbage compute in the upper triangle.
+    """
+    b, s, g, r, d = q.shape
+    assert s % chunk == 0, (s, chunk)
+    t = s // chunk
+    scale = 1.0 / math.sqrt(d)
+
+    pairs_i = jnp.concatenate([jnp.full((i + 1,), i, jnp.int32) for i in range(t)])
+    pairs_j = jnp.concatenate([jnp.arange(i + 1, dtype=jnp.int32) for i in range(t)])
+
+    out0 = jnp.zeros_like(q)
+    m0 = jnp.full((b, g, r, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, g, r, chunk), jnp.float32)
+    acc0 = jnp.zeros((b, chunk, g, r, d), jnp.float32)
+
+    def step(carry, ij):
+        out, m, l, acc = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qi, kj).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrst,btgd->bsgrd", p.astype(q.dtype), vj).astype(jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        row = (acc_new / jnp.maximum(l_new, 1e-30).transpose(0, 3, 1, 2)[..., None])
+        out = jax.lax.dynamic_update_slice_in_dim(out, row.astype(q.dtype),
+                                                  i * chunk, axis=1)
+        # reset the online state at the end of a row (j == i)
+        is_end = (j == i)
+        m_next = jnp.where(is_end, jnp.full_like(m_new, NEG_INF), m_new)
+        l_next = jnp.where(is_end, jnp.zeros_like(l_new), l_new)
+        acc_next = jnp.where(is_end, jnp.zeros_like(acc_new), acc_new)
+        return (out, m_next, l_next, acc_next), None
+
+    (out, _, _, _), _ = jax.lax.scan(step, (out0, m0, l0, acc0),
+                                     (pairs_i, pairs_j))
+    return out
+
+
+def banded_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                     window: int, chunk: int = 512,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """Sliding-window causal attention with FLOPs ~ S*(window+chunk).
+
+    Each query chunk i attends to the KV band [i*chunk - window + 1,
+    i*chunk + chunk); the band is a static-size dynamic slice of a
+    left-padded KV, so no O(S^2) score tensor ever exists.
+    """
+    b, s, g, r, d = q.shape
+    assert s % chunk == 0
+    t = s // chunk
+    scale = 1.0 / math.sqrt(d)
+    band = window + chunk
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def row(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * chunk, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * chunk, band, axis=1)
+        scores = jnp.einsum("bsgrd,btgd->bgrst", qi, kb).astype(jnp.float32) * scale
+        if softcap > 0.0:
+            scores = jnp.tanh(scores / softcap) * softcap
+        qpos = i * chunk + jnp.arange(chunk)
+        kpos = i * chunk - window + jnp.arange(band)
+        mask = ((kpos[None, :] >= 0) & (qpos[:, None] >= kpos[None, :])
+                & (qpos[:, None] - kpos[None, :] < window))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bgrst,btgd->bsgrd", probs, vb)
+
+    rows = jax.lax.map(row, jnp.arange(t))                  # (T, B, chunk, G, R, D)
+    return rows.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, g, r, d)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     slot_pos: jnp.ndarray, pos: jnp.ndarray, *,
+                     window: int | None = None,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """One query step vs a cache.  q (B,1,G,R,D); caches (B,W,G,D);
+    slot_pos (W,) int32 holds the *global* position stored in each slot
+    (-1 = empty) so both linear and ring caches use the same masking."""
+    d = q.shape[-1]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", q, k_cache).astype(jnp.float32) * scale
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrst,btgd->bsgrd", probs, v_cache)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts FFN: GShard-style top-k dispatch with capacity.
+
+TPU-idiomatic (static shapes, einsum dispatch): tokens are split into groups
+of ``group_size``; within each group every token's top-k experts get a slot
+up to ``capacity = ceil(group_size * top_k * capacity_factor / n_experts)``;
+over-capacity tokens fall back to their residual (token dropping, as in
+GShard/Switch).  Expert weights are sharded on the "experts"/"expert_ff"
+logical axes so XLA emits the expected all-to-all when experts land on the
+"model" mesh axis.
+
+DeepSeekMoE's shared experts are a plain dense FFN of width
+``n_shared * d_expert`` added unconditionally.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+from ..sharding import constrain
+
+__all__ = ["moe_capacity", "moe_apply", "moe_param_shapes"]
+
+
+def moe_capacity(m: MoEConfig, group_size: int) -> int:
+    cap = int(math.ceil(group_size * m.top_k * m.capacity_factor / m.n_experts))
+    return max(cap, 1)
+
+
+def moe_param_shapes(d_model: int, m: MoEConfig) -> dict[str, tuple]:
+    """name -> (shape, logical_spec)."""
+    shapes = {
+        "router": ((d_model, m.n_experts), ("embed", "experts")),
+        "w_gate": ((m.n_experts, d_model, m.d_expert), ("experts", "embed", "expert_ff")),
+        "w_up": ((m.n_experts, d_model, m.d_expert), ("experts", "embed", "expert_ff")),
+        "w_down": ((m.n_experts, m.d_expert, d_model), ("experts", "expert_ff", "embed")),
+    }
+    if m.n_shared:
+        ds = m.n_shared * m.d_expert
+        shapes.update({
+            "shared_gate": ((d_model, ds), ("embed", "ff")),
+            "shared_up": ((d_model, ds), ("embed", "ff")),
+            "shared_down": ((ds, d_model), ("ff", "embed")),
+        })
+    return shapes
+
+
+def moe_apply(params: dict, x: jnp.ndarray, m: MoEConfig, act) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D).  ``act``: gate activation (silu/gelu)."""
+    b, s, d = x.shape
+    tokens = b * s
+    group = min(m.group_size, tokens)
+    assert tokens % group == 0, (tokens, group)
+    g = tokens // group
+    cap = moe_capacity(m, group)
+    e = m.n_experts
+    xt = x.reshape(g, group, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)              # (g, s, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue, group-local
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)      # (g, s, k, e)
+    flat = onehot.reshape(g, group * m.top_k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, group, m.top_k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (g, s, k)
+    keep = pos < cap
+    cap_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)      # (g, s, k, cap)
+
+    # dispatch (g, s, e, cap) and combine (weighted) tensors
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot,
+                          cap_oh * keep[..., None]).astype(x.dtype)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot,
+                         cap_oh * keep[..., None],
+                         top_p.astype(jnp.float32)).astype(x.dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xt)    # (g, e, cap, d)
+    expert_in = constrain(expert_in, None, "experts", None, "embed_act")
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"].astype(x.dtype))
+    h = act(gate, up)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(x.dtype))
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+
+    if m.n_shared:
+        sg = jnp.einsum("gsd,df->gsf", xt, params["shared_gate"].astype(x.dtype))
+        su = jnp.einsum("gsd,df->gsf", xt, params["shared_up"].astype(x.dtype))
+        out = out + jnp.einsum("gsf,fd->gsd", act(sg, su),
+                               params["shared_down"].astype(x.dtype))
+    return out.reshape(b, s, d)

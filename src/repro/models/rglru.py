@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Griffin recurrent block: two input branches (a GeLU gate and a conv1d'd
+signal path), a Real-Gated Linear Recurrent Unit over the signal path, and an
+output projection of the gated product.
+
+RG-LRU recurrence (Griffin eq. 3-6):
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (log-depth);
+decode is the single-step update, with a (B, W-1, D) conv ring for the
+temporal conv.  State is O(B*D) — why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["rglru_param_shapes", "rglru_apply", "rglru_decode_step",
+           "rglru_state_shapes"]
+
+_C = 8.0
+
+
+def rglru_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, w, cw = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    return {
+        "w_x": ((d, w), ("embed", "state")),
+        "w_g": ((d, w), ("embed", "state")),
+        "conv_w": ((cw, w), ("conv", "state")),
+        "lam": ((w,), ("state",)),
+        "w_a": ((w, w), ("state", None)),
+        "b_a": ((w,), ("state",)),
+        "w_i": ((w, w), ("state", None)),
+        "b_i": ((w,), ("state",)),
+        "w_o": ((w, d), ("state", "embed")),
+    }
+
+
+def rglru_state_shapes(cfg: ModelConfig, batch: int) -> dict[str, tuple]:
+    return {
+        "h": ((batch, cfg.rnn_width), ("batch", "state")),
+        "conv_buf": ((batch, cfg.conv_width - 1, cfg.rnn_width),
+                     ("batch", None, "state")),
+    }
+
+
+def _gates(p: dict, xt: jnp.ndarray):
+    r = jax.nn.sigmoid(xt @ p["w_a"].astype(xt.dtype) + p["b_a"].astype(xt.dtype))
+    i = jax.nn.sigmoid(xt @ p["w_i"].astype(xt.dtype) + p["b_i"].astype(xt.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, (beta * (i.astype(jnp.float32) * xt.astype(jnp.float32)))
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along axis 1 of (B, S, D); w (cw, D)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(cw):
+        out = out + jax.lax.dynamic_slice_in_dim(
+            xp, j, x.shape[1], axis=1) * w[j].astype(x.dtype)
+    return out
+
+
+def rglru_apply(p: dict, x: jnp.ndarray, return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x: (B, S, D_model).
+
+    With ``return_state`` also emits the decode-resumable state
+    {h: (B, W), conv_buf: (B, cw-1, W)} for prefill."""
+    gate = jax.nn.gelu(x @ p["w_g"].astype(x.dtype), approximate=True)
+    sig_raw = x @ p["w_x"].astype(x.dtype)
+    sig = _conv1d_causal(sig_raw, p["conv_w"])
+    a, bx = _gates(p, sig)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    out = (h.astype(x.dtype) * gate) @ p["w_o"].astype(x.dtype)
+    if not return_state:
+        return out
+    cw = p["conv_w"].shape[0]
+    tail = sig_raw[:, -(cw - 1):] if cw > 1 else sig_raw[:, :0]
+    pad = (cw - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h[:, -1].astype(x.dtype), "conv_buf": tail}
+
+
+def rglru_decode_step(p: dict, state: dict, x: jnp.ndarray):
+    """One-token update. x: (B, 1, D). Returns (out (B,1,D), new_state)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_g"].astype(x.dtype), approximate=True)
+    sig = xt @ p["w_x"].astype(x.dtype)
+    # temporal conv over the ring buffer + current input
+    hist = jnp.concatenate([state["conv_buf"].astype(x.dtype), sig[:, None]], axis=1)
+    cw = p["conv_w"].shape[0]
+    sig_c = jnp.einsum("bwd,wd->bd", hist[:, -cw:], p["conv_w"].astype(x.dtype))
+    a, bx = _gates(p, sig_c)
+    h = a * state["h"].astype(jnp.float32) + bx
+    out = (h.astype(x.dtype) * gate) @ p["w_o"].astype(x.dtype)
+    new_state = {
+        "h": h.astype(state["h"].dtype),
+        "conv_buf": hist[:, 1:].astype(state["conv_buf"].dtype),
+    }
+    return out[:, None], new_state

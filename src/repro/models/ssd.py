@@ -1,0 +1,209 @@
+"""Mamba-2 SSD (state-space duality) block — chunked, attention-free.
+
+Implements the SSD "minimal" algorithm (Mamba-2 paper §6): the sequence is
+split into chunks; within a chunk the quadratic dual form runs on the MXU,
+across chunks a tiny recurrence carries the (H, P, N) state.  Train/prefill
+cost is O(S * chunk) matmuls + O((S/chunk)^2) scalar decay products; decode
+is a constant-time state update — which is why mamba2 runs the long_500k
+cell.
+
+Head grouping follows Mamba-2: ``ssm_groups`` B/C projections are shared by
+``heads_per_group`` heads (the GQA analogue, "multi-value attention").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["ssd_param_shapes", "ssd_apply", "ssd_decode_step", "ssd_state_shapes"]
+
+
+def ssd_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.conv_width
+    conv_ch = di + 2 * g * n
+    return {
+        "w_z": ((d, di), ("embed", "state")),
+        "w_x": ((d, di), ("embed", "state")),
+        "w_B": ((d, g * n), ("embed", None)),
+        "w_C": ((d, g * n), ("embed", None)),
+        "w_dt": ((d, h), ("embed", None)),
+        "dt_bias": ((h,), (None,)),
+        "A_log": ((h,), (None,)),
+        "D": ((h,), (None,)),
+        "norm_scale": ((di,), ("state",)),
+        "w_out": ((di, d), ("state", "embed")),
+        "conv_w": ((cw, conv_ch), ("conv", None)),
+    }
+
+
+def ssd_state_shapes(cfg: ModelConfig, batch: int) -> dict[str, tuple]:
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    hg = cfg.ssm_heads // g
+    conv_ch = cfg.d_inner + 2 * g * n
+    return {
+        "ssm": ((batch, g, hg, cfg.ssm_headdim, n), ("batch", None, "heads", None, None)),
+        "conv_buf": ((batch, cfg.conv_width - 1, conv_ch), ("batch", None, "state")),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., l) -> (..., l, l): seg[i, j] = sum_{j < k <= i} x[k]; -inf above
+    the diagonal (so exp() gives the lower-triangular decay matrix)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(cw):
+        out = out + jax.lax.dynamic_slice_in_dim(
+            xp, j, x.shape[1], axis=1) * w[j].astype(x.dtype)
+    return out
+
+
+def _ssd_scan(xdt: jnp.ndarray, dA: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+              chunk: int):
+    """Chunked SSD.  xdt (b,s,g,hg,p) is x pre-multiplied by dt; dA (b,s,g,hg)
+    is dt*A (negative log-decays); B, C (b,s,g,n).
+    Returns (y (b,s,g,hg,p), final_state (b,g,hg,p,n))."""
+    b, s, g, hg, p = xdt.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xdt = xdt.reshape(b, c, chunk, g, hg, p)
+    B = B.reshape(b, c, chunk, g, n)
+    C = C.reshape(b, c, chunk, g, n)
+    dA = dA.reshape(b, c, chunk, g, hg).transpose(0, 3, 4, 1, 2)  # (b,g,hg,c,l)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (quadratic dual form on the MXU)
+    L = jnp.exp(_segsum(dA))                                  # (b,g,hg,c,l,l)
+    y_diag = jnp.einsum("bclgn,bcsgn,bghcls,bcsghp->bclghp", C, B, L.transpose(0, 1, 2, 3, 4, 5), xdt)
+
+    # 2. per-chunk terminal states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)           # (b,g,hg,c,l)
+    states = jnp.einsum("bclgn,bghcl,bclghp->bcghpn", B, decay_states, xdt)
+
+    # 3. inter-chunk recurrence (scan over the few chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                     # (b,g,hg,c)
+
+    def step(s_prev, inp):
+        st, dec = inp                                         # (b,g,hg,p,n), (b,g,hg)
+        s_new = s_prev * dec[..., None, None].astype(s_prev.dtype) \
+            + st.astype(s_prev.dtype)
+        return s_new, s_prev                                   # emit state *before* chunk
+
+    s0 = jnp.zeros((b, g, hg, p, n), states.dtype)
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4, 5), chunk_decay.transpose(3, 0, 1, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)     # (b,c,g,hg,p,n)
+
+    # 4. state -> output within each chunk
+    state_decay_out = jnp.exp(dA_cs)                          # (b,g,hg,c,l)
+    y_off = jnp.einsum("bclgn,bcghpn,bghcl->bclghp", C, prev_states, state_decay_out)
+    return (y_diag + y_off).reshape(b, s, g, hg, p), final_state
+
+
+def ssd_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+              chunk: int = 128, return_state: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, D_model).
+
+    With ``return_state`` also emits {ssm: (B,g,hg,P,N), conv_buf} for
+    decode-resumable prefill."""
+    b, s, d = x.shape
+    g, n, h, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    hg = h // g
+    di = cfg.d_inner
+
+    z = x @ params["w_z"].astype(x.dtype)
+    xs = x @ params["w_x"].astype(x.dtype)
+    Bp = x @ params["w_B"].astype(x.dtype)
+    Cp = x @ params["w_C"].astype(x.dtype)
+    xbc_raw = jnp.concatenate([xs, Bp, Cp], axis=-1)
+    xbc = jax.nn.silu(_conv1d_causal(xbc_raw, params["conv_w"]))
+    xs, Bp, Cp = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))              # (b,s,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (h,)
+    dA = (dt * A).reshape(b, s, g, hg)
+
+    xh = xs.reshape(b, s, g, hg, p)
+    xdt = xh * dt.reshape(b, s, g, hg)[..., None].astype(x.dtype)
+    y, final_state = _ssd_scan(xdt, dA, Bp.reshape(b, s, g, n),
+                               Cp.reshape(b, s, g, n), chunk=min(chunk, s))
+    y = y + xh * params["D"].astype(x.dtype).reshape(g, hg)[None, None, :, :, None]
+    y = y.reshape(b, s, di)
+
+    # gated RMSNorm then output projection (Mamba-2)
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + params["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"].astype(x.dtype)
+    if not return_state:
+        return out
+    cw = params["conv_w"].shape[0]
+    tail = xbc_raw[:, -(cw - 1):] if cw > 1 else xbc_raw[:, :0]
+    pad = (cw - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"ssm": final_state.astype(x.dtype), "conv_buf": tail}
+
+
+def ssd_decode_step(params: dict, state: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """One-token update. x (B, 1, D). Returns (out (B,1,D), new_state)."""
+    b = x.shape[0]
+    g, n, h, p = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    hg = h // g
+    di = cfg.d_inner
+    xt = x[:, 0]
+
+    z = xt @ params["w_z"].astype(x.dtype)
+    xs = xt @ params["w_x"].astype(x.dtype)
+    Bp = xt @ params["w_B"].astype(x.dtype)
+    Cp = xt @ params["w_C"].astype(x.dtype)
+    xbc = jnp.concatenate([xs, Bp, Cp], axis=-1)              # (b, conv_ch)
+    hist = jnp.concatenate([state["conv_buf"].astype(x.dtype), xbc[:, None]], axis=1)
+    cw = params["conv_w"].shape[0]
+    xbc = jax.nn.silu(jnp.einsum("bwd,wd->bd", hist[:, -cw:],
+                                 params["conv_w"].astype(x.dtype)))
+    xs, Bp, Cp = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(
+        (xt @ params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))              # (b,h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A).reshape(b, g, hg)                    # decay
+
+    xh = xs.reshape(b, g, hg, p)
+    Bh = Bp.reshape(b, g, n)
+    Ch = Cp.reshape(b, g, n)
+    dx = xh * dt.reshape(b, g, hg)[..., None].astype(x.dtype)
+    ssm = (state["ssm"].astype(jnp.float32) * dA[..., None, None]
+           + jnp.einsum("bghp,bgn->bghpn", dx, Bh).astype(jnp.float32))
+    y = jnp.einsum("bgn,bghpn->bghp", Ch, ssm.astype(x.dtype))
+    y = y + xh * params["D"].astype(x.dtype).reshape(g, hg)[None, :, :, None]
+    y = y.reshape(b, di)
+
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + params["norm_scale"].astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["w_out"].astype(x.dtype)
+    new_state = {"ssm": ssm.astype(state["ssm"].dtype),
+                 "conv_buf": hist[:, 1:].astype(state["conv_buf"].dtype)}
+    return out[:, None], new_state

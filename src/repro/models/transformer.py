@@ -1,0 +1,665 @@
+"""Run-structured decoder LM covering all ten assigned architectures.
+
+Layers are grouped into *runs* of consecutive identical (mixer, moe) kinds
+(``pattern_runs``); each run's params are stacked with a leading layer dim
+and executed with ``lax.scan``.  Dense LMs are a single run; gemma3's
+5-local:1-global pattern becomes alternating runs (so local runs get
+window-sized ring caches — crucial for the 500k cells); recurrentgemma's
+(R,R,A) pattern and deepseek's dense-layer-0 fall out the same way.
+
+Three entry points (all pure functions of a params pytree):
+
+* :func:`forward`     — full-sequence: training loss input & prefill
+  (``return_cache=True`` also emits the serving cache).
+* :func:`decode_step` — one token against the cache (serve_step).
+* :func:`init_params` / :func:`abstract_params` / :func:`param_specs` — the
+  single source of truth for shapes / logical sharding / dry-run SDS trees.
+
+Whisper's encoder and Qwen2-VL's vision stub enter through ``enc_frames`` /
+``patch_embeds`` (precomputed embeddings per the assignment spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, MoEConfig, pattern_runs
+from .flash import flash_banded_attention, flash_causal_attention
+from .layers import (apply_mrope, apply_rope, banded_attention, dense_attention,
+                     decode_attention, geglu, pair_chunked_attention, rms_norm,
+                     rope_sincos, sinusoidal_at, sinusoidal_positions, swiglu)
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    return chunk if (s % chunk == 0 and s >= chunk) else s
+from .moe import moe_apply, moe_param_shapes
+from .rglru import (rglru_apply, rglru_decode_step, rglru_param_shapes,
+                    rglru_state_shapes)
+from .ssd import ssd_apply, ssd_decode_step, ssd_param_shapes, ssd_state_shapes
+from ..sharding import constrain
+
+__all__ = ["init_params", "abstract_params", "param_specs", "forward",
+           "decode_step", "init_cache", "abstract_cache", "cache_specs",
+           "PSpec", "build_mrope_positions"]
+
+
+class PSpec(NamedTuple):
+    """Declarative parameter leaf: shape + logical axes + init rule."""
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"
+
+
+def _act(cfg: ModelConfig):
+    return {"swiglu": swiglu, "geglu": geglu}.get(cfg.mlp, geglu)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shape declarations
+# ---------------------------------------------------------------------------
+
+def _mlp_shapes(cfg: ModelConfig, is_moe: bool) -> dict[str, PSpec]:
+    d = cfg.d_model
+    if is_moe and cfg.moe is not None:
+        return {k: PSpec(*v) for k, v in moe_param_shapes(d, cfg.moe).items()}
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "mlp_gate": PSpec((d, cfg.d_ff), ("embed", "ff")),
+            "mlp_up": PSpec((d, cfg.d_ff), ("embed", "ff")),
+            "mlp_down": PSpec((cfg.d_ff, d), ("ff", "embed")),
+        }
+    return {
+        "mlp_up": PSpec((d, cfg.d_ff), ("embed", "ff")),
+        "mlp_down": PSpec((cfg.d_ff, d), ("ff", "embed")),
+    }
+
+
+def _attn_shapes(cfg: ModelConfig) -> dict[str, PSpec]:
+    d = cfg.d_model
+    return {
+        "wq": PSpec((d, cfg.n_heads, cfg.head_dim), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, cfg.n_kv, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, cfg.n_kv, cfg.head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((cfg.n_heads, cfg.head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _block_shapes(cfg: ModelConfig, kind: str, is_moe: bool,
+                  cross: bool = False) -> dict[str, PSpec]:
+    d = cfg.d_model
+    sh: dict[str, PSpec] = {"norm1": PSpec((d,), (None,), "zeros")}
+    if kind in ("attn", "local"):
+        sh.update(_attn_shapes(cfg))
+    elif kind == "rglru":
+        sh.update({k: PSpec(v[0], v[1], "rglru_lam" if k == "lam" else "normal")
+                   for k, v in rglru_param_shapes(cfg).items()})
+    elif kind == "ssd":
+        init_map = {"A_log": "ssm_A", "dt_bias": "ssm_dt", "D": "ones",
+                    "norm_scale": "zeros"}
+        sh.update({k: PSpec(v[0], v[1], init_map.get(k, "normal"))
+                   for k, v in ssd_param_shapes(cfg).items()})
+    else:
+        raise ValueError(kind)
+    if cross:
+        sh["xnorm"] = PSpec((d,), (None,), "zeros")
+        sh.update({f"x{k}": v for k, v in _attn_shapes(cfg).items()})
+    if cfg.mlp != "none" and kind != "ssd":
+        sh["norm2"] = PSpec((d,), (None,), "zeros")
+        sh.update(_mlp_shapes(cfg, is_moe))
+    return sh
+
+
+def _stack(sh: dict[str, PSpec], n: int) -> dict[str, PSpec]:
+    return {k: PSpec((n,) + v.shape, ("layers",) + v.logical, v.init)
+            for k, v in sh.items()}
+
+
+def model_param_shapes(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    tree: dict[str, Any] = {
+        "embed": PSpec((cfg.padded_vocab, d), ("vocab", "embed")),
+        "final_norm": PSpec((d,), (None,), "zeros"),
+        "runs": [],
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = PSpec((d, cfg.padded_vocab), ("embed", "vocab"))
+    cross = cfg.encoder_layers > 0
+    for kind, is_moe, _start, length in pattern_runs(cfg):
+        tree["runs"].append(_stack(_block_shapes(cfg, kind, is_moe, cross), length))
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.encoder_layers, mlp="gelu", moe_layers=(),
+            block_pattern=("attn",) * cfg.encoder_layers, n_kv=cfg.n_heads)
+        tree["encoder"] = {
+            "runs": [_stack(_block_shapes(enc_cfg, "attn", False), cfg.encoder_layers)],
+            "final_norm": PSpec((d,), (None,), "zeros"),
+        }
+        tree["_enc_cfg"] = enc_cfg  # static companion, stripped from pytrees
+    return tree
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def _strip_static(tree):
+    return {k: v for k, v in tree.items() if not k.startswith("_")} if isinstance(tree, dict) else tree
+
+
+def _map_shapes(cfg: ModelConfig, fn):
+    tree = model_param_shapes(cfg)
+
+    def rec(t):
+        if _is_pspec(t):
+            return fn(t)
+        if isinstance(t, dict):
+            return {k: rec(v) for k, v in t.items() if not k.startswith("_")}
+        if isinstance(t, list):
+            return [rec(v) for v in t]
+        raise TypeError(type(t))
+
+    return rec(tree)
+
+
+def _init_leaf(key: jax.Array, p: PSpec, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.param_dtype
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dt)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dt)
+    if p.init == "ssm_A":
+        return jnp.log(jax.random.uniform(key, p.shape, dt, 1.0, 16.0))
+    if p.init == "ssm_dt":
+        u = jax.random.uniform(key, p.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dt)  # softplus^-1
+    if p.init == "rglru_lam":
+        # a = sigmoid(lam)^(c) target a in (0.9, 0.999)
+        u = jax.random.uniform(key, p.shape, jnp.float32, 0.9, 0.999)
+        a = u ** 2
+        lam = jnp.log(jnp.expm1(-jnp.log(a) / 8.0))  # softplus^-1(-log a / c)
+        return lam.astype(dt)
+    # fan-in init: product of all-but-last dims, excluding the stacked layer dim
+    shape = p.shape[1:] if (p.logical and p.logical[0] == "layers") else p.shape
+    fan_in = math.prod(shape[:-1]) if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, p.shape, jnp.float32)
+            / jnp.sqrt(jnp.maximum(fan_in, 1.0))).astype(dt)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    leaves_count = [0]
+
+    def fn(p: PSpec):
+        leaves_count[0] += 1
+        return _init_leaf(jax.random.fold_in(key, leaves_count[0]), p, cfg)
+
+    return _map_shapes(cfg, fn)
+
+
+def abstract_params(cfg: ModelConfig):
+    return _map_shapes(cfg, lambda p: jax.ShapeDtypeStruct(p.shape, cfg.param_dtype))
+
+
+def param_specs(cfg: ModelConfig):
+    return _map_shapes(cfg, lambda p: p.logical)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: dict, h: jnp.ndarray, cfg: ModelConfig, prefix: str = "w"):
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p[prefix + "q"].astype(dt))
+    k = jnp.einsum("bsd,dgk->bsgk", h, p[prefix + "k"].astype(dt))
+    v = jnp.einsum("bsd,dgk->bsgk", h, p[prefix + "v"].astype(dt))
+    return q, k, v
+
+
+def _attn_mix(p: dict, x: jnp.ndarray, cfg: ModelConfig, *, kind: str,
+              positions: jnp.ndarray, mrope_positions: jnp.ndarray | None,
+              theta: float, causal: bool = True):
+    """Full-sequence attention mixer. Returns (out, (k, v)) for caching.
+
+    When ``cfg.head_pad_multiple`` is set and the q-head count doesn't divide
+    it (yi 56H, whisper/qwen 12H, gemma-2b 8H on a 16-way model axis), q-heads
+    are ZERO-PADDED to the quantum and KV is gather-expanded to per-q-head
+    streams: padded wq/wo rows are zero so the math is exact, every einsum
+    shards cleanly on "heads", and no score-tensor psums appear (the rejected
+    head_dim-contraction alternative — see EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    hp = cfg.padded_heads
+    expand = hp != cfg.n_heads
+    dt = x.dtype
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if expand:
+        pad = hp - cfg.n_heads
+        wq = jnp.pad(p["wq"], ((0, 0), (0, pad), (0, 0))).astype(dt)
+        q = jnp.einsum("bsd,dhk->bshk", h, wq)
+        k = jnp.einsum("bsd,dgk->bsgk", h, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dgk->bsgk", h, p["wv"].astype(dt))
+    else:
+        q, k, v = _project_qkv(p, h, cfg)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    if cfg.mrope_sections and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, theta)
+    elif theta > 0:
+        sin, cos = rope_sincos(positions, cfg.head_dim, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    if expand:
+        # per-q-head KV streams: padded tail maps to group g-1 (masked by wo)
+        rep = max(cfg.n_heads // cfg.n_kv, 1)
+        kv_map = jnp.minimum(jnp.arange(hp) // rep, cfg.n_kv - 1)
+        k_att = constrain(k[:, :, kv_map], "batch", "seq", "heads", "head_dim")
+        v_att = constrain(v[:, :, kv_map], "batch", "seq", "heads", "head_dim")
+        q5 = q.reshape(b, s, hp, 1, cfg.head_dim)
+    else:
+        k_att, v_att = k, v
+        q5 = q.reshape(b, s, cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.head_dim)
+    window = cfg.window if kind == "local" else None
+    if not causal:
+        out = dense_attention(q5, k_att, v_att, causal=False,
+                              softcap=cfg.attn_softcap)
+    elif s <= cfg.dense_attn_max_seq and (window is None or not cfg.flash_attention):
+        out = dense_attention(q5, k_att, v_att, causal=True, window=window,
+                              softcap=cfg.attn_softcap)
+    elif window is not None:
+        if cfg.flash_attention:
+            out = flash_banded_attention(q5, k_att, v_att, window,
+                                         _pick_chunk(s, cfg.attn_chunk),
+                                         cfg.attn_softcap)
+        else:
+            out = banded_attention(q5, k_att, v_att, window=window,
+                                   chunk=cfg.attn_chunk,
+                                   softcap=cfg.attn_softcap)
+    elif cfg.flash_attention:
+        out = flash_causal_attention(q5, k_att, v_att,
+                                     _pick_chunk(s, cfg.attn_chunk),
+                                     cfg.attn_softcap)
+    else:
+        out = pair_chunked_attention(q5, k_att, v_att, chunk=cfg.attn_chunk,
+                                     softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, hp, cfg.head_dim)
+    if expand:
+        wo = jnp.pad(p["wo"], ((0, hp - cfg.n_heads), (0, 0), (0, 0))).astype(dt)
+    else:
+        wo = p["wo"].astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return out, (k, v)
+
+
+def _cross_attn(p: dict, x: jnp.ndarray, enc_kv, cfg: ModelConfig):
+    """Cross-attention with precomputed encoder K/V (B, Tf, G, Dh)."""
+    b, s, d = x.shape
+    g, rep = cfg.n_kv, cfg.n_heads // cfg.n_kv
+    h = rms_norm(x, p["xnorm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["xwq"].astype(x.dtype))
+    q5 = q.reshape(b, s, g, rep, cfg.head_dim)
+    k, v = enc_kv
+    out = dense_attention(q5, k, v, causal=False, softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, p["xwo"].astype(x.dtype))
+
+
+def _enc_kv(p: dict, enc_out: jnp.ndarray, cfg: ModelConfig):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dgk->btgk", enc_out, p["xwk"].astype(dt))
+    v = jnp.einsum("btd,dgk->btgk", enc_out, p["xwv"].astype(dt))
+    return k, v
+
+
+def _mlp(p: dict, x: jnp.ndarray, cfg: ModelConfig, is_moe: bool) -> jnp.ndarray:
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if is_moe and cfg.moe is not None:
+        return moe_apply(p, h, cfg.moe, _act(cfg))
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        gate = h @ p["mlp_gate"].astype(dt)
+        up = h @ p["mlp_up"].astype(dt)
+        inner = _act(cfg)(gate, up)
+    else:
+        inner = jax.nn.gelu(h @ p["mlp_up"].astype(dt), approximate=True)
+    inner = constrain(inner, "batch", "seq", "ff")
+    return inner @ p["mlp_down"].astype(dt)
+
+
+def _block_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig, *, kind: str,
+                 is_moe: bool, theta: float, positions, mrope_positions,
+                 enc_out=None, causal: bool = True, want_cache: bool = False):
+    """One layer; returns (x, cache_aux)."""
+    aux = {}
+    if kind in ("attn", "local"):
+        mix, (k, v) = _attn_mix(p, x, cfg, kind=kind, positions=positions,
+                                mrope_positions=mrope_positions, theta=theta,
+                                causal=causal)
+        if want_cache:
+            aux["k"], aux["v"] = k, v
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if want_cache:
+            mix, state = rglru_apply(p, h, return_state=True)
+            aux.update(state)
+        else:
+            mix = rglru_apply(p, h)
+    elif kind == "ssd":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        if want_cache:
+            mix, state = ssd_apply(p, h, cfg, return_state=True)
+            aux.update(state)
+        else:
+            mix = ssd_apply(p, h, cfg)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if enc_out is not None and "xnorm" in p:
+        enc_kv = _enc_kv(p, enc_out, cfg)
+        x = x + _cross_attn(p, x, enc_kv, cfg)
+        if want_cache:
+            aux["xk"], aux["xv"] = enc_kv
+    if cfg.mlp != "none" and kind != "ssd":
+        x = x + _mlp(p, x, cfg, is_moe)
+    x = constrain(x, "batch", "seq", "embed_act")
+    return x, aux
+
+
+def _run_theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "attn" and cfg.global_rope_theta > 0:
+        return cfg.global_rope_theta
+    return cfg.rope_theta
+
+
+def _logits(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Unembed + padded-vocab mask + optional softcap. x: (B, S, D)."""
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(cfg.dtype))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def build_mrope_positions(cfg: ModelConfig, batch: int, seq: int) -> jnp.ndarray:
+    """(3, B, S) M-RoPE ids: vision patches get a (t=0, h, w) grid, text runs
+    sequentially after the max patch coordinate (Qwen2-VL scheme)."""
+    p = cfg.vision_patches
+    grid = max(int(math.sqrt(max(p, 1))), 1)
+    idx = jnp.arange(seq)
+    is_text = idx >= p
+    t_pos = jnp.where(is_text, idx - p + grid, 0)
+    h_pos = jnp.where(is_text, idx - p + grid, jnp.minimum(idx // grid, grid - 1))
+    w_pos = jnp.where(is_text, idx - p + grid, idx % grid)
+    pos = jnp.stack([t_pos, h_pos, w_pos])                    # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  positions: jnp.ndarray | None = None) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    if cfg.rope_theta == 0 and not cfg.mrope_sections and positions is not None:
+        # RoPE disabled (whisper): absolute sinusoidal position embedding
+        x = x + sinusoidal_at(positions, cfg.d_model).astype(cfg.dtype)
+    return x
+
+
+def _encode(params, cfg: ModelConfig, enc_frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    enc_cfg = dataclasses.replace(
+        cfg, n_layers=cfg.encoder_layers, mlp="gelu", moe_layers=(),
+        block_pattern=("attn",) * cfg.encoder_layers, n_kv=cfg.n_heads)
+    x = enc_frames.astype(cfg.dtype)
+    pos_tab = sinusoidal_positions(x.shape[1], cfg.d_model).astype(cfg.dtype)
+    x = x + pos_tab[None]
+    p_run = params["encoder"]["runs"][0]
+
+    def body(h, p_l):
+        h, _ = _block_apply(p_l, h, enc_cfg, kind="attn", is_moe=False,
+                            theta=0.0, positions=None, mrope_positions=None,
+                            causal=False)
+        return h, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, p_run)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            enc_frames: jnp.ndarray | None = None,
+            patch_embeds: jnp.ndarray | None = None,
+            positions: jnp.ndarray | None = None,
+            return_cache: bool = False, cache_len: int | None = None):
+    """Full-sequence forward.
+
+    tokens: (B, S_text) int32.  With ``patch_embeds`` (B, P, D) the effective
+    sequence is P + S_text.  Returns logits (B, S, vocab), or
+    (logits, cache) with ``return_cache`` (prefill).
+    """
+    b = tokens.shape[0]
+    s_total = tokens.shape[1] + (patch_embeds.shape[1] if patch_embeds is not None else 0)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+    tok_positions = positions[:, s_total - tokens.shape[1]:]
+    x = _embed_tokens(params, cfg, tokens, tok_positions)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(cfg.dtype), x], axis=1)
+    s = x.shape[1]
+    mpos = (build_mrope_positions(cfg, b, s) if cfg.mrope_sections else None)
+    enc_out = _encode(params, cfg, enc_frames) if cfg.encoder_layers else None
+    x = constrain(x, "batch", "seq", "embed_act")
+
+    run_caches = []
+    for run_idx, (kind, is_moe, _start, _length) in enumerate(pattern_runs(cfg)):
+        p_run = params["runs"][run_idx]
+        theta = _run_theta(cfg, kind)
+
+        def body(h, p_l, _kind=kind, _moe=is_moe, _theta=theta):
+            h, aux = _block_apply(p_l, h, cfg, kind=_kind, is_moe=_moe,
+                                  theta=_theta, positions=positions,
+                                  mrope_positions=mpos, enc_out=enc_out,
+                                  want_cache=return_cache)
+            return h, aux
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        x, aux = jax.lax.scan(body, x, p_run)
+        if return_cache:
+            run_caches.append(_prefill_run_cache(p_run, aux, x, cfg, kind,
+                                                 cache_len or s, s))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    if not return_cache:
+        return logits
+    cache = {"pos": jnp.asarray(s, jnp.int32), "runs": run_caches}
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    return logits, cache
+
+
+def _prefill_run_cache(p_run, aux, x_out, cfg: ModelConfig, kind: str,
+                       cache_len: int, s: int):
+    """Build the decode cache for one run from prefill byproducts."""
+    if kind in ("attn", "local"):
+        w = min(cfg.window, cache_len) if kind == "local" else cache_len
+        k, v = aux["k"], aux["v"]                       # (L, B, S, G, Dh)
+        if s >= w:
+            k = jax.lax.dynamic_slice_in_dim(k, s - w, w, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, s - w, w, axis=2)
+            # ring layout: slot = pos % w
+            roll = (-(s % w)) % w
+            k = jnp.roll(k, -roll, axis=2) if kind == "local" else k
+            v = jnp.roll(v, -roll, axis=2) if kind == "local" else v
+        else:
+            pad = w - s
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        out = {"k": k, "v": v}
+        if "xk" in aux:
+            out["xk"], out["xv"] = aux["xk"], aux["xv"]
+        return out
+    # recurrent runs: the scanned aux already holds the stacked final states
+    return dict(aux)
+
+
+# ---------------------------------------------------------------------------
+# Cache init / specs
+# ---------------------------------------------------------------------------
+
+def _run_cache_shapes(cfg: ModelConfig, kind: str, length: int, batch: int,
+                      max_len: int) -> dict[str, tuple]:
+    g, dh = cfg.n_kv, cfg.head_dim
+    if kind in ("attn", "local"):
+        w = min(cfg.window, max_len) if kind == "local" else max_len
+        # kv_heads shards when divisible; kv_seq ("split-KV") otherwise —
+        # spec_for's first-win dedup keeps exactly one of them on "model"
+        kv_spec = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        if g % 16 == 0:
+            kv_spec = ("layers", "batch", None, "kv_heads", "head_dim")
+        sh = {
+            "k": ((length, batch, w, g, dh), kv_spec),
+            "v": ((length, batch, w, g, dh), kv_spec),
+        }
+        if cfg.encoder_layers:
+            tf = cfg.encoder_frames
+            sh["xk"] = ((length, batch, tf, g, dh), kv_spec)
+            sh["xv"] = ((length, batch, tf, g, dh), kv_spec)
+        return sh
+    if kind == "rglru":
+        base = rglru_state_shapes(cfg, batch)
+    elif kind == "ssd":
+        base = ssd_state_shapes(cfg, batch)
+    else:
+        raise ValueError(kind)
+    return {k: ((length,) + sh, ("layers",) + spec) for k, (sh, spec) in base.items()}
+
+
+def _cache_tree(cfg: ModelConfig, batch: int, max_len: int, fn):
+    runs = []
+    for kind, _moe, _start, length in pattern_runs(cfg):
+        shapes = _run_cache_shapes(cfg, kind, length, batch, max_len)
+        runs.append({k: fn(sh, spec) for k, (sh, spec) in shapes.items()})
+    out = {"pos": fn((), (None,)), "runs": runs}
+    if cfg.encoder_layers:
+        out["enc_out"] = fn((batch, cfg.encoder_frames, cfg.d_model),
+                            ("batch", None, "embed_act"))
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    def fn(sh, spec):
+        dt = jnp.int32 if sh == () else cfg.dtype
+        return jnp.zeros(sh, dt)
+    return _cache_tree(cfg, batch, max_len, fn)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    def fn(sh, spec):
+        dt = jnp.int32 if sh == () else cfg.dtype
+        return jax.ShapeDtypeStruct(sh, dt)
+    return _cache_tree(cfg, batch, max_len, fn)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return _cache_tree(cfg, batch, max_len, lambda sh, spec: spec)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _slot_positions(pos: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Global position held by each of the w ring slots after writing ``pos``
+    at slot pos % w.  (-1 where the slot is still empty.)"""
+    i = jnp.arange(w)
+    p = pos - jnp.mod(pos - i, w)
+    return jnp.where(p >= 0, p, -1)
+
+
+def _attn_decode(p: dict, c: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                 kind: str, theta: float, pos: jnp.ndarray):
+    b = x.shape[0]
+    g, rep = cfg.n_kv, cfg.n_heads // cfg.n_kv
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if cfg.mrope_sections:
+        mpos = jnp.broadcast_to(pos[None, None, None], (3, b, 1))
+        q = apply_mrope(q, mpos, cfg.mrope_sections, theta)
+        k = apply_mrope(k, mpos, cfg.mrope_sections, theta)
+    elif theta > 0:
+        sin, cos = rope_sincos(positions, cfg.head_dim, theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    w = c["k"].shape[1]
+    slot = jnp.mod(pos, w)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype),
+                                                  slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype),
+                                                  slot, axis=1)
+    slot_pos = _slot_positions(pos, w)
+    q5 = q.reshape(b, 1, g, rep, cfg.head_dim)
+    out = decode_attention(q5, k_cache, v_cache, slot_pos, pos,
+                           softcap=cfg.attn_softcap)
+    out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    new_c = dict(c, k=k_cache, v=v_cache)
+    return out, new_c
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jnp.ndarray):
+    """One decoding step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = _embed_tokens(params, cfg, tokens,
+                      jnp.broadcast_to(pos[None, None], (b, 1)))
+    x = constrain(x, "batch", "seq", "embed_act")
+    enc_out = cache.get("enc_out")
+    new_runs = []
+    for run_idx, (kind, is_moe, _start, _length) in enumerate(pattern_runs(cfg)):
+        p_run = params["runs"][run_idx]
+        c_run = cache["runs"][run_idx]
+        theta = _run_theta(cfg, kind)
+
+        def body(h, inp, _kind=kind, _moe=is_moe, _theta=theta):
+            p_l, c_l = inp
+            if _kind in ("attn", "local"):
+                mix, c_new = _attn_decode(p_l, c_l, h, cfg, kind=_kind,
+                                          theta=_theta, pos=pos)
+            elif _kind == "rglru":
+                hn = rms_norm(h, p_l["norm1"], cfg.norm_eps)
+                mix, c_new = rglru_decode_step(p_l, c_l, hn)
+            elif _kind == "ssd":
+                hn = rms_norm(h, p_l["norm1"], cfg.norm_eps)
+                mix, c_new = ssd_decode_step(p_l, c_l, hn, cfg)
+            h = h + mix
+            if enc_out is not None and "xnorm" in p_l:
+                h = h + _cross_attn(p_l, h, (c_l["xk"], c_l["xv"]), cfg)
+                c_new["xk"], c_new["xv"] = c_l["xk"], c_l["xv"]
+            if cfg.mlp != "none" and _kind != "ssd":
+                h = h + _mlp(p_l, h, cfg, _moe)
+            return h, c_new
+
+        x, c_new = jax.lax.scan(body, x, (p_run, c_run))
+        new_runs.append(c_new)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    new_cache = dict(cache, pos=pos + 1, runs=new_runs)
+    return logits, new_cache

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, adamw_init, adamw_update, opt_state_specs, global_norm  # noqa: F401
+from .schedule import warmup_cosine, constant_lr  # noqa: F401

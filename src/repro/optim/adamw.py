@@ -1,0 +1,83 @@
+"""In-house AdamW with sharding-aware state and selectable moment dtype.
+
+Moments inherit each parameter's logical sharding (ZeRO-1 falls out of the
+FSDP rules for free); ``moment_dtype=bfloat16`` halves optimizer memory for
+the 314B-class configs (the grok fit lever — see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+def adamw_init(params, cfg: OptConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_spec_tree):
+    """Logical specs for the optimizer state, mirroring the params."""
+    is_leaf = lambda s: isinstance(s, tuple) and all(
+        isinstance(e, (str, type(None))) for e in s)
+    copy = lambda: jax.tree_util.tree_map(lambda s: s, param_spec_tree,
+                                          is_leaf=is_leaf)
+    return {"m": copy(), "v": copy(), "step": ()}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptConfig, lr: jnp.ndarray):
+    """One AdamW step. Returns (new_params, new_opt_state, grad_norm)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:     # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(cfg.moment_dtype), v32.astype(cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in new])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,19 @@
+"""Learning-rate schedules (pure jnp functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant_lr"]
+
+
+def warmup_cosine(step: jnp.ndarray, peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = peak * s / jnp.maximum(warmup, 1)
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant_lr(step: jnp.ndarray, peak: float, **_) -> jnp.ndarray:
+    return jnp.full_like(step, peak, dtype=jnp.float32)

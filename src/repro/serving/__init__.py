@@ -1,0 +1,5 @@
+from .engine import generate, greedy_sample, temperature_sample  # noqa: F401
+from .edge_host import (  # noqa: F401
+    SeekerNodeState, seeker_node_init, seeker_sensor_step, seeker_host_step,
+    seeker_simulate, edge_host_serve_step,
+)

@@ -1,0 +1,53 @@
+"""LM serving engine: prefill + batched autoregressive decode.
+
+``generate`` runs the standard two-phase serving loop: one full-sequence
+prefill builds the cache, then ``lax.scan`` over decode steps.  Sampling is
+greedy or temperature; everything jits into two programs (prefill_step /
+decode-scan), matching the two dry-run serving shapes (prefill_* and
+decode_* / long_*).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward
+from ..models.config import ModelConfig
+
+__all__ = ["greedy_sample", "temperature_sample", "generate"]
+
+
+def greedy_sample(logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, key: jax.Array,
+                       temperature: float = 0.8) -> jnp.ndarray:
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, max_new: int,
+             key: jax.Array | None = None, temperature: float = 0.0,
+             cache_margin: int = 0, **extra):
+    """prompt (B, S) int32 -> (B, max_new) generated tokens.
+
+    extra: enc_frames / patch_embeds for the multimodal archs."""
+    b, s = prompt.shape
+    cache_len = s + max_new + cache_margin
+    logits, cache = forward(params, cfg, prompt, return_cache=True,
+                            cache_len=cache_len, **extra)
+    # the first generated token comes from the last prefill logit
+    first = (greedy_sample(logits[:, -1]) if temperature == 0.0 else
+             temperature_sample(logits[:, -1], key, temperature))
+
+    def step(carry, k):
+        cache, tok = carry
+        lg, cache = decode_step(params, cfg, cache, tok[:, None])
+        nxt = (greedy_sample(lg[:, 0]) if temperature == 0.0 else
+               temperature_sample(lg[:, 0], k, temperature))
+        return (cache, nxt), nxt
+
+    keys = (jax.random.split(key, max_new - 1) if key is not None
+            else jnp.zeros((max_new - 1, 2), jnp.uint32))
+    (_, _), rest = jax.lax.scan(step, (cache, first), keys)
+    return jnp.concatenate([first[:, None], rest.T], axis=1)

@@ -1,0 +1,5 @@
+from .step import (  # noqa: F401
+    TrainHyper, cross_entropy, make_loss_fn, make_train_step,
+    make_compressed_train_step, init_train_state, train_state_specs,
+)
+from .loop import TrainLoopConfig, run_training, PreemptionError  # noqa: F401

@@ -1,0 +1,137 @@
+"""Coreset construction unit + property tests (paper §3.1-3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cluster_payload_bytes, dequantize_uniform, importance_coreset,
+    importance_weights, kmeans_coreset, points_from_window,
+    quantize_uniform, raw_payload_bytes, sampling_payload_bytes,
+    topk_importance_coreset, window_from_points,
+)
+
+
+def _window(seed: int, t: int = 60, c: int = 3) -> jnp.ndarray:
+    k = jax.random.PRNGKey(seed)
+    tt = jnp.linspace(0, 4 * jnp.pi, t)[:, None]
+    return jnp.sin(tt * (1 + seed % 3)) + 0.1 * jax.random.normal(k, (t, c))
+
+
+# ---------------------------------------------------------------------------
+# Paper arithmetic (the 240 B -> 36/42 B -> 8.9x headline numbers)
+# ---------------------------------------------------------------------------
+
+def test_paper_byte_accounting():
+    assert raw_payload_bytes(60) == 240                      # §3.2
+    assert cluster_payload_bytes(12, recoverable=False) == 36
+    assert cluster_payload_bytes(12, recoverable=True) == 42  # +4 bits/cluster
+    # 42 B is the paper's 5.7x claim
+    assert pytest.approx(240 / 42, abs=0.02) == 5.71
+    assert sampling_payload_bytes(20, with_moments=False) == 60
+
+
+def test_kmeans_partitions_all_points():
+    pts = points_from_window(_window(0))
+    cs = kmeans_coreset(pts, k=12, iters=4)
+    assert int(cs.counts.sum()) == pts.shape[0]
+    assert cs.centers.shape == (12, pts.shape[1])
+    assert bool(jnp.all(cs.radii >= 0))
+
+
+def test_kmeans_radius_covers_members():
+    """Every point lies within the radius of its nearest center (the 2r
+    recovery guarantee of §3.2.2 depends on this)."""
+    pts = points_from_window(_window(1))
+    cs = kmeans_coreset(pts, k=8, iters=4)
+    d = jnp.linalg.norm(pts[:, None] - cs.centers[None], axis=-1)
+    assign = jnp.argmin(d, axis=1)
+    dist = jnp.take_along_axis(d, assign[:, None], axis=1)[:, 0]
+    assert bool(jnp.all(dist <= cs.radii[assign] + 1e-5))
+
+
+def test_kmeans_paper_hw_limits():
+    """Paper §4.2: <=16 points per cluster at k=12 on 60-pt windows, 4 Lloyd
+    iterations suffice (objective stops improving materially)."""
+    for seed in range(8):
+        pts = points_from_window(_window(seed))
+        cs = kmeans_coreset(pts, k=12, iters=4)
+        assert int(cs.counts.max()) <= 16
+        cs8 = kmeans_coreset(pts, k=12, iters=8)
+        # doubling the iteration budget moves centers only marginally
+        drift = float(jnp.max(jnp.abs(cs.centers - cs8.centers)))
+        spread = float(jnp.max(pts) - jnp.min(pts))
+        assert drift <= 0.25 * spread
+
+
+def test_importance_weights_are_distribution():
+    w = importance_weights(_window(2))
+    assert w.shape == (60,)
+    np.testing.assert_allclose(float(w.sum()), 1.0, rtol=1e-5)
+    assert bool(jnp.all(w >= 0))
+
+
+def test_importance_coreset_shapes_and_sorted(key):
+    sc = importance_coreset(_window(3), 20, key)
+    assert sc.indices.shape == (20,)
+    assert sc.values.shape == (20, 3)
+    assert bool(jnp.all(jnp.diff(sc.indices) > 0))      # unique + ascending
+    assert bool(jnp.all(sc.indices >= 0)) and bool(jnp.all(sc.indices < 60))
+
+
+def test_topk_variant_deterministic():
+    a = topk_importance_coreset(_window(4), 16)
+    b = topk_importance_coreset(_window(4), 16)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+
+
+def test_window_points_roundtrip():
+    w = _window(5)
+    pts = points_from_window(w)
+    back = window_from_points(pts, w.shape[0])
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), k=st.integers(2, 16),
+       n=st.integers(17, 80))
+def test_kmeans_invariants_property(seed, k, n):
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, 3))
+    cs = kmeans_coreset(pts, k=k, iters=4)
+    assert int(cs.counts.sum()) == n
+    assert bool(jnp.all(cs.counts >= 0))
+    assert bool(jnp.all(jnp.isfinite(cs.centers)))
+    # radius coverage
+    d = jnp.linalg.norm(pts[:, None] - cs.centers[None], axis=-1)
+    assign = jnp.argmin(d, axis=1)
+    dist = jnp.take_along_axis(d, assign[:, None], axis=1)[:, 0]
+    assert bool(jnp.all(dist <= cs.radii[assign] + 1e-4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**30), bits=st.sampled_from([4, 8, 12, 16]))
+def test_quantize_roundtrip_error_bound(seed, bits):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (64,), minval=-3, maxval=5)
+    lo, hi = float(x.min()), float(x.max())
+    codes = quantize_uniform(x, bits, lo, hi)
+    back = dequantize_uniform(codes, bits, lo, hi)
+    step = (hi - lo) / (2 ** bits - 1)
+    assert float(jnp.max(jnp.abs(back - x))) <= step / 2 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), m=st.integers(4, 40))
+def test_importance_selection_property(seed, m):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (60, 2))
+    sc = importance_coreset(w, m, key)
+    assert sc.indices.shape == (m,)
+    assert len(set(np.asarray(sc.indices).tolist())) == m   # no repeats
+    # values are the actual window samples
+    np.testing.assert_allclose(np.asarray(sc.values),
+                               np.asarray(w[sc.indices]), rtol=1e-6)

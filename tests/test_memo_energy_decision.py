@@ -1,0 +1,120 @@
+"""Memoization, energy model, and D0-D4 decision-flow tests (paper §3.2.1,
+§4.1, Table 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING, DEFER,
+    EnergyCosts, TABLE2_COSTS, choose_decision, decision_energy,
+    harvest_trace, memo_decision, pearson, predictor_forecast, predictor_init,
+    predictor_update, signature_correlations, supercap_step,
+)
+from repro.data.sensors import class_signatures, har_window
+
+
+# --- memoization ------------------------------------------------------------
+
+def test_pearson_bounds_and_extremes(key):
+    x = jax.random.normal(key, (64,))
+    assert float(pearson(x, x)) == pytest.approx(1.0, abs=1e-5)
+    assert float(pearson(x, -x)) == pytest.approx(-1.0, abs=1e-5)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    assert -1.0 <= float(pearson(x, y)) <= 1.0
+
+
+def test_memo_hits_on_same_class(key):
+    sigs = class_signatures()
+    w = har_window(key, jnp.asarray(3), noise=0.05)
+    res = memo_decision(w, sigs, threshold=0.8)
+    assert bool(res.hit)
+    assert int(res.label) == 3
+
+
+def test_memo_misses_on_noise(key):
+    sigs = class_signatures()
+    w = jax.random.normal(key, (60, 3))
+    res = memo_decision(w, sigs, threshold=0.95)
+    assert not bool(res.hit)
+
+
+# --- energy model -----------------------------------------------------------
+
+def test_table2_energy_ladder():
+    """Paper Table 2 ordering: D0 < D4 < D3 < D2 < D1 < raw."""
+    c = TABLE2_COSTS
+    e = [c.total(i) for i in range(6)]
+    assert e[0] < e[4] < e[3] < e[2] < e[1] < e[5]
+    assert e[1] == pytest.approx(37.5, abs=0.01)     # paper row D1
+    assert e[5] == pytest.approx(70.16, abs=0.01)    # raw
+
+
+@settings(max_examples=25, deadline=None)
+@given(stored=st.floats(0, 200), harvested=st.floats(0, 500),
+       spent=st.floats(0, 300))
+def test_supercap_bounds(stored, harvested, spent):
+    e = supercap_step(jnp.asarray(stored), jnp.asarray(harvested),
+                      jnp.asarray(spent), cap_uj=200.0)
+    assert 0.0 <= float(e) <= 200.0
+
+
+def test_harvest_traces_shapes_and_magnitudes(key):
+    for src, lo, hi in [("rf", 1, 200), ("wifi", 1, 400),
+                        ("piezo", 10, 400), ("solar", 10, 1500)]:
+        tr = harvest_trace(key, 200, src)
+        assert tr.shape == (200,)
+        assert bool(jnp.all(tr >= 0))
+        assert lo < float(tr.mean()) < hi, (src, float(tr.mean()))
+
+
+def test_predictor_converges_to_mean(key):
+    st_ = predictor_init(8)
+    for v in [10.0] * 20:
+        st_ = predictor_update(st_, jnp.asarray(v))
+    assert float(predictor_forecast(st_)) == pytest.approx(10.0, rel=1e-5)
+
+
+# --- decision flow ----------------------------------------------------------
+
+def test_memo_gate_overrides_everything():
+    out = choose_decision(jnp.asarray(0.99), jnp.asarray(0.0),
+                          jnp.asarray(0.0), TABLE2_COSTS)
+    assert int(out.decision) == D0_MEMO
+
+
+def test_rich_budget_prefers_local_dnn():
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(100.0),
+                          jnp.asarray(0.0), TABLE2_COSTS)
+    assert int(out.decision) == D2_DNN_QUANT
+
+
+def test_poor_budget_offloads_cluster_then_sampling_then_defers():
+    c = decision_energy(TABLE2_COSTS)
+    mid = float(c[D3_CLUSTER]) + 0.1
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(mid), jnp.asarray(0.0),
+                          TABLE2_COSTS)
+    assert int(out.decision) == D3_CLUSTER
+    low = float(c[D4_SAMPLING]) + 0.05
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(low), jnp.asarray(0.0),
+                          TABLE2_COSTS)
+    assert int(out.decision) == D4_SAMPLING
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(0.5), jnp.asarray(0.0),
+                          TABLE2_COSTS)
+    assert int(out.decision) == DEFER
+
+
+@settings(max_examples=40, deadline=None)
+@given(e1=st.floats(0, 120), e2=st.floats(0, 120), corr=st.floats(-1, 0.9))
+def test_decision_monotone_in_energy(e1, e2, corr):
+    """More energy never degrades the decision quality ladder
+    (D2 > D3 > D4 > DEFER preference order, paper Fig. 8)."""
+    rank = {D2_DNN_QUANT: 3, D3_CLUSTER: 2, D4_SAMPLING: 1, DEFER: 0,
+            D0_MEMO: 4, D1_DNN_FULL: 3}
+    lo, hi = sorted([e1, e2])
+    d_lo = int(choose_decision(jnp.asarray(corr), jnp.asarray(lo),
+                               jnp.asarray(0.0), TABLE2_COSTS).decision)
+    d_hi = int(choose_decision(jnp.asarray(corr), jnp.asarray(hi),
+                               jnp.asarray(0.0), TABLE2_COSTS).decision)
+    assert rank[d_hi] >= rank[d_lo]

@@ -1,0 +1,87 @@
+"""Recoverable-coreset tests (paper §3.2.2 + A.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClusterCoreset, importance_coreset, init_discriminator, init_generator,
+    discriminator_apply, kmeans_coreset, points_from_window,
+    recover_cluster_points, recover_cluster_window, recover_sampling_window,
+)
+
+
+def _window(seed, t=60, c=3):
+    k = jax.random.PRNGKey(seed)
+    tt = jnp.linspace(0, 4 * jnp.pi, t)[:, None]
+    return jnp.sin(tt) + 0.1 * jax.random.normal(k, (t, c))
+
+
+def test_cluster_recovery_2r_property(key):
+    """Recovered points lie within each source cluster's ball (the paper's
+    2r-approximation: any two points in one cluster are <=2r apart)."""
+    pts = points_from_window(_window(0))
+    cs = kmeans_coreset(pts, k=8, iters=4)
+    rec, mask = recover_cluster_points(cs, key, n_points=60)
+    d = jnp.linalg.norm(rec[:, None] - cs.centers[None], axis=-1)
+    mind = jnp.min(d, axis=1)
+    maxr = jnp.max(cs.radii)
+    valid = np.asarray(mask)
+    assert bool(jnp.all(mind[valid] <= maxr + 1e-4))
+
+
+def test_cluster_recovery_count_match(key):
+    pts = points_from_window(_window(1))
+    cs = kmeans_coreset(pts, k=12, iters=4)
+    rec, mask = recover_cluster_points(cs, key, n_points=60)
+    assert int(mask.sum()) == int(cs.counts.sum()) == 60
+
+
+def test_cluster_recovered_window_close(key):
+    """Recovered windows approximate the original well enough for inference
+    (paper: ~85% accuracy on reconstructions) — check signal-level error."""
+    w = _window(2)
+    cs = kmeans_coreset(points_from_window(w), k=12, iters=4)
+    rec = recover_cluster_window(cs, key, w.shape[0])
+    assert rec.shape == w.shape
+    err = float(jnp.mean(jnp.abs(rec - w)))
+    scale = float(jnp.std(w))
+    assert err < 0.75 * scale, (err, scale)
+
+
+def test_generator_recovery_keeps_transmitted_points(key):
+    """A.1: the samples the sensor DID send are written back verbatim."""
+    w = _window(3)
+    sc = importance_coreset(w, 20, key)
+    gen = init_generator(key, w.shape[0], w.shape[1])
+    rec = recover_sampling_window(gen, sc, key, w.shape[0])
+    assert rec.shape == w.shape
+    np.testing.assert_allclose(np.asarray(rec[sc.indices]),
+                               np.asarray(sc.values), rtol=1e-5)
+
+
+def test_generator_discriminator_shapes(key):
+    gen = init_generator(key, 60, 3, n_classes=12)
+    n_params = sum(p.size for p in jax.tree_util.tree_leaves(gen))
+    assert n_params < 500_000        # paper: "few hundred thousand parameters"
+    disc = init_discriminator(key, 60, 3)
+    score = discriminator_apply(disc, _window(4))
+    assert score.shape == ()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), k=st.integers(4, 16))
+def test_recovery_mass_conservation(seed, k):
+    key = jax.random.PRNGKey(seed)
+    pts = jax.random.normal(key, (48, 3))
+    cs = kmeans_coreset(pts, k=k, iters=4)
+    rec, mask = recover_cluster_points(cs, key, n_points=48)
+    # per-cluster recovered counts match the transmitted counts within the
+    # proportional-slot rounding (+-1 per cluster)
+    d = jnp.linalg.norm(rec[:, None] - cs.centers[None], axis=-1)
+    assign = np.asarray(jnp.argmin(d, axis=1))[np.asarray(mask)]
+    rec_counts = np.bincount(assign, minlength=k)
+    src_counts = np.asarray(cs.counts)
+    # empty clusters stay empty
+    assert np.all(rec_counts[src_counts == 0] == 0)
+    assert rec_counts.sum() == src_counts.sum()

@@ -1,0 +1,142 @@
+"""Sharding resolution tests + subprocess dry-run/mesh integration.
+
+The main pytest process stays single-device (per the assignment: only the
+dry-run sees 512 devices); anything needing a mesh runs in a subprocess
+with its own XLA_FLAGS.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env["DRYRUN_DEVICES"] = str(devices)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_spec_for_divisibility_fallback():
+    code = """
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro import sharding as shd
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # divisible: shard; non-divisible: replicate
+    s = shd.spec_for(("batch", "ff"), (8, 12), mesh, shd.FSDP_RULES)
+    assert s == P("data", "model"), s
+    s = shd.spec_for(("batch", "ff"), (8, 13), mesh, shd.FSDP_RULES)
+    assert s == P("data", None), s
+    # duplicate mesh-axis use: first dim wins
+    s = shd.spec_for(("heads", "ff"), (8, 8), mesh, shd.FSDP_RULES)
+    assert s == P("model", None), s
+    # missing mesh axis dropped (pod rule on a pod-less mesh)
+    s = shd.spec_for(("batch",), (8,), mesh, shd.FSDP_RULES)
+    assert s == P("data"), s
+    print("OK")
+    """
+    assert "OK" in _run(code, devices=8)
+
+
+def test_constrain_noop_without_context():
+    import jax.numpy as jnp
+    from repro.sharding import constrain
+    x = jnp.ones((4, 4))
+    y = constrain(x, "batch", "ff")
+    assert (x == y).all()
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_compiles_256_devices():
+    """End-to-end dry-run of one real cell on the production (16,16) mesh."""
+    code = """
+    from repro.launch.dryrun import run_cell
+    res = run_cell("tinyllama-1.1b", "decode_32k", multi_pod=False)
+    assert res["status"] == "ok", res.get("error")
+    assert res["n_devices"] == 256
+    ma = res["memory_analysis"]
+    total = (ma["argument_bytes"] + ma["temp_bytes"]) / 2**30
+    assert total < 16, f"does not fit HBM: {total} GiB"
+    assert res["hlo_analysis"]["flops"] > 0
+    print("OK", total)
+    """
+    out = _run(code, devices=256)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_multipod_mesh_compiles_512_devices():
+    """The multi-pod (2,16,16) mesh lowers + compiles a small cell — proves
+    the pod axis shards."""
+    code = """
+    from repro.launch.dryrun import run_cell
+    res = run_cell("mamba2-130m", "decode_32k", multi_pod=True)
+    assert res["status"] == "ok", res.get("error")
+    assert res["n_devices"] == 512
+    print("OK")
+    """
+    out = _run(code, devices=512)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_dp_reduces_collective_bytes():
+    """Seeker gradient coresets cut the DP all-reduce wire bytes in the
+    lowered HLO (paper C1 at pod scale)."""
+    code = """
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import sharding as shd
+    from repro.core.compression import CompressionConfig
+    from repro.data.lm import LMTask, lm_batches
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.models.config import ModelConfig
+    from repro.train import (TrainHyper, init_train_state,
+                             make_compressed_train_step, make_train_step)
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = ModelConfig(name="t", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                      n_kv=2, d_ff=256, dtype=jnp.float32)
+    hyper = TrainHyper()
+    ccfg = CompressionConfig(topk_ratio=1/64, min_size=1024)
+    task = LMTask(vocab=256, seq_len=64, batch=16)
+    batch = lm_batches(task, 0)
+
+    with shd.use_sharding(mesh, shd.DP_TP_RULES):
+        state = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, hyper, ccfg))
+        sh_state = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), state)
+        sh_batch = {"tokens": NamedSharding(mesh, P("data"))}
+
+        dense = make_train_step(cfg, hyper)
+        state_d = {k: v for k, v in state.items() if k != "ef"}
+        sh_d = {k: v for k, v in sh_state.items() if k != "ef"}
+        lowered_d = jax.jit(dense, in_shardings=(sh_d, sh_batch)).lower(
+            state_d, batch)
+        comp = make_compressed_train_step(cfg, hyper, ccfg, mesh, ("data",))
+        lowered_c = jax.jit(comp).lower(state, batch)
+
+    b_dense = analyze_hlo(lowered_d.compile().as_text())
+    b_comp = analyze_hlo(lowered_c.compile().as_text())
+    ar_d = b_dense.collective_bytes["all-reduce"]
+    total_c = b_comp.total_collective_bytes
+    print("dense all-reduce:", ar_d, " compressed total:", total_c)
+    assert total_c < ar_d, (total_c, ar_d)
+    print("OK")
+    """
+    out = _run(code, devices=8)
+    assert "OK" in out

