@@ -34,7 +34,9 @@ from repro.models.config import ModelConfig
 from repro.train import (TrainHyper, init_train_state,
                          make_compressed_train_step, make_train_step)
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.sharding import make_mesh_compat
+
+mesh = make_mesh_compat((8,), ("data",))
 cfg = ModelConfig(name="t", vocab=256, d_model=128, n_layers=4, n_heads=8,
                   n_kv=4, d_ff=512, dtype=jnp.float32)
 hyper = TrainHyper()

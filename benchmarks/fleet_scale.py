@@ -1,0 +1,73 @@
+"""Fleet-scale Seeker throughput: one batched scan vs fleet size.
+
+``PYTHONPATH=src python -m benchmarks.fleet_scale`` (or via benchmarks.run)
+
+Sweeps N ∈ {3, 30, 300, 3000} independent EH nodes with heterogeneous
+harvest traces through :func:`repro.serving.seeker_fleet_simulate` and
+reports simulated windows/second and bytes-on-wire vs the raw-transmission
+baseline — the fleet-engine scaling story on top of the paper's per-node
+communication reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.seeker_har import HAR
+from repro.core import DEFER, fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import seeker_fleet_simulate
+
+from .common import timeit_us
+
+SLOTS = 8
+FLEET_SIZES = (3, 30, 300, 3000)
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    # untrained weights: identical FLOPs/bytes to trained ones, and this
+    # benchmark measures engine throughput, not accuracy
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    sigs = class_signatures()
+    wins, _ = har_stream(key, SLOTS)
+
+    rows = []
+    for n in FLEET_SIZES:
+        harvest = fleet_harvest_traces(key, n, SLOTS)
+        last = {}
+
+        def sim():
+            last["res"] = seeker_fleet_simulate(
+                wins, harvest, signatures=sigs, qdnn_params=params,
+                host_params=params, gen_params=gen, har_cfg=HAR)
+            return last["res"]["decisions"]
+
+        iters = 3 if n <= 300 else 1
+        us = timeit_us(sim, iters=iters, warmup=1)
+        res = last["res"]
+        n_windows = n * SLOTS
+        sent = int(jnp.sum(res["decisions"] != DEFER))
+        wire = float(res["bytes_on_wire"])
+        raw = sent * float(res["raw_bytes_per_window"])
+        rows.append({
+            "name": f"fleet_scale/n{n}",
+            "us_per_call": us,
+            "windows_per_s": n_windows / (us / 1e6),
+            "bytes_on_wire": wire,
+            "raw_bytes_equiv": float(raw),
+            "reduction_x": raw / max(wire, 1e-9),
+            "completed_frac": sent / n_windows,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']:>18s}  {row['windows_per_s']:>10.0f} win/s  "
+              f"{row['bytes_on_wire']:>12.0f} B on wire  "
+              f"({row['reduction_x']:.1f}x under raw, "
+              f"{100 * row['completed_frac']:.0f}% completed)")

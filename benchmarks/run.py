@@ -23,12 +23,14 @@ MODULES = [
     "fig12_endtoend",
     "fig13_bearing",
     "comm_volume",
+    "fleet_scale",
 ]
 
 
 def _derived(row: dict) -> str:
-    for k in ("acc", "acc_scheduled", "total_uj", "reduction_x",
-              "completed_frac", "wire_bytes_per_dev", "volume_frac"):
+    for k in ("acc", "acc_scheduled", "total_uj", "windows_per_s",
+              "reduction_x", "completed_frac", "wire_bytes_per_dev",
+              "volume_frac"):
         if k in row:
             return f"{k}={row[k]:.4f}" if isinstance(row[k], float) \
                 else f"{k}={row[k]}"

@@ -48,8 +48,8 @@ def main():
     state = init_train_state(jax.random.PRNGKey(0), cfg, hyper, ccfg)
 
     if args.compress:
-        mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.sharding import make_mesh_compat
+        mesh = make_mesh_compat((jax.device_count(),), ("data",))
         step = jax.jit(make_compressed_train_step(cfg, hyper, ccfg, mesh,
                                                   dp_axes=("data",)))
     else:

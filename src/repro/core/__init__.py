@@ -14,7 +14,8 @@ from .recovery import (  # noqa: F401
 )
 from .memo import pearson, signature_correlations, memo_decision, MemoResult  # noqa: F401
 from .energy import (  # noqa: F401
-    EnergyCosts, TABLE2_COSTS, harvest_trace, EH_SOURCES, supercap_step,
+    EnergyCosts, TABLE2_COSTS, harvest_trace, EH_SOURCES,
+    fleet_source_assignment, fleet_harvest_traces, supercap_step,
     PredictorState, predictor_init, predictor_update, predictor_forecast,
 )
 from .aac import AACTable, make_aac_table, select_k  # noqa: F401

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "EnergyCosts", "TABLE2_COSTS", "harvest_trace", "EH_SOURCES",
-    "supercap_step", "PredictorState", "predictor_init", "predictor_update",
+    "fleet_source_assignment", "fleet_harvest_traces", "supercap_step",
+    "PredictorState", "predictor_init", "predictor_update",
     "predictor_forecast",
 ]
 
@@ -120,6 +121,37 @@ def harvest_trace(key: jax.Array, n: int, source: str = "rf") -> jnp.ndarray:
     raise ValueError(f"unknown EH source {source!r}; options: {EH_SOURCES}")
 
 
+def fleet_source_assignment(n_nodes: int, sources=EH_SOURCES):
+    """Node -> harvest-modality index for a fleet: round-robin over
+    ``sources``.  The single source of truth for which node draws which
+    modality (``fleet_harvest_traces`` generates with it; reporting code
+    groups by it)."""
+    import numpy as np
+
+    return np.arange(n_nodes) % len(tuple(sources))
+
+
+def fleet_harvest_traces(key: jax.Array, n_nodes: int, n_slots: int,
+                         sources=EH_SOURCES) -> jnp.ndarray:
+    """(N, S) heterogeneous per-node harvest: node ``i`` draws the modality
+    :func:`fleet_source_assignment` gives it, with its own key fold, so no
+    two nodes see the same income — the fleet-simulation analogue of a
+    deployment where every wearable sits in a different energy environment."""
+    import numpy as np
+
+    sources = tuple(sources)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_nodes))
+    out = jnp.zeros((n_nodes, n_slots), jnp.float32)
+    node_src = fleet_source_assignment(n_nodes, sources)
+    for si, src in enumerate(sources):
+        sel = np.nonzero(node_src == si)[0]
+        if sel.size == 0:
+            continue
+        traces = jax.vmap(lambda k: harvest_trace(k, n_slots, src))(keys[sel])
+        out = out.at[sel].set(traces)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Supercap storage
 # ---------------------------------------------------------------------------
@@ -136,25 +168,35 @@ def supercap_step(stored_uj: jnp.ndarray, harvested_uj: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 class PredictorState(NamedTuple):
-    history: jnp.ndarray   # (W,) ring buffer of recent harvest (µJ/slot)
-    pos: jnp.ndarray       # () int32 write cursor
+    history: jnp.ndarray   # (W,) or (N, W) ring buffer of recent harvest (µJ/slot)
+    pos: jnp.ndarray       # () or (N,) int32 write cursor
 
 
-def predictor_init(window: int = 8) -> PredictorState:
-    return PredictorState(history=jnp.zeros((window,)), pos=jnp.zeros((), jnp.int32))
+def predictor_init(window: int = 8, batch: int | None = None) -> PredictorState:
+    """Scalar-node state by default; ``batch=N`` builds the stacked per-node
+    state the fleet engine carries through its scan."""
+    if batch is None:
+        return PredictorState(history=jnp.zeros((window,)),
+                              pos=jnp.zeros((), jnp.int32))
+    return PredictorState(history=jnp.zeros((batch, window)),
+                          pos=jnp.zeros((batch,), jnp.int32))
 
 
 def predictor_update(state: PredictorState, harvested_uj: jnp.ndarray) -> PredictorState:
-    w = state.history.shape[0]
-    return PredictorState(
-        history=state.history.at[state.pos % w].set(harvested_uj),
-        pos=state.pos + 1,
-    )
+    """Ring-buffer write; works on scalar (W,) and batched (N, W) states."""
+    w = state.history.shape[-1]
+    if state.history.ndim == 1:
+        history = state.history.at[state.pos % w].set(harvested_uj)
+    else:
+        n = state.history.shape[0]
+        history = state.history.at[jnp.arange(n), state.pos % w].set(harvested_uj)
+    return PredictorState(history=history, pos=state.pos + 1)
 
 
 def predictor_forecast(state: PredictorState, horizon_slots: int = 1) -> jnp.ndarray:
-    """Expected µJ income over the next ``horizon_slots`` slots."""
-    w = state.history.shape[0]
+    """Expected µJ income over the next ``horizon_slots`` slots.  Returns ()
+    for a scalar state, (N,) for a batched one."""
+    w = state.history.shape[-1]
     filled = jnp.minimum(state.pos, w).astype(jnp.float32)
-    mean = jnp.sum(state.history) / jnp.maximum(filled, 1.0)
+    mean = jnp.sum(state.history, axis=-1) / jnp.maximum(filled, 1.0)
     return mean * horizon_slots

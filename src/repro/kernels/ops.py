@@ -1,8 +1,16 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels, with backend dispatch.
 
 Handles padding to block multiples, dtype coercion, interpret-mode selection
 (``interpret=True`` everywhere except a real TPU backend), and un-padding of
 the results.  Call these, not the kernels, from library code.
+
+Dispatch: every op takes ``impl`` — ``"pallas"`` runs the Pallas kernel
+(interpret mode off-TPU), ``"ref"`` runs the pure-jnp oracle from
+:mod:`repro.kernels.ref`.  The default (``None``) resolves to ``"pallas"``
+on a real TPU backend and ``"ref"`` elsewhere: the oracles are validated
+bit-for-tolerance against the kernels (tests/test_kernels.py), compile to
+plain XLA on CPU/GPU, and — unlike interpret-mode Pallas — stay fast under
+``vmap``/``scan``, which is what the fleet engine's hot path needs.
 """
 from __future__ import annotations
 
@@ -11,18 +19,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .fake_quant import fake_quant_pallas
 from .importance_select import importance_select_pallas
 from .kmeans_coreset import kmeans_coreset_pallas
 from .signature_corr import signature_corr_pallas
 
 __all__ = ["kmeans_coreset_op", "importance_select_op", "signature_corr_op",
-           "fake_quant_op", "default_interpret"]
+           "fake_quant_op", "default_interpret", "default_impl"]
 
 
 def default_interpret() -> bool:
     """Pallas interpret mode: Python-evaluated kernel body off-TPU."""
     return jax.default_backend() != "tpu"
+
+
+def default_impl() -> str:
+    """Backend dispatch: the compiled kernel on TPU, the jnp oracle elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve_impl(impl: str | None) -> str:
+    impl = default_impl() if impl is None else impl
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"impl must be 'pallas' or 'ref', got {impl!r}")
+    return impl
 
 
 def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> tuple[jnp.ndarray, int]:
@@ -36,8 +57,12 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> tuple[jnp.ndarray, in
 
 
 def kmeans_coreset_op(points: jnp.ndarray, k: int, iters: int = 4,
-                      block_b: int = 8, interpret: bool | None = None):
+                      block_b: int = 8, interpret: bool | None = None,
+                      impl: str | None = None):
     """Batched clustering coresets. points: (B, N, D) -> (centers, radii, counts)."""
+    if _resolve_impl(impl) == "ref":
+        return ref.kmeans_coreset_ref(points.astype(jnp.float32), k=k,
+                                      iters=iters)
     interpret = default_interpret() if interpret is None else interpret
     padded, b = _pad_axis(points, 0, block_b)
     centers, radii, counts = kmeans_coreset_pallas(
@@ -47,8 +72,12 @@ def kmeans_coreset_op(points: jnp.ndarray, k: int, iters: int = 4,
 
 def importance_select_op(windows: jnp.ndarray, m: int, spread: float = 0.25,
                          avg_width: int = 8, block_b: int = 8,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         impl: str | None = None):
     """Batched top-m importance selection. windows: (B, T, C)."""
+    if _resolve_impl(impl) == "ref":
+        return ref.importance_select_ref(windows.astype(jnp.float32), m=m,
+                                         spread=spread)
     interpret = default_interpret() if interpret is None else interpret
     padded, b = _pad_axis(windows, 0, block_b)
     idx, vals, weights = importance_select_pallas(
@@ -59,8 +88,17 @@ def importance_select_op(windows: jnp.ndarray, m: int, spread: float = 0.25,
 
 def signature_corr_op(windows: jnp.ndarray, signatures: jnp.ndarray,
                       block_b: int = 8, block_l: int = 8,
-                      interpret: bool | None = None) -> jnp.ndarray:
-    """(B, T, C) vs (L, T, C) -> (B, L) correlations."""
+                      interpret: bool | None = None,
+                      impl: str | None = None) -> jnp.ndarray:
+    """(B, T, C) vs (L, T, C) -> (B, L) correlations.
+
+    This is the fleet simulator's memoization hot path: every node correlates
+    its fresh window against the whole signature bank each slot, so the
+    batched form (B = all fleet nodes) is the one that must scale.
+    """
+    if _resolve_impl(impl) == "ref":
+        return ref.signature_corr_ref(windows.astype(jnp.float32),
+                                      signatures.astype(jnp.float32))
     interpret = default_interpret() if interpret is None else interpret
     wp, b = _pad_axis(windows, 0, block_b)
     # Signatures pad with zeros NOT edge: a zero signature correlates ~0 and
@@ -74,12 +112,17 @@ def signature_corr_op(windows: jnp.ndarray, signatures: jnp.ndarray,
 
 
 def fake_quant_op(x: jnp.ndarray, bits: int, per_channel: bool = False,
-                  interpret: bool | None = None) -> jnp.ndarray:
+                  interpret: bool | None = None,
+                  impl: str | None = None) -> jnp.ndarray:
     """Fake-quantize an arbitrary-shape tensor at ``bits`` precision."""
-    interpret = default_interpret() if interpret is None else interpret
     orig_shape = x.shape
     orig_dtype = x.dtype
     x2d = x.reshape(-1, orig_shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    if _resolve_impl(impl) == "ref":
+        out = ref.fake_quant_ref(x2d.astype(jnp.float32), bits=bits,
+                                 per_channel=per_channel)
+        return out.reshape(orig_shape).astype(orig_dtype)
+    interpret = default_interpret() if interpret is None else interpret
     r, c = x2d.shape
     block_r = min(256, r)
     block_c = min(512, c)

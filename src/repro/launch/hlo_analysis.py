@@ -113,19 +113,32 @@ def _split_computations(txt: str) -> dict[str, list[str]]:
     return comps
 
 
+# operand reference, optionally preceded by its inline type — newer jax
+# prints `dot(%lhs, %rhs)`, 0.4.x prints `dot(f32[64,64]{1,0} %lhs, ...)`
+_OPERAND = r"(?:([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)"
+
+
+def _operand_shape(match_groups, symtab) -> list[int] | None:
+    """Shape of an _OPERAND match: inline type if printed, else symtab."""
+    dtype, dims, name = match_groups
+    if dtype is not None:
+        return [int(d) for d in dims.split(",") if d]
+    entry = symtab.get(name)
+    return None if entry is None else entry[1]
+
+
 def _dot_flops(line: str, symtab: dict[str, tuple[str, list[int]]]) -> float:
     """2 * prod(output) * prod(lhs contracting dims)."""
     out = _first_shape(line.split("=", 1)[1])
     if out is None:
         return 0.0
     _, out_shape = out
-    m = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+    m = re.search(r"\bdot\(\s*" + _OPERAND, line)
     cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     contracted = 1
     if m and cd:
-        lhs = symtab.get(m.group(1))
-        if lhs is not None:
-            lhs_shape = lhs[1]
+        lhs_shape = _operand_shape(m.groups(), symtab)
+        if lhs_shape is not None:
             for d in cd.group(1).split(","):
                 if d and int(d) < len(lhs_shape):
                     contracted *= lhs_shape[int(d)]
@@ -139,15 +152,16 @@ def _conv_flops(line: str, symtab: dict[str, tuple[str, list[int]]]) -> float:
     if out is None:
         return 0.0
     _, out_shape = out
-    m = re.search(r"convolution\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", line)
+    m = re.search(r"\bconvolution\(\s*" + _OPERAND + r"\s*,\s*" + _OPERAND,
+                  line)
     if not m:
         return 0.0
-    rhs = symtab.get(m.group(2))
-    if rhs is None:
+    rhs_shape = _operand_shape(m.groups()[3:], symtab)
+    if rhs_shape is None:
         return -1.0
     # kernel: spatial... x in_ch x out_ch (exact dim order varies; product
     # over all kernel dims / out_ch gives per-output MACs)
-    total_kernel = math.prod(rhs[1] or [1])
+    total_kernel = math.prod(rhs_shape or [1])
     out_ch = out_shape[-1] if out_shape else 1
     per_out = max(total_kernel // max(out_ch, 1), 1)
     return 2.0 * math.prod(out_shape or [1]) * per_out
@@ -194,8 +208,14 @@ def analyze_hlo(txt: str) -> HloStats:
                 out_sh = _first_shape(rhs)
                 if out_sh and out_sh[0] in _DTYPE_BYTES:
                     hbm += math.prod(out_sh[1] or [1]) * _DTYPE_BYTES[out_sh[0]]
-                for opm in re.finditer(r"[(,]\s*%([\w.\-]+)", rhs):
-                    osh = symtab.get(opm.group(1))
+                for opm in re.finditer(
+                        r"[(,]\s*(?:([a-z0-9]+)\[([0-9,]*)\]"
+                        r"(?:\{[^}]*\})?\s+)?%([\w.\-]+)", rhs):
+                    dtype, dims, opname = opm.groups()
+                    if dtype is None:
+                        osh = symtab.get(opname)
+                    else:
+                        osh = (dtype, [int(d) for d in dims.split(",") if d])
                     if osh is not None and osh[0] in _DTYPE_BYTES:
                         hbm += math.prod(osh[1] or [1]) * _DTYPE_BYTES[osh[0]]
             if " dot(" in line:

@@ -15,18 +15,17 @@ from __future__ import annotations
 
 import jax
 
+from ..sharding import make_mesh_compat
+
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_for(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
     """Arbitrary mesh (elastic re-mesh, tests)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh_compat(shape, axes)

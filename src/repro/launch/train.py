@@ -52,9 +52,7 @@ def main():
         step = (jax.jit(make_train_step(cfg, hyper))
                 if not args.compress_grads else None)
         if step is None:
-            mesh = jax.make_mesh(
-                (jax.device_count(),), ("data",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = shd.make_mesh_compat((jax.device_count(),), ("data",))
             step = jax.jit(make_compressed_train_step(
                 cfg, hyper, compression, mesh, dp_axes=("data",)))
     else:

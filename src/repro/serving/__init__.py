@@ -1,5 +1,8 @@
 from .engine import generate, greedy_sample, temperature_sample  # noqa: F401
 from .edge_host import (  # noqa: F401
-    SeekerNodeState, seeker_node_init, seeker_sensor_step, seeker_host_step,
-    seeker_simulate, edge_host_serve_step,
+    SeekerNodeState, seeker_node_init, seeker_sensor_step,
+    seeker_sensor_step_given_corr, seeker_host_step, seeker_simulate,
+    seeker_simulate_reference, edge_host_serve_step, WirePayload,
+    encode_wire_coresets, decode_wire_coresets, wire_payload_nbytes,
 )
+from .fleet import fleet_node_init, seeker_fleet_simulate  # noqa: F401

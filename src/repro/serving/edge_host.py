@@ -43,7 +43,10 @@ from ..core.coreset import importance_coreset
 from ..models.har import HARConfig, har_apply, har_apply_quantized
 
 __all__ = ["SeekerNodeState", "seeker_node_init", "seeker_sensor_step",
-           "seeker_host_step", "seeker_simulate", "edge_host_serve_step"]
+           "seeker_sensor_step_given_corr", "seeker_host_step",
+           "seeker_simulate", "seeker_simulate_reference",
+           "edge_host_serve_step", "WirePayload", "encode_wire_coresets",
+           "decode_wire_coresets", "wire_payload_nbytes"]
 
 
 class SeekerNodeState(NamedTuple):
@@ -85,6 +88,25 @@ def seeker_sensor_step(window: jnp.ndarray, state: SeekerNodeState,
                        corr_threshold: float = 0.95) -> SensorStepOut:
     """One sensing slot on the EH node (paper Fig. 8, all branches traced)."""
     corr = signature_correlations(window, signatures)
+    return seeker_sensor_step_given_corr(
+        window, state, harvested_uj, corr, qdnn_params=qdnn_params,
+        har_cfg=har_cfg, aac_table=aac_table, costs=costs, key=key,
+        k_max=k_max, m_samples=m_samples, quant_bits=quant_bits,
+        corr_threshold=corr_threshold)
+
+
+def seeker_sensor_step_given_corr(
+        window: jnp.ndarray, state: SeekerNodeState,
+        harvested_uj: jnp.ndarray, corr: jnp.ndarray, *, qdnn_params: dict,
+        har_cfg: HARConfig, aac_table: AACTable | None, costs: EnergyCosts,
+        key: jax.Array, k_max: int = 12, m_samples: int = 20,
+        quant_bits: int = 16, corr_threshold: float = 0.95) -> SensorStepOut:
+    """Sensor step with the signature correlations precomputed.
+
+    The fleet engine computes ``corr`` for ALL nodes at once through the
+    batched :func:`repro.kernels.signature_corr_op` hot path, then vmaps this
+    function over nodes; the single-node path computes it per window.
+    """
     max_corr = jnp.max(corr)
     memo_label = jnp.argmax(corr).astype(jnp.int32)
 
@@ -179,9 +201,55 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
                     key: jax.Array | None = None, quant_bits: int = 16):
     """Run the full Seeker system over a window stream.
 
-    windows (N, T, C); harvest (N,) µJ per slot. The stream is replicated to
+    windows (S, T, C); harvest (S,) µJ per slot. The stream is replicated to
     ``n_sensors`` nodes with independent noise phases (sensor ensemble).
     Returns dict of traces: decisions, predictions, payload bytes, energy.
+
+    Thin wrapper over :func:`repro.serving.fleet.seeker_fleet_simulate` with
+    N = ``n_sensors`` replicated nodes — one fully batched scan instead of the
+    per-sensor Python loop of :func:`seeker_simulate_reference`.
+    """
+    from .fleet import seeker_fleet_simulate
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    s, t, c = windows.shape
+    fleet = seeker_fleet_simulate(
+        windows, jnp.broadcast_to(harvest[None], (n_sensors, s)),
+        signatures=signatures, qdnn_params=qdnn_params,
+        host_params=host_params, gen_params=gen_params, har_cfg=har_cfg,
+        aac_table=aac_table, costs=costs, key=key, quant_bits=quant_bits)
+    # sensor ensemble (paper: host ensembles multiple sensors)
+    ens_logits = jnp.mean(fleet["logits"], axis=1)           # (S, L)
+    preds = jnp.argmax(ens_logits, axis=-1)
+    completed = fleet["decisions"][:, 0] != DEFER
+    return {
+        "preds": preds,
+        "labels": labels,
+        "accuracy_completed": jnp.sum((preds == labels) & completed)
+            / jnp.maximum(jnp.sum(completed), 1),
+        "accuracy_scheduled": jnp.mean((preds == labels) & completed),
+        "completed_frac": jnp.mean(completed.astype(jnp.float32)),
+        "decisions": fleet["decisions"][:, 0],
+        "payload_bytes": fleet["payload_bytes"][:, 0],
+        "raw_bytes": float(raw_payload_bytes(t)) * jnp.ones((s,)),
+        "stored_uj": fleet["stored_uj"][:, 0],
+        "k_trace": fleet["k_trace"][:, 0],
+    }
+
+
+def seeker_simulate_reference(windows: jnp.ndarray, labels: jnp.ndarray,
+                              harvest: jnp.ndarray, *, signatures,
+                              qdnn_params, host_params, gen_params,
+                              har_cfg: HARConfig,
+                              aac_table: AACTable | None = None,
+                              costs: EnergyCosts | None = None,
+                              n_sensors: int = 3,
+                              key: jax.Array | None = None,
+                              quant_bits: int = 16):
+    """Legacy per-sensor simulation: a Python loop of single-node scans.
+
+    Kept as the semantics oracle for the fleet engine — tests assert
+    :func:`seeker_fleet_simulate` reproduces these traces node for node.
     """
     costs = costs or EnergyCosts()
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -228,6 +296,59 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Coreset wire format (what actually crosses the pod axis)
+# ---------------------------------------------------------------------------
+
+class WirePayload(NamedTuple):
+    """Quantized cluster-coreset payload as it crosses the wire: int16 center
+    codes, int8 radius codes, int8 counts (modelling the paper's 2 B center /
+    1 B radius / 4-bit count format, §3.2.2), plus the per-window float
+    ranges needed to dequantize on the host side."""
+
+    c_codes: jnp.ndarray    # (B, C, k, 2) int16
+    r_codes: jnp.ndarray    # (B, C, k) int8
+    n_codes: jnp.ndarray    # (B, C, k) int8
+    lo: jnp.ndarray         # (B, 1, 1, 1) center range low
+    hi: jnp.ndarray         # (B, 1, 1, 1) center range high
+    rhi: jnp.ndarray        # (B, 1, 1) radius range high
+
+
+def encode_wire_coresets(centers: jnp.ndarray, radii: jnp.ndarray,
+                         counts: jnp.ndarray) -> WirePayload:
+    """Quantize per-channel cluster coresets for transmission.
+
+    centers (B, C, k, 2), radii (B, C, k), counts (B, C, k) — the batched
+    output of :func:`repro.core.coreset.channel_cluster_coresets`.
+    """
+    lo = jnp.min(centers, axis=(1, 2, 3), keepdims=True)
+    hi = jnp.max(centers, axis=(1, 2, 3), keepdims=True)
+    c_codes = jnp.round((centers - lo) / jnp.maximum(hi - lo, 1e-9)
+                        * 65535.0 - 32768.0).astype(jnp.int16)
+    rhi = jnp.max(radii, axis=(1, 2), keepdims=True)
+    r_codes = jnp.round(radii / jnp.maximum(rhi, 1e-9) * 255.0 - 128.0
+                        ).astype(jnp.int8)
+    n_codes = jnp.clip(counts, 0, 15).astype(jnp.int8)
+    return WirePayload(c_codes, r_codes, n_codes, lo, hi, rhi)
+
+
+def decode_wire_coresets(p: WirePayload):
+    """Host-side dequantization; returns (centers, radii, counts int32)."""
+    centers = ((p.c_codes.astype(jnp.float32) + 32768.0) / 65535.0
+               * (p.hi - p.lo) + p.lo)
+    radii = (p.r_codes.astype(jnp.float32) + 128.0) / 255.0 * p.rhi
+    return centers, radii, p.n_codes.astype(jnp.int32)
+
+
+def wire_payload_nbytes(k: int, channels: int) -> int:
+    """Bytes the quantized code tensors put on the wire per window (the
+    collective_permute operand size, excluding the 3 float range scalars):
+    per channel, k x (2-D int16 center + int8 radius + int8 count) — the
+    paper's §3.2.2 accounting at the tensor field widths."""
+    return channels * cluster_payload_bytes(k, bytes_center=4, bytes_radius=1,
+                                            bits_count=8)
+
+
+# ---------------------------------------------------------------------------
 # Distributed edge-host step (pod-axis disaggregation, for the dry-run)
 # ---------------------------------------------------------------------------
 
@@ -258,40 +379,26 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
         # centers (B, C, k, 2), radii (B, C, k), counts (B, C, k)
         # quantized wire format (2B centers / 1B radii / 4b counts modelled
         # as int16/int8/int8 tensors: what collective_permute actually moves)
-        lo = jnp.min(centers, axis=(1, 2, 3), keepdims=True)
-        hi = jnp.max(centers, axis=(1, 2, 3), keepdims=True)
-        c_codes = jnp.round((centers - lo) / jnp.maximum(hi - lo, 1e-9)
-                            * 65535.0 - 32768.0).astype(jnp.int16)
-        rhi = jnp.max(radii, axis=(1, 2), keepdims=True)
-        r_codes = jnp.round(radii / jnp.maximum(rhi, 1e-9) * 255.0 - 128.0
-                            ).astype(jnp.int8)
-        n_codes = jnp.clip(counts, 0, 15).astype(jnp.int8)
+        payload = encode_wire_coresets(centers, radii, counts)
 
         # --- cross-pod transfer: coreset payload only ----------------------
         npods = jax.lax.psum(1, "pod")
         perm = [(i, (i + 1) % npods) for i in range(npods)]
-        c_codes = jax.lax.ppermute(c_codes, "pod", perm)
-        r_codes = jax.lax.ppermute(r_codes, "pod", perm)
-        n_codes = jax.lax.ppermute(n_codes, "pod", perm)
-        lo = jax.lax.ppermute(lo, "pod", perm)
-        hi = jax.lax.ppermute(hi, "pod", perm)
-        rhi = jax.lax.ppermute(rhi, "pod", perm)
+        payload = WirePayload(*(jax.lax.ppermute(f, "pod", perm)
+                                for f in payload))
 
         # --- host side: recover the peer's coresets and infer ---------------
-        centers_r = ((c_codes.astype(jnp.float32) + 32768.0) / 65535.0
-                     * (hi - lo) + lo)
-        radii_r = (r_codes.astype(jnp.float32) + 128.0) / 255.0 * rhi
-        counts_r = n_codes.astype(jnp.int32)
+        centers_r, radii_r, counts_r = decode_wire_coresets(payload)
         from ..core.coreset import ClusterCoreset
         keys = jax.random.split(key, win.shape[0])
         wins_rec = jax.vmap(lambda c, r, n, kk: recover_cluster_window(
             ClusterCoreset(c, r, n), kk, t))(centers_r, radii_r, counts_r, keys)
         return har_apply(host_params, wins_rec)
 
-    fn = jax.shard_map(
-        tier, mesh=mesh,
+    from ..sharding import shard_map_compat
+    fn = shard_map_compat(
+        tier, mesh,
         in_specs=(P(("pod", "data")) if "pod" in mesh.shape else P("data"),),
         out_specs=P(("pod", "data")) if "pod" in mesh.shape else P("data"),
-        axis_names=frozenset(a for a in ("pod", "data") if a in mesh.shape),
-        check_vma=False)
+        axis_names=frozenset(a for a in ("pod", "data") if a in mesh.shape))
     return fn(windows)

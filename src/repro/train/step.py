@@ -184,11 +184,12 @@ def make_compressed_train_step(cfg: ModelConfig, hyper: TrainHyper,
     def train_step(state, batch):
         state_spec = jax.tree_util.tree_map(lambda _: P(), state)
         metric_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
-        fn = jax.shard_map(
-            step_body, mesh=mesh,
+        from ..sharding import shard_map_compat
+        fn = shard_map_compat(
+            step_body, mesh,
             in_specs=(state_spec, batch_spec(batch)),
             out_specs=(state_spec, metric_spec),
-            axis_names=manual, check_vma=False)
+            axis_names=manual)
         return fn(state, batch)
 
     return train_step

@@ -15,7 +15,7 @@ from repro.kernels import ref
 @pytest.mark.parametrize("k", [4, 12, 16])
 def test_kmeans_kernel_matches_ref(b, n, d, k, key):
     pts = jax.random.normal(key, (b, n, d))
-    c1, r1, n1 = kmeans_coreset_op(pts, k=k)
+    c1, r1, n1 = kmeans_coreset_op(pts, k=k, impl="pallas")
     c2, r2, n2 = ref.kmeans_coreset_ref(pts, k=k)
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
                                rtol=1e-5, atol=1e-5)
@@ -27,7 +27,7 @@ def test_kmeans_kernel_matches_ref(b, n, d, k, key):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_kmeans_kernel_dtypes(dtype, key):
     pts = jax.random.normal(key, (8, 60, 4)).astype(dtype)
-    c1, r1, n1 = kmeans_coreset_op(pts, k=12)
+    c1, r1, n1 = kmeans_coreset_op(pts, k=12, impl="pallas")
     c2, r2, n2 = ref.kmeans_coreset_ref(pts.astype(jnp.float32), k=12)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
@@ -38,7 +38,7 @@ def test_kmeans_kernel_dtypes(dtype, key):
 @pytest.mark.parametrize("m", [8, 20])
 def test_importance_kernel_matches_ref(b, t, c, m, key):
     w = jax.random.normal(key, (b, t, c))
-    i1, v1, w1 = importance_select_op(w, m=m)
+    i1, v1, w1 = importance_select_op(w, m=m, impl="pallas")
     i2, v2, w2 = ref.importance_select_ref(w, m=m)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
@@ -51,7 +51,7 @@ def test_importance_kernel_matches_ref(b, t, c, m, key):
 def test_corr_kernel_matches_ref(b, l, key):
     w = jax.random.normal(key, (b, 60, 3))
     s = jax.random.normal(jax.random.fold_in(key, 1), (l, 60, 3))
-    c1 = signature_corr_op(w, s)
+    c1 = signature_corr_op(w, s, impl="pallas")
     c2 = ref.signature_corr_ref(w, s)
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
                                rtol=1e-4, atol=1e-5)
@@ -60,7 +60,7 @@ def test_corr_kernel_matches_ref(b, l, key):
 
 def test_corr_kernel_self_correlation(key):
     w = jax.random.normal(key, (5, 60, 3))
-    c = signature_corr_op(w, w)
+    c = signature_corr_op(w, w, impl="pallas")
     np.testing.assert_allclose(np.asarray(jnp.diag(c)), 1.0, atol=1e-4)
 
 
@@ -69,7 +69,7 @@ def test_corr_kernel_self_correlation(key):
 @pytest.mark.parametrize("per_channel", [False, True])
 def test_quant_kernel_matches_ref(bits, shape, per_channel, key):
     x = jax.random.normal(key, shape) * 3
-    q1 = fake_quant_op(x, bits, per_channel=per_channel)
+    q1 = fake_quant_op(x, bits, per_channel=per_channel, impl="pallas")
     if per_channel and x.ndim == 1:
         pytest.skip("per-channel needs >=2 dims")
     x2d = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
@@ -81,6 +81,50 @@ def test_quant_kernel_matches_ref(bits, shape, per_channel, key):
 def test_quant_error_bound(key):
     x = jax.random.normal(key, (64, 64))
     for bits in (8, 12, 16):
-        q = fake_quant_op(x, bits)
+        q = fake_quant_op(x, bits, impl="pallas")
         scale = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1)
         assert float(jnp.max(jnp.abs(q - x))) <= scale / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch (ops.py): default impl resolves per backend, and both
+# implementations agree wherever the serving path may pick either.
+# ---------------------------------------------------------------------------
+
+def test_default_impl_matches_backend():
+    from repro.kernels.ops import default_impl
+    expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert default_impl() == expect
+
+
+def test_dispatch_impls_agree_on_corr_and_quant(key):
+    w = jax.random.normal(key, (6, 60, 3))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (12, 60, 3))
+    np.testing.assert_allclose(
+        np.asarray(signature_corr_op(w, s, impl="ref")),
+        np.asarray(signature_corr_op(w, s, impl="pallas")),
+        rtol=1e-4, atol=1e-5)
+    x = jax.random.normal(key, (4, 60, 3)) * 3
+    np.testing.assert_allclose(
+        np.asarray(fake_quant_op(x, 12, impl="ref")),
+        np.asarray(fake_quant_op(x, 12, impl="pallas")),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_dispatch_ref_is_vmap_and_scan_safe(key):
+    """The fleet engine vmaps the quant path and scans the corr path — the
+    dispatched default must survive both transforms (interpret-mode Pallas
+    historically has not, which is why ref is the off-TPU default)."""
+    w = jax.random.normal(key, (5, 60, 3))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (4, 60, 3))
+    per = jax.vmap(lambda x: fake_quant_op(x[None], 8)[0])(w)
+    assert per.shape == w.shape
+
+    def step(carry, win):
+        return carry, signature_corr_op(win[None], s)[0]
+
+    _, corr = jax.lax.scan(step, 0, w)
+    assert corr.shape == (5, 4)
+    np.testing.assert_allclose(np.asarray(corr),
+                               np.asarray(signature_corr_op(w, s)),
+                               rtol=1e-5, atol=1e-6)

@@ -97,14 +97,15 @@ def test_spec_for_prefix_fallback():
     import jax
     from jax.sharding import PartitionSpec as P
     from repro import sharding as shd
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.sharding import make_mesh_compat
+    mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
     s = shd.spec_for(("batch",), (8,), mesh, shd.PURE_DP_RULES)
     assert s == P(("pod", "data", "model")), s
     s = shd.spec_for(("batch",), (4,), mesh, shd.PURE_DP_RULES)
     assert s == P(("pod", "data")), s
     s = shd.spec_for(("batch",), (2,), mesh, shd.PURE_DP_RULES)
-    assert s == P(("pod",)), s
+    assert s in (P("pod"), P(("pod",))), s   # singleton unwraps; newer jax
+    # normalizes the two spellings to equality, 0.4.x does not
     s = shd.spec_for(("batch",), (3,), mesh, shd.PURE_DP_RULES)
     assert s == P(None), s
     print("OK")
@@ -120,10 +121,9 @@ def test_elastic_remesh_restore():
     import tempfile, jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import save_checkpoint, restore_checkpoint
-    mesh8 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
-    mesh24 = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh_compat
+    mesh8 = make_mesh_compat((8,), ("data",))
+    mesh24 = make_mesh_compat((2, 4), ("data", "model"))
     x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                        NamedSharding(mesh8, P("data", None)))
     tree = {"w": x}

@@ -32,8 +32,8 @@ def test_spec_for_divisibility_fallback():
     import jax
     from jax.sharding import PartitionSpec as P
     from repro import sharding as shd
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding import make_mesh_compat
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
     # divisible: shard; non-divisible: replicate
     s = shd.spec_for(("batch", "ff"), (8, 12), mesh, shd.FSDP_RULES)
     assert s == P("data", "model"), s
@@ -106,8 +106,8 @@ def test_compressed_dp_reduces_collective_bytes():
     from repro.train import (TrainHyper, init_train_state,
                              make_compressed_train_step, make_train_step)
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.sharding import make_mesh_compat
+    mesh = make_mesh_compat((8,), ("data",))
     cfg = ModelConfig(name="t", vocab=256, d_model=64, n_layers=2, n_heads=4,
                       n_kv=2, d_ff=256, dtype=jnp.float32)
     hyper = TrainHyper()

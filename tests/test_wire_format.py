@@ -1,0 +1,98 @@
+"""Wire-format tests for the distributed edge-host step: the int16/int8
+quantize -> ppermute -> dequantize path and its byte accounting (the paper's
+2 B center / 1 B radius / 4-bit count format, §3.2.2, scaled to tensors)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core.coreset import channel_cluster_coresets, cluster_payload_bytes
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import (decode_wire_coresets, edge_host_serve_step,
+                           encode_wire_coresets, wire_payload_nbytes)
+
+K = 12
+
+
+@pytest.fixture(scope="module")
+def coresets():
+    wins, _ = har_stream(jax.random.PRNGKey(3), 4)
+    centers, radii, counts = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=K, iters=4))(wins)
+    return centers, radii, counts   # (B, C, k, 2), (B, C, k), (B, C, k)
+
+
+def test_wire_dtypes_and_code_ranges(coresets):
+    p = encode_wire_coresets(*coresets)
+    assert p.c_codes.dtype == jnp.int16
+    assert p.r_codes.dtype == jnp.int8
+    assert p.n_codes.dtype == jnp.int8
+    # codes must span the signed ranges without wrapping
+    assert int(p.c_codes.min()) >= -32768 and int(p.c_codes.max()) <= 32767
+    assert int(p.r_codes.min()) >= -128 and int(p.r_codes.max()) <= 127
+    assert int(p.n_codes.min()) >= 0 and int(p.n_codes.max()) <= 15
+
+
+def test_wire_roundtrip_error_bounds(coresets):
+    """Dequantized centers/radii are within one quantization step of the
+    originals (int16 over the center range, int8 over the radius range)."""
+    centers, radii, counts = coresets
+    p = encode_wire_coresets(centers, radii, counts)
+    centers_r, radii_r, counts_r = decode_wire_coresets(p)
+
+    c_step = np.asarray((p.hi - p.lo) / 65535.0)            # (B,1,1,1)
+    c_err = np.abs(np.asarray(centers_r - centers))
+    assert (c_err <= c_step * 0.5 + 1e-5).all(), c_err.max()
+
+    r_step = np.asarray(p.rhi / 255.0)                      # (B,1,1)
+    r_err = np.abs(np.asarray(radii_r - radii))
+    assert (r_err <= r_step * 0.5 + 1e-5).all(), r_err.max()
+
+    # counts <= 15 survive exactly (the 4-bit field)
+    small = np.asarray(counts) <= 15
+    np.testing.assert_array_equal(np.asarray(counts_r)[small],
+                                  np.asarray(counts)[small])
+
+
+def test_wire_counts_clip_at_4bit():
+    centers = jnp.zeros((1, 1, 3, 2))
+    radii = jnp.ones((1, 1, 3))
+    counts = jnp.asarray([[[2, 15, 60]]])
+    p = encode_wire_coresets(centers, radii, counts)
+    np.testing.assert_array_equal(np.asarray(p.n_codes)[0, 0], [2, 15, 15])
+
+
+def test_wire_payload_byte_accounting(coresets):
+    """The code tensors' actual nbytes match wire_payload_nbytes, which is
+    cluster_payload_bytes with the tensor field widths (2-D int16 center =
+    4 B, int8 radius, counts byte-padded) per channel."""
+    centers, radii, counts = coresets
+    b, c, k, _ = centers.shape
+    p = encode_wire_coresets(centers, radii, counts)
+    actual = p.c_codes.nbytes + p.r_codes.nbytes + p.n_codes.nbytes
+    assert actual == b * wire_payload_nbytes(k, c)
+    assert wire_payload_nbytes(k, c) == c * cluster_payload_bytes(
+        k, bytes_center=4, bytes_radius=1, bits_count=8)
+    # and the paper's 42-B headline format is the 2B/1B/4-bit instance
+    assert cluster_payload_bytes(12) == 42
+    # coreset wire bytes stay well under the raw window even in tensor form
+    assert wire_payload_nbytes(k, c) < 240 * c
+
+
+def test_serve_step_roundtrip_on_pod_mesh():
+    """edge_host_serve_step end to end on a 1x1 ("pod","data") mesh: the
+    payload crosses ppermute (self-edge), is dequantized and recovered, and
+    host inference returns finite logits."""
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    wins, _ = har_stream(key, 4)
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    logits = edge_host_serve_step(
+        wins, signatures=class_signatures(), qdnn_params=params,
+        host_params=params, gen_params=gen, har_cfg=HAR, mesh=mesh, k=K)
+    assert logits.shape == (4, HAR.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
