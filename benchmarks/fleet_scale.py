@@ -1,4 +1,5 @@
-"""Fleet-scale Seeker throughput: one batched scan vs fleet size.
+"""Fleet-scale Seeker throughput: batched scan vs fleet size, single-device
+and sharded.
 
 ``PYTHONPATH=src python -m benchmarks.fleet_scale`` (or via benchmarks.run)
 
@@ -6,7 +7,14 @@ Sweeps N ∈ {3, 30, 300, 3000} independent EH nodes with heterogeneous
 harvest traces through :func:`repro.serving.seeker_fleet_simulate` and
 reports simulated windows/second and bytes-on-wire vs the raw-transmission
 baseline — the fleet-engine scaling story on top of the paper's per-node
-communication reduction.
+communication reduction.  The same sweep then runs through
+:func:`repro.serving.seeker_fleet_simulate_sharded` with the node axis split
+over every visible device (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a CPU mesh), so
+the sharded-vs-single-device trajectory accumulates alongside it.
+
+``quick=True`` (the CI bench-smoke job) shrinks to SLOTS=2 and tiny fleets —
+including a non-divisible N to keep the pad-to-quantum path exercised.
 """
 from __future__ import annotations
 
@@ -18,56 +26,73 @@ from repro.core import DEFER, fleet_harvest_traces
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_stream
 from repro.models.har import har_init
-from repro.serving import seeker_fleet_simulate
+from repro.serving import seeker_fleet_simulate, seeker_fleet_simulate_sharded
+from repro.sharding import make_mesh_compat
 
 from .common import timeit_us
 
 SLOTS = 8
 FLEET_SIZES = (3, 30, 300, 3000)
+QUICK_SLOTS = 2
+QUICK_FLEET_SIZES = (3, 13)     # 13: non-divisible N -> pad/mask path
 
 
-def run() -> list[dict]:
+def run(quick: bool = False) -> list[dict]:
+    slots = QUICK_SLOTS if quick else SLOTS
+    sizes = QUICK_FLEET_SIZES if quick else FLEET_SIZES
     key = jax.random.PRNGKey(0)
     # untrained weights: identical FLOPs/bytes to trained ones, and this
     # benchmark measures engine throughput, not accuracy
     params = har_init(key, HAR)
     gen = init_generator(key, HAR.window, HAR.channels)
     sigs = class_signatures()
-    wins, _ = har_stream(key, SLOTS)
+    wins, _ = har_stream(key, slots)
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
 
     rows = []
-    for n in FLEET_SIZES:
-        harvest = fleet_harvest_traces(key, n, SLOTS)
-        last = {}
+    for sharded in (False, True):
+        for n in sizes:
+            harvest = fleet_harvest_traces(key, n, slots)
+            last = {}
 
-        def sim():
-            last["res"] = seeker_fleet_simulate(
-                wins, harvest, signatures=sigs, qdnn_params=params,
-                host_params=params, gen_params=gen, har_cfg=HAR)
-            return last["res"]["decisions"]
+            def sim():
+                if sharded:
+                    last["res"] = seeker_fleet_simulate_sharded(
+                        wins, harvest, signatures=sigs, qdnn_params=params,
+                        host_params=params, gen_params=gen, har_cfg=HAR,
+                        mesh=mesh)
+                else:
+                    last["res"] = seeker_fleet_simulate(
+                        wins, harvest, signatures=sigs, qdnn_params=params,
+                        host_params=params, gen_params=gen, har_cfg=HAR)
+                return last["res"]["decisions"]
 
-        iters = 3 if n <= 300 else 1
-        us = timeit_us(sim, iters=iters, warmup=1)
-        res = last["res"]
-        n_windows = n * SLOTS
-        sent = int(jnp.sum(res["decisions"] != DEFER))
-        wire = float(res["bytes_on_wire"])
-        raw = sent * float(res["raw_bytes_per_window"])
-        rows.append({
-            "name": f"fleet_scale/n{n}",
-            "us_per_call": us,
-            "windows_per_s": n_windows / (us / 1e6),
-            "bytes_on_wire": wire,
-            "raw_bytes_equiv": float(raw),
-            "reduction_x": raw / max(wire, 1e-9),
-            "completed_frac": sent / n_windows,
-        })
+            iters = 1 if (quick or n > 300) else 3
+            us = timeit_us(sim, iters=iters, warmup=1)
+            res = last["res"]
+            n_windows = n * slots
+            sent = int(jnp.sum(res["decisions"] != DEFER))
+            wire = float(res["bytes_on_wire"])
+            raw = sent * float(res["raw_bytes_per_window"])
+            row = {
+                "name": f"fleet_scale/{'sharded_' if sharded else ''}n{n}",
+                "us_per_call": us,
+                "windows_per_s": n_windows / (us / 1e6),
+                "bytes_on_wire": wire,
+                "raw_bytes_equiv": float(raw),
+                "reduction_x": raw / max(wire, 1e-9),
+                "completed_frac": sent / n_windows,
+            }
+            if sharded:
+                row["devices"] = jax.device_count()
+                row["padded_nodes"] = res["padded_nodes"]
+            rows.append(row)
     return rows
 
 
 if __name__ == "__main__":
     for row in run():
-        print(f"{row['name']:>18s}  {row['windows_per_s']:>10.0f} win/s  "
+        print(f"{row['name']:>26s}  {row['windows_per_s']:>10.0f} win/s  "
               f"{row['bytes_on_wire']:>12.0f} B on wire  "
               f"({row['reduction_x']:.1f}x under raw, "
               f"{100 * row['completed_frac']:.0f}% completed)")

@@ -1,16 +1,24 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--out F]``
 
 Prints ``name,us_per_call,derived`` CSV (derived = the module's headline
 metric per row) followed by human-readable tables, and writes the raw rows
-to experiments/bench_results.json.
+to experiments/bench_results.json (or ``--out``).
+
+``--quick`` runs tiny shapes (the CI bench-smoke job: crash detection + a
+perf-trajectory artifact, not a measurement) on every module whose ``run``
+accepts a ``quick`` kwarg.  Any benchmark that raises marks the whole run
+failed: the harness still executes the remaining modules, then exits
+non-zero so CI surfaces the breakage instead of swallowing it.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
+import sys
 import time
 
 MODULES = [
@@ -41,20 +49,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single module (substring match)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes for CI smoke (modules whose run() "
+                         "takes a quick kwarg)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="result JSON path (default: "
+                         "experiments/bench_results.json)")
     args = ap.parse_args()
 
     import importlib
     all_rows: list[dict] = []
+    failed: list[str] = []
     print("name,us_per_call,derived")
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
         t0 = time.time()
-        mod = importlib.import_module(f"benchmarks.{modname}")
         try:
-            rows = mod.run()
-        except Exception as e:  # keep the harness alive per-module
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+                rows = mod.run(quick=True)
+            else:
+                rows = mod.run()
+        except Exception as e:  # keep the harness alive per-module ...
             print(f"{modname}/ERROR,0,{type(e).__name__}:{e}")
+            failed.append(modname)          # ... but fail the run at the end
             continue
         for row in rows:
             print(f"{row['name']},{row.get('us_per_call', 0.0):.1f},"
@@ -63,12 +82,14 @@ def main() -> None:
         all_rows.append({"name": f"_meta/{modname}",
                          "wall_s": round(time.time() - t0, 1)})
 
-    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
-                       "bench_results.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+    out = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "bench_results.json")
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1)
     print(f"# wrote {os.path.normpath(out)}")
+    if failed:
+        sys.exit(f"benchmarks raised: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

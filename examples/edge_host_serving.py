@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python examples/edge_host_serving.py [--source rf]
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 64
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/edge_host_serving.py --fleet 64 --sharded
 
 Trains the HAR classifier, builds the memoization signature bank, then
 streams activity windows through the full Seeker decision flow under a
@@ -25,7 +27,9 @@ from repro.core import (DEFER, EH_SOURCES, fleet_harvest_traces,
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_dataset, har_stream
 from repro.models.har import har_apply, har_init
-from repro.serving import seeker_fleet_simulate, seeker_simulate
+from repro.serving import (seeker_fleet_simulate,
+                           seeker_fleet_simulate_sharded, seeker_simulate)
+from repro.sharding import make_mesh_compat
 
 
 def train_classifier(key):
@@ -48,16 +52,29 @@ def train_classifier(key):
     return params
 
 
-def fleet_demo(key, params, gen, wins, labels, n_nodes: int):
-    """N heterogeneous nodes in one batched scan: the fleet engine."""
+def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
+               sharded: bool = False):
+    """N heterogeneous nodes in one batched scan: the fleet engine.
+
+    ``sharded`` splits the node axis over every visible device (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get a CPU
+    mesh) — same traces, fleet aggregates psum-ed across shards.
+    """
     import time
 
     s = wins.shape[0]
     harvest = fleet_harvest_traces(key, n_nodes, s)
     t0 = time.time()
-    res = seeker_fleet_simulate(wins, harvest, signatures=class_signatures(),
-                                qdnn_params=params, host_params=params,
-                                gen_params=gen, har_cfg=HAR)
+    if sharded:
+        mesh = make_mesh_compat((jax.device_count(),), ("data",))
+        res = seeker_fleet_simulate_sharded(
+            wins, harvest, signatures=class_signatures(), qdnn_params=params,
+            host_params=params, gen_params=gen, har_cfg=HAR, mesh=mesh,
+            labels=labels)
+    else:
+        res = seeker_fleet_simulate(
+            wins, harvest, signatures=class_signatures(), qdnn_params=params,
+            host_params=params, gen_params=gen, har_cfg=HAR)
     jax.block_until_ready(res["decisions"])
     dt = time.time() - t0
 
@@ -67,6 +84,12 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int):
         & completed
     print(f"\nfleet of {n_nodes} nodes x {s} slots in {dt:.2f}s "
           f"({n_nodes * s / dt:.0f} windows/sec incl. compile)")
+    if sharded:
+        print(f"node axis sharded over {jax.device_count()} devices "
+              f"(mesh axes {res['node_axes']}, {res['padded_nodes']} inert "
+              f"pad nodes); decision histogram "
+              f"{np.asarray(res['decision_histogram']).tolist()}, "
+              f"fleet accuracy {100 * float(res['fleet_accuracy']):.1f}%")
     print("per-modality stats (nodes cycle rf/wifi/piezo/solar):")
     node_src = fleet_source_assignment(n_nodes)
     for si, src in enumerate(EH_SOURCES):
@@ -90,6 +113,10 @@ def main():
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="simulate N heterogeneous nodes with the fleet "
                          "engine instead of the 3-sensor ensemble")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --fleet: shard the node axis over every "
+                         "visible device (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -99,7 +126,8 @@ def main():
     wins, labels = har_stream(key, args.windows)
 
     if args.fleet:
-        fleet_demo(key, params, gen, wins, labels, args.fleet)
+        fleet_demo(key, params, gen, wins, labels, args.fleet,
+                   sharded=args.sharded)
         return
 
     harvest = harvest_trace(key, args.windows, args.source)

@@ -94,12 +94,17 @@ def signature_corr_op(windows: jnp.ndarray, signatures: jnp.ndarray,
 
     This is the fleet simulator's memoization hot path: every node correlates
     its fresh window against the whole signature bank each slot, so the
-    batched form (B = all fleet nodes) is the one that must scale.
+    batched form (B = all fleet nodes) is the one that must scale.  Under the
+    sharded fleet engine this op runs *inside* the shard_map manual region, so
+    B is the local node tile (N/d) — the block sizes clamp to the actual tile
+    so a small shard is one kernel block instead of being padded up 8x.
     """
     if _resolve_impl(impl) == "ref":
         return ref.signature_corr_ref(windows.astype(jnp.float32),
                                       signatures.astype(jnp.float32))
     interpret = default_interpret() if interpret is None else interpret
+    block_b = max(1, min(block_b, windows.shape[0]))
+    block_l = max(1, min(block_l, signatures.shape[0]))
     wp, b = _pad_axis(windows, 0, block_b)
     # Signatures pad with zeros NOT edge: a zero signature correlates ~0 and
     # never wins the memo argmax.

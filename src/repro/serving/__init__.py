@@ -2,7 +2,10 @@ from .engine import generate, greedy_sample, temperature_sample  # noqa: F401
 from .edge_host import (  # noqa: F401
     SeekerNodeState, seeker_node_init, seeker_sensor_step,
     seeker_sensor_step_given_corr, seeker_host_step, seeker_simulate,
-    seeker_simulate_reference, edge_host_serve_step, WirePayload,
-    encode_wire_coresets, decode_wire_coresets, wire_payload_nbytes,
+    seeker_simulate_reference, edge_host_serve_step, fleet_serve_step,
+    WirePayload, encode_wire_coresets, decode_wire_coresets,
+    wire_payload_nbytes,
 )
-from .fleet import fleet_node_init, seeker_fleet_simulate  # noqa: F401
+from .fleet import (  # noqa: F401
+    fleet_node_init, seeker_fleet_simulate, seeker_fleet_simulate_sharded,
+)

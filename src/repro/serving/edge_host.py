@@ -45,8 +45,9 @@ from ..models.har import HARConfig, har_apply, har_apply_quantized
 __all__ = ["SeekerNodeState", "seeker_node_init", "seeker_sensor_step",
            "seeker_sensor_step_given_corr", "seeker_host_step",
            "seeker_simulate", "seeker_simulate_reference",
-           "edge_host_serve_step", "WirePayload", "encode_wire_coresets",
-           "decode_wire_coresets", "wire_payload_nbytes"]
+           "edge_host_serve_step", "fleet_serve_step", "WirePayload",
+           "encode_wire_coresets", "decode_wire_coresets",
+           "wire_payload_nbytes"]
 
 
 class SeekerNodeState(NamedTuple):
@@ -352,6 +353,28 @@ def wire_payload_nbytes(k: int, channels: int) -> int:
 # Distributed edge-host step (pod-axis disaggregation, for the dry-run)
 # ---------------------------------------------------------------------------
 
+def _edge_encode_coresets(win: jnp.ndarray, k: int) -> WirePayload:
+    """Edge half of a serving tier: per-channel cluster coresets for the
+    LOCAL window batch (B, T, C), quantized to the wire format — the only
+    tensors that ever cross the mesh."""
+    centers, radii, counts = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=k, iters=4))(win)
+    return encode_wire_coresets(centers, radii, counts)
+
+
+def _host_recover_infer(payload: WirePayload, host_params: dict,
+                        key: jax.Array, t: int) -> jnp.ndarray:
+    """Host half of a serving tier: dequantize a received payload batch,
+    recover windows, run the full-precision DNN -> (B, n_classes) logits."""
+    from ..core.coreset import ClusterCoreset
+
+    centers, radii, counts = decode_wire_coresets(payload)
+    keys = jax.random.split(key, centers.shape[0])
+    wins_rec = jax.vmap(lambda c, r, n, kk: recover_cluster_window(
+        ClusterCoreset(c, r, n), kk, t))(centers, radii, counts, keys)
+    return har_apply(host_params, wins_rec)
+
+
 def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
                          host_params, gen_params, har_cfg: HARConfig,
                          mesh, k: int = 12, quant_bits: int = 16,
@@ -373,13 +396,10 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
     t = windows.shape[1]
 
     def tier(win):
-        # --- edge side: local sensors (per-channel coresets) ----------------
-        centers, radii, counts = jax.vmap(
-            lambda w: channel_cluster_coresets(w, k=k, iters=4))(win)
-        # centers (B, C, k, 2), radii (B, C, k), counts (B, C, k)
-        # quantized wire format (2B centers / 1B radii / 4b counts modelled
-        # as int16/int8/int8 tensors: what collective_permute actually moves)
-        payload = encode_wire_coresets(centers, radii, counts)
+        # --- edge side: local sensors, quantized wire format (2B centers /
+        # 1B radii / 4b counts modelled as int16/int8/int8 tensors: what
+        # collective_permute actually moves) ---------------------------------
+        payload = _edge_encode_coresets(win, k)
 
         # --- cross-pod transfer: coreset payload only ----------------------
         npods = jax.lax.psum(1, "pod")
@@ -388,12 +408,7 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
                                 for f in payload))
 
         # --- host side: recover the peer's coresets and infer ---------------
-        centers_r, radii_r, counts_r = decode_wire_coresets(payload)
-        from ..core.coreset import ClusterCoreset
-        keys = jax.random.split(key, win.shape[0])
-        wins_rec = jax.vmap(lambda c, r, n, kk: recover_cluster_window(
-            ClusterCoreset(c, r, n), kk, t))(centers_r, radii_r, counts_r, keys)
-        return har_apply(host_params, wins_rec)
+        return _host_recover_infer(payload, host_params, key, t)
 
     from ..sharding import shard_map_compat
     fn = shard_map_compat(
@@ -402,3 +417,67 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
         out_specs=P(("pod", "data")) if "pod" in mesh.shape else P("data"),
         axis_names=frozenset(a for a in ("pod", "data") if a in mesh.shape))
     return fn(windows)
+
+
+def fleet_serve_step(windows: jnp.ndarray, *, host_params,
+                     har_cfg: HARConfig, mesh, k: int = 12,
+                     key: jax.Array | None = None):
+    """Sharded-fleet edge→host tier: gather ONLY coreset payloads to the host.
+
+    The companion to :func:`repro.serving.fleet.seeker_fleet_simulate_sharded`
+    for the offload decisions (D3): each shard builds per-channel cluster
+    coresets for its *local* node tile and quantizes them to the compact wire
+    format; the int16/int8 code tensors are then ``all_gather``-ed over the
+    fleet's node axes (minor axis first, so global node order is preserved)
+    to the host tier, which dequantizes, recovers windows, and runs the
+    full-precision DNN for the whole fleet.  Raw windows and node state never
+    leave their shard — only coreset bytes cross the mesh, reproducing the
+    paper's edge-host communication asymmetry at the collective level.
+
+    Args:
+        windows: (N, T, C) fleet sensor windows, one per node.  N that does
+            not divide the mesh quantum is padded with zero windows and the
+            padding is sliced off the returned logits.
+        mesh: mesh whose FLEET_RULES node axes carry the fleet.
+
+    Returns dict: ``host_logits`` (N, L) for every node, ``wire_bytes`` —
+    total quantized payload bytes gathered across the mesh, ``raw_bytes`` —
+    the raw-window equivalent (the communication the gather avoided).
+    """
+    from ..sharding import node_mesh_axes, shard_map_compat
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n, t, c = windows.shape
+    axis_names, quantum = node_mesh_axes(mesh)
+    if not axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has none of the FLEET_RULES node axes")
+    pad = (-n) % quantum
+    if pad:
+        windows = jnp.pad(windows, ((0, pad), (0, 0), (0, 0)))
+
+    def tier(win, kk):
+        # --- edge side: coresets + wire quantization for LOCAL nodes only --
+        payload = _edge_encode_coresets(win, k)
+
+        # --- node axis -> host tier: the quantized codes are ALL that moves.
+        # Gather the minor mesh axis first so the concatenated node order
+        # matches the global (pod-major) layout of the padded fleet.
+        for ax in reversed(axis_names):
+            payload = WirePayload(*(jax.lax.all_gather(f, ax, axis=0,
+                                                       tiled=True)
+                                    for f in payload))
+
+        # --- host side: dequantize, recover, full-precision inference ------
+        return _host_recover_infer(payload, host_params, kk, t)
+        # -> (N+pad, L) replicated
+
+    from jax.sharding import PartitionSpec as P
+    fn = shard_map_compat(tier, mesh, in_specs=(P(axis_names), P()),
+                          out_specs=P(), axis_names=frozenset(axis_names))
+    logits = fn(windows, key)[:n]
+    return {
+        "host_logits": logits,
+        "wire_bytes": n * wire_payload_nbytes(k, c),
+        "raw_bytes": n * raw_payload_bytes(t) * c,
+    }

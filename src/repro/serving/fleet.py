@@ -1,4 +1,4 @@
-"""Fleet-scale batched Seeker simulator.
+"""Fleet-scale batched Seeker simulator, single-device and sharded.
 
 The single-node simulation (:func:`repro.serving.edge_host.seeker_simulate`)
 models one EH-WSN; production serving means *fleets* — thousands of
@@ -18,6 +18,18 @@ phase.  :func:`seeker_fleet_simulate` runs all of them in ONE jitted
 * the scan carry is donated to the jitted run, so the stacked node state is
   updated in place across time steps instead of being reallocated.
 
+:func:`seeker_fleet_simulate_sharded` scales the node axis past one device:
+the stacked state, per-node keys, harvest traces and (N, S, T, C) window
+streams are split over the mesh axes the ``"nodes"`` logical axis resolves
+to (:data:`repro.sharding.FLEET_RULES`: ("pod", "data")) via
+``shard_map_compat``, and the *entire* scan runs inside the manual region —
+node state never leaves its shard.  Only fleet-level aggregates (bytes on
+wire, the decision histogram, accuracy counts) cross shards, as ``psum``
+scalars.  Fleets that don't divide the mesh quantum are padded with *inert*
+nodes (zero harvest, masked out of every aggregate) and the padding is
+sliced off the returned traces, so sharded results are bit-identical to the
+single-device engine for any N.
+
 Harvest traces are per-node (shape (N, S)): heterogeneous energy income is
 the point of fleet simulation — per-node energy dynamics diverge (Gobieski et
 al., arXiv:1810.07751), and the Seeker companion evaluation (arXiv:2204.13106)
@@ -29,16 +41,22 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.aac import AACTable
 from ..core.coreset import raw_payload_bytes
+from ..core.decision import DEFER
 from ..core.energy import EnergyCosts, predictor_init
 from ..kernels.ops import signature_corr_op
 from ..models.har import HARConfig
+from ..sharding import make_mesh_compat, node_mesh_axes, shard_map_compat
 from .edge_host import (SeekerNodeState, seeker_host_step,
                         seeker_sensor_step_given_corr)
 
-__all__ = ["fleet_node_init", "seeker_fleet_simulate"]
+__all__ = ["fleet_node_init", "seeker_fleet_simulate",
+           "seeker_fleet_simulate_sharded"]
+
+N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the fleet histogram
 
 
 def fleet_node_init(n_nodes: int, predictor_window: int = 8,
@@ -50,10 +68,96 @@ def fleet_node_init(n_nodes: int, predictor_window: int = 8,
         prev_label=jnp.zeros((n_nodes,), jnp.int32))
 
 
+def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
+                     k_max: int, m_samples: int, corr_threshold: float,
+                     shared_stream: bool, t: int, node_block: int | None):
+    """One fleet time slot, shared VERBATIM by the single-device scan and the
+    per-shard scan inside ``shard_map`` — the sharded engine sees exactly this
+    computation on its local node tile.
+
+    ``node_block``: XLA lowers matmuls/convs differently for different batch
+    shapes, so a node's float results can drift ~1e-7 between a (N,) batch
+    and a (N/d,) shard tile.  With ``node_block`` set, the per-slot fleet
+    math runs as a ``lax.map`` over fixed-(node_block,) microbatches — the
+    mapped body is compiled ONCE at a batch shape independent of fleet size
+    or shard layout, so sharded and unsharded runs are bit-identical.
+    ``None`` keeps the one-shot full-batch vmap (fastest; bitwise only for
+    integer/energy traces across layouts)."""
+
+    def block_body(state, keys, win_t, harv_t, signatures, qdnn_params,
+                   host_params, gen_params, aac_table):
+        # same split discipline as the single-node scan:
+        # carry, sensor, host
+        ks = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)  # (B,3,2)
+
+        # memoization hot path: one batched signature-bank correlation for
+        # the whole (local) fleet — under shard_map this is the (N/d, L)
+        # tile, so the Pallas/ref kernel runs per-shard with no collectives
+        corr = signature_corr_op(win_t, signatures)       # (B, L)
+
+        out = jax.vmap(
+            lambda w, st, h, co, kk: seeker_sensor_step_given_corr(
+                w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
+                aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
+                m_samples=m_samples, quant_bits=quant_bits,
+                corr_threshold=corr_threshold)
+        )(win_t, state, harv_t, corr, ks[:, 1])
+        host_logits = jax.vmap(
+            lambda o, kk: seeker_host_step(
+                o, host_params=host_params, gen_params=gen_params,
+                har_cfg=har_cfg, key=kk, t=t)
+        )(out, ks[:, 2])
+        trace = {"decision": out.decision, "payload": out.payload_bytes,
+                 "stored": out.state.stored_uj, "k": out.coreset_k,
+                 "logits": host_logits}
+        return out.state, ks[:, 0], trace
+
+    def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
+             aac_table):
+        state, keys = carry
+        win_t, harv_t = inp
+        n = keys.shape[0]
+        if shared_stream:
+            win_t = jnp.broadcast_to(win_t[None], (n,) + win_t.shape)
+
+        if node_block is None or node_block == n:
+            new_state, new_keys, trace = block_body(
+                state, keys, win_t, harv_t, signatures, qdnn_params,
+                host_params, gen_params, aac_table)
+        else:
+            # fixed-shape microbatches: pad the node axis to the block
+            # quantum (rows are independent, padding is sliced off) and map
+            # the identical compiled body over groups — a shard tile SMALLER
+            # than the block pads up to it, so every layout runs batch-
+            # (node_block,) bodies
+            pad = (-n) % node_block
+            grp = (n + pad) // node_block
+
+            def regroup(x):
+                x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+                return x.reshape((grp, node_block) + x.shape[1:])
+
+            def ungroup(x):
+                return x.reshape((grp * node_block,) + x.shape[2:])[:n]
+
+            st_g, ks_g, w_g, h_g = jax.tree_util.tree_map(
+                regroup, (state, keys, win_t, harv_t))
+            new_state, new_keys, trace = jax.tree_util.tree_map(
+                ungroup,
+                jax.lax.map(
+                    lambda a: block_body(*a, signatures, qdnn_params,
+                                         host_params, gen_params, aac_table),
+                    (st_g, ks_g, w_g, h_g)))
+        return (new_state, new_keys), trace
+
+    return step
+
+
 @functools.lru_cache(maxsize=32)
 def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
-                     shared_stream: bool, donate: bool):
+                     shared_stream: bool, node_block: int | None,
+                     donate: bool):
     """Compile-cached fleet scan, keyed on the static configuration.
 
     All arrays (params, signatures, windows, state) are jit *arguments*, so
@@ -64,46 +168,93 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 
     def run(state0, keys0, xs_w, xs_h, signatures, qdnn_params, host_params,
             gen_params, aac_table):
-        n = keys0.shape[0]
         t = xs_w.shape[-2]
+        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
+                                corr_threshold, shared_stream, t, node_block)
+        (state, keys), traces = jax.lax.scan(
+            lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                              gen_params, aac_table),
+            (state0, keys0), (xs_w, xs_h))
+        # the evolved keys are returned so a resumed run (state0=final_state,
+        # node_keys=final_keys) continues each node's PRNG stream instead of
+        # replaying segment 1's randomness
+        return traces, state, keys
 
-        def step(carry, inp):
-            state, keys = carry
-            win_t, harv_t = inp
-            if shared_stream:
-                win_t = jnp.broadcast_to(win_t[None], (n,) + win_t.shape)
-            # same split discipline as the single-node scan:
-            # carry, sensor, host
-            ks = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)  # (N,3,2)
-
-            # memoization hot path: one batched signature-bank correlation
-            # for the entire fleet (the Pallas kernel's (B, L) MXU tiling on
-            # TPU, the validated jnp oracle elsewhere)
-            corr = signature_corr_op(win_t, signatures)       # (N, L)
-
-            out = jax.vmap(
-                lambda w, st, h, co, kk: seeker_sensor_step_given_corr(
-                    w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
-                    aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
-                    m_samples=m_samples, quant_bits=quant_bits,
-                    corr_threshold=corr_threshold)
-            )(win_t, state, harv_t, corr, ks[:, 1])
-            host_logits = jax.vmap(
-                lambda o, kk: seeker_host_step(
-                    o, host_params=host_params, gen_params=gen_params,
-                    har_cfg=har_cfg, key=kk, t=t)
-            )(out, ks[:, 2])
-            trace = {"decision": out.decision, "payload": out.payload_bytes,
-                     "stored": out.state.stored_uj, "k": out.coreset_k,
-                     "logits": host_logits}
-            return (out.state, ks[:, 0]), trace
-
-        (state, _), traces = jax.lax.scan(step, (state0, keys0), (xs_w, xs_h))
-        return traces, state
-
-    # donate the stacked node state (it is returned, so XLA can alias it);
-    # the key array is consumed without a matching output and stays undonated
+    # donate the stacked node state (it is returned, so XLA can alias it)
     return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=32)
+def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
+                             har_cfg: HARConfig, costs: EnergyCosts,
+                             quant_bits: int, k_max: int, m_samples: int,
+                             corr_threshold: float, shared_stream: bool,
+                             node_block: int | None, donate: bool):
+    """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
+    ``shard_map`` manual region, each shard scanning its local node tile;
+    only the masked fleet aggregates are ``psum``-ed over ``axis_names``."""
+    nodes = P(axis_names)                    # leading node dim over the mesh
+    time_nodes = P(None, axis_names)         # (S, N, ...) time-major traces
+    repl = P()                               # replicated (params, bank, mask)
+
+    def shard_body(state0, keys0, xs_w, xs_h, mask, labels, signatures,
+                   qdnn_params, host_params, gen_params, aac_table):
+        t = xs_w.shape[-2]
+        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
+                                corr_threshold, shared_stream, t, node_block)
+        (state, keys), traces = jax.lax.scan(
+            lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                              gen_params, aac_table),
+            (state0, keys0), (xs_w, xs_h))
+
+        # --- fleet-level aggregates: the ONLY cross-shard traffic ----------
+        # inert padding nodes (mask False) contribute nothing
+        alive = mask[None, :]                               # (1, n_local)
+        sent = (traces["decision"] != DEFER) & alive
+        bytes_on_wire = jax.lax.psum(
+            jnp.sum(jnp.where(alive, traces["payload"], 0.0)), axis_names)
+        hist = jax.lax.psum(
+            jnp.sum(jax.nn.one_hot(traces["decision"], N_DECISIONS,
+                                   dtype=jnp.int32)
+                    * alive[..., None].astype(jnp.int32), axis=(0, 1)),
+            axis_names)                                     # (N_DECISIONS,)
+        completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
+        preds = jnp.argmax(traces["logits"], axis=-1)       # (S, n_local)
+        correct = jax.lax.psum(
+            jnp.sum(((preds == labels[:, None]) & sent).astype(jnp.int32)),
+            axis_names)
+        aggs = {"bytes_on_wire": bytes_on_wire, "decision_histogram": hist,
+                "completed": completed, "correct": correct}
+        return traces, state, keys, aggs
+
+    fn = shard_map_compat(
+        shard_body, mesh,
+        in_specs=(nodes, nodes,                     # state0 (pytree), keys0
+                  repl if shared_stream else time_nodes,   # xs_w
+                  time_nodes,                       # xs_h (S, N)
+                  nodes,                            # mask (N,)
+                  repl, repl, repl, repl, repl, repl),
+        out_specs=(time_nodes, nodes, nodes, repl),
+        axis_names=frozenset(axis_names))
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _stack_pad_state(state0: SeekerNodeState | None, n: int, pad: int,
+                     predictor_window: int, initial_uj: float
+                     ) -> SeekerNodeState:
+    """Resolve the fleet's initial state: a caller-provided stacked state
+    (serving loops resuming a fleet keep their supercapacitor charge) or a
+    fresh init, extended with ``pad`` inert default-init rows."""
+    if state0 is None:
+        return fleet_node_init(n + pad, predictor_window, initial_uj)
+    lead = jax.tree_util.tree_leaves(state0)[0].shape[0]
+    if lead != n:
+        raise ValueError(f"state0 is stacked for {lead} nodes, fleet has {n}")
+    if pad == 0:
+        return state0
+    filler = fleet_node_init(pad, predictor_window, initial_uj)
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0), state0, filler)
 
 
 def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
@@ -115,6 +266,9 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           k_max: int = 12, m_samples: int = 20,
                           corr_threshold: float = 0.95,
                           predictor_window: int = 8, initial_uj: float = 50.0,
+                          state0: SeekerNodeState | None = None,
+                          node_keys: jax.Array | None = None,
+                          node_block: int | None = None,
                           donate: bool = True):
     """Simulate N independent Seeker nodes over S time slots in one scan.
 
@@ -126,6 +280,20 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         key: fleet PRNG; node ``i`` uses ``fold_in(key, i)`` and then splits
             exactly like the single-node simulator, so an N=1 fleet
             reproduces a single-node run.
+        state0: optional stacked ``SeekerNodeState`` to resume from (e.g. the
+            ``final_state`` of a previous run) — supercapacitor charge,
+            predictor history and AAC continuity carry over instead of being
+            silently reset to ``initial_uj``.  NOTE: with ``donate=True`` the
+            passed state's buffers are donated to the run.
+        node_keys: optional (N, 2) per-node PRNG keys to resume from (a
+            previous run's ``final_keys``) — without them a resumed segment
+            re-derives ``fold_in(key, i)`` and replays segment 1's random
+            draws.  ``state0 + node_keys`` makes a chain of runs bitwise
+            equal to one long run.
+        node_block: run per-slot fleet math in fixed-size node microbatches
+            (see :func:`_make_fleet_step`) — results become bit-identical
+            across fleet sizes and shard layouts that use the same block.
+            ``None`` (default) is the fastest full-batch path.
         donate: donate the stacked node state to the jitted run so XLA can
             alias its buffers into the returned final state (the key array
             has no matching output and is never donated).
@@ -151,13 +319,15 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         xs_windows = jnp.moveaxis(windows, 0, 1)              # (S, N, T, C)
     t = windows.shape[-2]
 
-    state0 = fleet_node_init(n, predictor_window, initial_uj)
-    keys0 = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    state0 = _stack_pad_state(state0, n, 0, predictor_window, initial_uj)
+    keys0 = (node_keys if node_keys is not None else
+             jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n)))
     run_fn = _build_fleet_run(har_cfg, costs, quant_bits, k_max, m_samples,
-                              corr_threshold, shared_stream, donate)
-    traces, final_state = run_fn(state0, keys0, xs_windows, harvest.T,
-                                 signatures, qdnn_params, host_params,
-                                 gen_params, aac_table)
+                              corr_threshold, shared_stream, node_block,
+                              donate)
+    traces, final_state, final_keys = run_fn(
+        state0, keys0, xs_windows, harvest.T, signatures, qdnn_params,
+        host_params, gen_params, aac_table)
 
     return {
         "decisions": traces["decision"],                      # (S, N)
@@ -170,4 +340,112 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         "raw_bytes_per_window": jnp.asarray(
             float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
         "final_state": final_state,
+        "final_keys": final_keys,
     }
+
+
+def seeker_fleet_simulate_sharded(
+        windows: jnp.ndarray, harvest: jnp.ndarray, *,
+        signatures, qdnn_params, host_params, gen_params,
+        har_cfg: HARConfig, mesh=None,
+        aac_table: AACTable | None = None,
+        costs: EnergyCosts | None = None,
+        key: jax.Array | None = None, quant_bits: int = 16,
+        k_max: int = 12, m_samples: int = 20, corr_threshold: float = 0.95,
+        predictor_window: int = 8, initial_uj: float = 50.0,
+        state0: SeekerNodeState | None = None,
+        node_keys: jax.Array | None = None,
+        labels: jnp.ndarray | None = None,
+        node_block: int | None = None, donate: bool = True):
+    """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
+
+    The fleet's node dim is split over the mesh axes the ``"nodes"`` logical
+    axis resolves to (:data:`repro.sharding.FLEET_RULES`: ("pod", "data"),
+    axes absent from ``mesh`` dropped); the signature bank and all model
+    params are replicated.  The whole time scan runs inside the shard_map
+    manual region — per-node state never crosses shards; ``bytes_on_wire``,
+    ``decision_histogram``, ``completed_frac`` (and ``fleet_accuracy`` when
+    ``labels`` is given) are the only collectives, reduced with ``psum``.
+
+    Fleets with N not divisible by the mesh quantum are padded with inert
+    nodes — zero harvest, default state, masked out of every aggregate — and
+    the padding is sliced off the returned traces.  Integer and energy traces
+    (decisions, payload bytes, stored µJ, k) are bit-identical to the
+    single-device engine for any N; host logits additionally need a common
+    ``node_block`` in both engines to pin XLA's batch-shape-dependent matmul
+    lowering (see :func:`_make_fleet_step`), otherwise they match to ~1e-6.
+
+    Args (beyond :func:`seeker_fleet_simulate`):
+        mesh: a ``jax.sharding.Mesh``; default is a 1-D ("data",) mesh over
+            every visible device.
+        labels: optional (S,) ground-truth labels for the shared stream;
+            enables the ``fleet_accuracy`` aggregate.
+
+    Extra returns: ``decision_histogram`` (N_DECISIONS,) int32 fleet-wide
+    decision counts, ``completed_frac`` (), ``fleet_accuracy`` () when
+    ``labels`` is given, ``padded_nodes`` (python int), ``node_axes``
+    (python tuple of mesh axis names).
+    """
+    costs = costs or EnergyCosts()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if mesh is None:
+        mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    axis_names, quantum = node_mesh_axes(mesh)
+    if not axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has none of the FLEET_RULES node axes")
+
+    n, s = harvest.shape
+    assert windows.ndim in (3, 4), f"windows must be (S,T,C) or (N,S,T,C), got {windows.shape}"
+    shared_stream = windows.ndim == 3
+    pad = (-n) % quantum
+    if shared_stream:
+        assert windows.shape[0] == s, (windows.shape, s)
+        xs_windows = windows                                  # (S, T, C)
+    else:
+        assert windows.shape[:2] == (n, s), (windows.shape, n, s)
+        xs_windows = jnp.moveaxis(windows, 0, 1)              # (S, N, T, C)
+        if pad:   # inert nodes see all-zero windows (corr 0, masked anyway)
+            xs_windows = jnp.pad(xs_windows,
+                                 ((0, 0), (0, pad)) + ((0, 0),) * 2)
+    t = windows.shape[-2]
+
+    state_full = _stack_pad_state(state0, n, pad, predictor_window,
+                                  initial_uj)
+    keys0 = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n + pad))
+    if node_keys is not None:        # resume: real nodes continue their
+        keys0 = keys0.at[:n].set(node_keys)     # streams, pad keys inert
+    harvest_t = jnp.pad(harvest, ((0, pad), (0, 0))).T        # (S, N+pad)
+    mask = jnp.arange(n + pad) < n
+    labels_arr = (labels if labels is not None
+                  else jnp.zeros((s,), jnp.int32))
+
+    run_fn = _build_fleet_run_sharded(
+        mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
+        corr_threshold, shared_stream, node_block, donate)
+    traces, final_state, final_keys, aggs = run_fn(
+        state_full, keys0, xs_windows, harvest_t, mask, labels_arr,
+        signatures, qdnn_params, host_params, gen_params, aac_table)
+
+    out = {
+        "decisions": traces["decision"][:, :n],               # (S, N)
+        "payload_bytes": traces["payload"][:, :n],            # (S, N)
+        "stored_uj": traces["stored"][:, :n],                 # (S, N)
+        "k_trace": traces["k"][:, :n],                        # (S, N)
+        "logits": traces["logits"][:, :n],                    # (S, N, L)
+        "preds": jnp.argmax(traces["logits"][:, :n], axis=-1),
+        "bytes_on_wire": aggs["bytes_on_wire"],
+        "decision_histogram": aggs["decision_histogram"],
+        "completed_frac": aggs["completed"] / float(n * s),
+        "raw_bytes_per_window": jnp.asarray(
+            float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
+        "final_state": jax.tree_util.tree_map(lambda a: a[:n], final_state),
+        "final_keys": final_keys[:n],
+        "padded_nodes": pad,
+        "node_axes": axis_names,
+    }
+    if labels is not None:
+        out["fleet_accuracy"] = (aggs["correct"]
+                                 / jnp.maximum(aggs["completed"], 1))
+    return out

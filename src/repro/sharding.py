@@ -23,10 +23,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
-    "DEFAULT_RULES", "FSDP_RULES", "DP_TP_RULES", "ShardingRules",
-    "use_sharding", "current_context", "spec_for", "constrain",
-    "named_sharding", "tree_named_shardings", "shard_map_compat",
-    "make_mesh_compat",
+    "DEFAULT_RULES", "FSDP_RULES", "DP_TP_RULES", "FLEET_RULES",
+    "ShardingRules", "use_sharding", "current_context", "spec_for",
+    "constrain", "named_sharding", "tree_named_shardings",
+    "shard_map_compat", "make_mesh_compat", "node_mesh_axes",
 ]
 
 
@@ -118,6 +118,21 @@ PURE_DP_RULES: ShardingRules = {
     "layers": None,
 }
 
+# Fleet-serving flavour: the ONLY sharded axis is the fleet's node axis.
+# Stacked SeekerNodeState, per-node PRNG keys, harvest traces and per-node
+# window streams all shard their leading "nodes" dim over ("pod", "data");
+# the signature bank, DNN params, generator params and AAC table are
+# replicated — every shard runs the full Seeker decision ladder for its
+# local node tile and only fleet-level aggregates (bytes on wire, decision
+# histograms, accuracy counts) cross shards via psum.  Consumed by
+# :func:`repro.serving.fleet.seeker_fleet_simulate_sharded`.
+FLEET_RULES: ShardingRules = {
+    **{k: None for k in FSDP_RULES},
+    "nodes": ("pod", "data"),
+    "signatures": None,       # memo bank: replicated, streamed per shard
+    "params": None,           # qDNN / host DNN / generator weights
+}
+
 DEFAULT_RULES = FSDP_RULES
 
 _ctx = threading.local()
@@ -146,6 +161,22 @@ def use_sharding(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
 
 def _mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return math.prod(mesh.shape[a] for a in axes)
+
+
+def node_mesh_axes(mesh: Mesh,
+                   rules: ShardingRules = FLEET_RULES
+                   ) -> tuple[tuple[str, ...], int]:
+    """Resolve the "nodes" logical axis against ``mesh``.
+
+    Returns ``(axes, quantum)``: the mesh axes the fleet's node dim shards
+    over (rule axes absent from the mesh are dropped, so the same table
+    serves ("data",) and ("pod", "data") meshes) and their total size — the
+    shard quantum fleets are padded to a multiple of.
+    """
+    rule = rules.get("nodes") or ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    return axes, (_mesh_axis_size(mesh, axes) if axes else 1)
 
 
 def spec_for(logical: Sequence[str | None], shape: Sequence[int],

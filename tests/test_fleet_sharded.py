@@ -1,0 +1,262 @@
+"""Sharded fleet engine tests.
+
+The equivalence contract: on a CPU mesh (subprocess with
+``--xla_force_host_platform_device_count=8``, same pattern as
+test_sharding_and_dryrun.py), :func:`seeker_fleet_simulate_sharded` must
+reproduce :func:`seeker_fleet_simulate` BITWISE — decisions, payload bytes,
+stored µJ, k trace, and (with a common ``node_block`` pinning XLA's
+batch-shape-dependent matmul lowering) host logits — for both a divisible
+N=8 and a non-divisible N=13, the latter exercising the pad-to-quantum /
+inert-node masking path.  Fleet aggregates (bytes on wire, decision
+histogram, completion, accuracy) are the only psum-ed quantities and are
+checked against recomputation from the unsharded traces.
+
+The state0-resume fix (two chained runs == one long run) needs no mesh and
+runs in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core import fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import seeker_fleet_simulate
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+_EQUIV_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core import fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import seeker_fleet_simulate, seeker_fleet_simulate_sharded
+from repro.sharding import make_mesh_compat
+
+assert jax.device_count() == 8, jax.device_count()
+S, BLOCK = 6, 4
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+gen = init_generator(key, HAR.window, HAR.channels)
+sigs = class_signatures()
+wins, labels = har_stream(key, S)
+
+for n, mesh in ((8, make_mesh_compat((8,), ("data",))),
+                (13, make_mesh_compat((8,), ("data",))),
+                (13, make_mesh_compat((2, 4), ("pod", "data")))):
+    harvest = fleet_harvest_traces(key, n, S)
+    ref = seeker_fleet_simulate(
+        wins, harvest, signatures=sigs, qdnn_params=params,
+        host_params=params, gen_params=gen, har_cfg=HAR,
+        node_block=BLOCK, donate=False)
+    sh = seeker_fleet_simulate_sharded(
+        wins, harvest, signatures=sigs, qdnn_params=params,
+        host_params=params, gen_params=gen, har_cfg=HAR, mesh=mesh,
+        labels=labels, node_block=BLOCK, donate=False)
+    assert sh["padded_nodes"] == (-n) % 8, sh["padded_nodes"]
+
+    # --- bitwise per-node traces (the acceptance contract) -----------------
+    for k in ("decisions", "payload_bytes", "stored_uj", "k_trace",
+              "logits", "preds"):
+        np.testing.assert_array_equal(
+            np.asarray(sh[k]), np.asarray(ref[k]),
+            err_msg=f"{k} (N={n}, mesh {mesh.shape})")
+    np.testing.assert_array_equal(
+        np.asarray(sh["final_state"].stored_uj),
+        np.asarray(ref["final_state"].stored_uj))
+
+    # --- psum-ed fleet aggregates vs recomputation from unsharded traces ---
+    dec = np.asarray(ref["decisions"])
+    sent = dec != 5
+    np.testing.assert_allclose(float(sh["bytes_on_wire"]),
+                               float(ref["bytes_on_wire"]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(sh["decision_histogram"]),
+        np.bincount(dec.ravel(), minlength=6))
+    assert abs(float(sh["completed_frac"]) - sent.mean()) < 1e-6
+    correct = ((np.asarray(ref["preds"]) == np.asarray(labels)[:, None])
+               & sent).sum()
+    want = correct / max(sent.sum(), 1)
+    assert abs(float(sh["fleet_accuracy"]) - want) < 1e-6
+    print(f"N={n} mesh={mesh.shape} OK")
+
+# default path (node_block=None, full-batch vmap): integer and energy traces
+# stay bitwise; logits only to tolerance (XLA batch-shape matmul lowering)
+n, mesh = 13, make_mesh_compat((8,), ("data",))
+harvest = fleet_harvest_traces(key, n, S)
+ref = seeker_fleet_simulate(
+    wins, harvest, signatures=sigs, qdnn_params=params, host_params=params,
+    gen_params=gen, har_cfg=HAR, donate=False)
+sh = seeker_fleet_simulate_sharded(
+    wins, harvest, signatures=sigs, qdnn_params=params, host_params=params,
+    gen_params=gen, har_cfg=HAR, mesh=mesh, donate=False)
+for k in ("decisions", "payload_bytes", "stored_uj", "k_trace"):
+    np.testing.assert_array_equal(np.asarray(sh[k]), np.asarray(ref[k]),
+                                  err_msg=f"{k} (default node_block)")
+np.testing.assert_allclose(np.asarray(sh["logits"]), np.asarray(ref["logits"]),
+                           rtol=1e-5, atol=1e-5)
+print("default node_block OK")
+print("OK")
+"""
+
+
+_SERVE_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core.coreset import ClusterCoreset, channel_cluster_coresets
+from repro.core.recovery import recover_cluster_window
+from repro.data.sensors import har_stream
+from repro.models.har import har_apply, har_init
+from repro.serving import fleet_serve_step
+from repro.serving.edge_host import (decode_wire_coresets,
+                                     encode_wire_coresets)
+from repro.sharding import make_mesh_compat
+
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+for n, shape, axes in ((16, (8,), ("data",)), (13, (8,), ("data",)),
+                       (16, (2, 4), ("pod", "data"))):
+    wins, _ = har_stream(jax.random.PRNGKey(2), n)
+    mesh = make_mesh_compat(shape, axes)
+    out = fleet_serve_step(wins, host_params=params, har_cfg=HAR, mesh=mesh,
+                           key=key)
+    assert out["host_logits"].shape == (n, HAR.n_classes)
+    assert out["wire_bytes"] < out["raw_bytes"]
+    # unsharded host-side oracle on the padded fleet (same key split count)
+    pad = (-n) % 8
+    wp = jnp.pad(wins, ((0, pad), (0, 0), (0, 0)))
+    c, r, cnt = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=12, iters=4))(wp)
+    cr, rr, nr = decode_wire_coresets(encode_wire_coresets(c, r, cnt))
+    keys = jax.random.split(key, n + pad)
+    rec = jax.vmap(lambda cc, rad, cn, kk: recover_cluster_window(
+        ClusterCoreset(cc, rad, cn), kk, HAR.window))(cr, rr, nr, keys)
+    np.testing.assert_array_equal(np.asarray(out["host_logits"]),
+                                  np.asarray(har_apply(params, rec)[:n]),
+                                  err_msg=f"n={n} mesh={shape}")
+    print(f"n={n} mesh={shape} OK")
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fleet_bitwise_equivalence_8dev():
+    """Sharded == unsharded bitwise on an 8-virtual-device CPU mesh, for
+    divisible N=8, non-divisible N=13 (padding/masking path), and a 2-axis
+    ("pod","data") mesh."""
+    assert "OK" in _run(_EQUIV_CODE, devices=8)
+
+
+@pytest.mark.slow
+def test_fleet_serve_step_gathers_payloads_8dev():
+    """The edge->host tier gathers only wire-format coreset payloads across
+    the mesh; host logits match the unsharded encode/decode/recover oracle
+    bitwise (the host side runs at the full gathered batch either way)."""
+    assert "OK" in _run(_SERVE_CODE, devices=8)
+
+
+# ---------------------------------------------------------------------------
+# state0 resume (the silently-reset-initial_uj fix) — no mesh needed
+# ---------------------------------------------------------------------------
+
+S = 12
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    sigs = class_signatures()
+    wins, labels = har_stream(key, S)
+    return key, params, gen, sigs, wins, labels
+
+
+def test_fleet_state0_is_used_not_reset(setup):
+    """The fix: a passed ``state0`` must drive the run — the engine used to
+    silently rebuild node state with the default ``initial_uj``."""
+    key, params, gen, sigs, wins, labels = setup
+    from repro.serving.fleet import fleet_node_init
+    n = 5
+    harvest = fleet_harvest_traces(key, n, S)
+    kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+              gen_params=gen, har_cfg=HAR, key=key, donate=False)
+
+    low = seeker_fleet_simulate(wins, harvest,
+                                state0=fleet_node_init(n, initial_uj=5.0),
+                                **kw)
+    # state0 at charge X == fresh init with initial_uj=X, bit for bit
+    oracle = seeker_fleet_simulate(wins, harvest, initial_uj=5.0, **kw)
+    np.testing.assert_array_equal(np.asarray(low["decisions"]),
+                                  np.asarray(oracle["decisions"]))
+    np.testing.assert_array_equal(np.asarray(low["stored_uj"]),
+                                  np.asarray(oracle["stored_uj"]))
+    # ... and differs from the default-init run the old code always did
+    default = seeker_fleet_simulate(wins, harvest, **kw)
+    assert not np.array_equal(np.asarray(low["stored_uj"]),
+                              np.asarray(default["stored_uj"]))
+
+
+def test_fleet_resume_chain_matches_one_long_run(setup):
+    """Serving-loop resume: chaining ``final_state -> state0`` AND
+    ``final_keys -> node_keys`` makes two runs bitwise equal to one long
+    run — charge, predictor history, AAC continuity and every node's PRNG
+    stream all continue where the previous segment stopped."""
+    key, params, gen, sigs, wins, labels = setup
+    n = 4
+    harvest = fleet_harvest_traces(key, n, S)
+    kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+              gen_params=gen, har_cfg=HAR, key=key, donate=False)
+    half = S // 2
+    full = seeker_fleet_simulate(wins, harvest, **kw)
+    first = seeker_fleet_simulate(wins[:half], harvest[:, :half], **kw)
+    second = seeker_fleet_simulate(wins[half:], harvest[:, half:],
+                                   state0=first["final_state"],
+                                   node_keys=first["final_keys"], **kw)
+    for k in ("decisions", "payload_bytes", "stored_uj", "logits"):
+        np.testing.assert_array_equal(np.asarray(second[k]),
+                                      np.asarray(full[k][half:]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(second["final_state"].stored_uj),
+                                  np.asarray(full["final_state"].stored_uj))
+    np.testing.assert_array_equal(np.asarray(second["final_keys"]),
+                                  np.asarray(full["final_keys"]))
+    # and it is NOT the trajectory a silently-reset fleet would follow
+    fresh = seeker_fleet_simulate(wins[half:], harvest[:, half:], **kw)
+    assert not np.array_equal(np.asarray(second["stored_uj"]),
+                              np.asarray(fresh["stored_uj"]))
+
+
+def test_fleet_state0_wrong_size_raises(setup):
+    key, params, gen, sigs, wins, labels = setup
+    from repro.serving.fleet import fleet_node_init
+    harvest = fleet_harvest_traces(key, 4, S)
+    with pytest.raises(ValueError, match="stacked for"):
+        seeker_fleet_simulate(wins, harvest, signatures=sigs,
+                              qdnn_params=params, host_params=params,
+                              gen_params=gen, har_cfg=HAR,
+                              state0=fleet_node_init(3), donate=False)
