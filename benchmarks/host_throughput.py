@@ -1,0 +1,135 @@
+"""Host-tier serving throughput: batched queue/EDF/recovery path vs the
+per-payload loop the repo used to inline (ISSUE 3 acceptance benchmark).
+
+``PYTHONPATH=src python -m benchmarks.host_throughput`` (or via
+benchmarks.run)
+
+A pool of quantized cluster wire-payloads is pushed through three host-side
+execution models:
+
+* ``per_payload`` — the pre-subsystem baseline: one jitted
+  decode -> recover -> DNN call *per payload* (batch 1), a Python loop over
+  the pool — per-call dispatch plus unbatched compute;
+* ``batched_direct`` — :func:`repro.host.server.recover_infer_batch` on the
+  whole pool at once (no queue): the raw batching headroom;
+* ``host_server/b{B}_q{Q}`` — the full subsystem: ring-queue ingest, EDF
+  assembly into fixed-(B,) microbatches, signature cache, batched recovery +
+  DNN — swept over batch size B and queue depth Q.
+
+Reported: payloads/second and ``speedup_x`` over the per-payload baseline.
+Acceptance: the batched host path is >= 5x the per-payload loop at batch 64
+on CPU.  ``quick=True`` (CI bench-smoke) shrinks the pool and sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.seeker_har import HAR
+from repro.core.coreset import channel_cluster_coresets
+from repro.core.recovery import init_generator
+from repro.data.sensors import har_stream
+from repro.host import (HostServeConfig, host_server_init,
+                        recover_infer_batch, serve_fleet_payloads)
+from repro.models.har import har_init
+from repro.serving import WirePayload, encode_wire_coresets
+
+from .common import timeit_us
+
+N_PAYLOADS = 256
+BATCH_SIZES = (8, 64)
+QUEUE_DEPTHS = (256, 1024)
+QUICK_N = 16
+QUICK_BATCH_SIZES = (4,)
+QUICK_QUEUE_DEPTHS = (32,)
+
+
+def _payload_pool(n: int) -> WirePayload:
+    wins, _ = har_stream(jax.random.PRNGKey(0), n)
+    centers, radii, counts = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=12, iters=4))(wins)
+    return encode_wire_coresets(centers, radii, counts)
+
+
+def run(quick: bool = False) -> list[dict]:
+    n = QUICK_N if quick else N_PAYLOADS
+    batches = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    depths = QUICK_QUEUE_DEPTHS if quick else QUEUE_DEPTHS
+    key = jax.random.PRNGKey(0)
+    # untrained weights: identical FLOPs to trained ones (cf. fleet_scale)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    pool = _payload_pool(n)
+    t = HAR.window
+    rows = []
+
+    # --- baseline: one payload per call, Python loop over the pool ---------
+    one = jax.tree_util.tree_map(lambda a: a[:1], pool)
+    per_payload = jax.jit(functools.partial(recover_infer_batch, t=t))
+    keys = jax.random.split(key, n)
+
+    def loop():
+        out = None
+        for i in range(n):
+            out = per_payload(one, params, keys[i:i + 1])
+        return out
+
+    base_us = timeit_us(loop, iters=1 if quick else 3, warmup=1)
+    base_rate = n / (base_us / 1e6)
+    rows.append({"name": "host_throughput/per_payload",
+                 "us_per_call": base_us, "payloads_per_s": base_rate,
+                 "n_payloads": n, "speedup_x": 1.0})
+
+    # --- batched direct (no queue): the raw batching headroom --------------
+    direct = jax.jit(functools.partial(recover_infer_batch, t=t))
+    all_keys = jax.random.split(key, n)
+    us = timeit_us(lambda: direct(pool, params, all_keys),
+                   iters=1 if quick else 10, warmup=1)
+    rows.append({"name": "host_throughput/batched_direct",
+                 "us_per_call": us, "payloads_per_s": n / (us / 1e6),
+                 "n_payloads": n, "speedup_x": base_us / us})
+
+    # --- the full subsystem: queue -> EDF -> cache -> batched DNN ----------
+    node_ids = jnp.arange(n, dtype=jnp.int32)
+    for depth in depths:
+        for batch in batches:
+            cfg = HostServeConfig(
+                channels=HAR.channels, k=12, m=20, t=t,
+                n_classes=HAR.n_classes, n_nodes=n, batch_size=batch,
+                queue_capacity=max(depth, n), cache_capacity=depth,
+                qos_slots=8)
+            iters = 1 if quick else 5
+            # fresh (cold-cache) states pre-built OUTSIDE the timed region —
+            # this measures the cold serve path, not state allocation
+            states = iter([host_server_init(cfg)
+                           for _ in range(iters + 2)])
+
+            def serve():
+                _, out = serve_fleet_payloads(
+                    next(states), pool, node_ids, cfg=cfg,
+                    host_params=params, gen_params=gen, base_key=key)
+                return out.logits
+
+            us = timeit_us(serve, iters=iters, warmup=1)
+            rows.append({
+                "name": f"host_throughput/host_server_b{batch}_q{depth}",
+                "us_per_call": us,
+                "payloads_per_s": n / (us / 1e6),
+                "n_payloads": n,
+                "batch_size": batch,
+                "queue_depth": depth,
+                "speedup_x": base_us / us,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        extra = ""
+        if "batch_size" in row:
+            extra = (f"  (batch {row['batch_size']}, "
+                     f"queue {row['queue_depth']})")
+        print(f"{row['name']:>42s}  {row['payloads_per_s']:>10.0f} "
+              f"payloads/s  {row['speedup_x']:>6.1f}x vs per-payload{extra}")

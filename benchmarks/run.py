@@ -32,13 +32,14 @@ MODULES = [
     "fig13_bearing",
     "comm_volume",
     "fleet_scale",
+    "host_throughput",
 ]
 
 
 def _derived(row: dict) -> str:
     for k in ("acc", "acc_scheduled", "total_uj", "windows_per_s",
-              "reduction_x", "completed_frac", "wire_bytes_per_dev",
-              "volume_frac"):
+              "payloads_per_s", "reduction_x", "completed_frac",
+              "wire_bytes_per_dev", "volume_frac"):
         if k in row:
             return f"{k}={row[k]:.4f}" if isinstance(row[k], float) \
                 else f"{k}={row[k]}"

@@ -4,6 +4,8 @@
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 64
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python examples/edge_host_serving.py --fleet 64 --sharded
+    PYTHONPATH=src python examples/edge_host_serving.py --fleet 24 \
+        --host-queue
 
 Trains the HAR classifier, builds the memoization signature bank, then
 streams activity windows through the full Seeker decision flow under a
@@ -13,6 +15,12 @@ fraction, accuracy, decision mix, and communication volume vs raw.
 ``--fleet N`` instead simulates N independent nodes with heterogeneous
 harvest modalities in one batched scan (the fleet engine), reporting
 per-modality completion and fleet-level wire volume.
+
+``--host-queue`` streams a *churny* fleet trace — nodes dropping in and out
+slot to slot, periodically re-transmitting identical payloads — through the
+host-tier serving subsystem (``repro.host``: QoS-deadline ring queue, EDF
+fixed-shape microbatch scheduler, signature-keyed recovery cache) and
+prints deadline-miss and cache-hit rates plus the compile-shape count.
 """
 import argparse
 import collections
@@ -105,6 +113,98 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
           f"({raw / max(wire, 1e-9):.1f}x reduction)")
 
 
+def host_queue_demo(key, params, gen, wins, n_nodes: int, args):
+    """Churny fleet -> host-tier serving subsystem (queue/EDF/cache).
+
+    Each node follows an on/off duty cycle (intermittent power) and, while
+    on, offloads one coreset payload per slot; a node re-transmits the same
+    window for a few consecutive slots (periodic activities), so the host's
+    signature cache sees D0-style repetition.  Every 4th node ships a D4
+    sampling payload (GAN recovery path); the rest ship D3 cluster coresets.
+    """
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core.coreset import channel_cluster_coresets, importance_coreset
+    from repro.host import (HostServeConfig, cluster_entries, host_ensemble,
+                            host_serve_slot, host_server_init,
+                            host_server_stats, sampling_entries,
+                            serve_trace_count)
+    from repro.serving import encode_wire_coresets, encode_wire_samples
+
+    slots, pool = args.windows, min(args.windows, 32)
+    cfg = HostServeConfig(
+        channels=HAR.channels, k=12, m=20, t=HAR.window,
+        n_classes=HAR.n_classes, n_nodes=n_nodes,
+        batch_size=args.host_batch, queue_capacity=4 * n_nodes,
+        cache_capacity=4 * pool, qos_slots=args.qos)
+
+    # pre-encode both payload kinds for the window pool (the edge side)
+    centers, radii, counts = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=cfg.k, iters=4))(wins[:pool])
+    c_pool = cluster_entries(encode_wire_coresets(centers, radii, counts),
+                             cfg.m)
+    sc = jax.vmap(lambda w, k_: importance_coreset(w, cfg.m, k_))(
+        wins[:pool], jax.random.split(key, pool))
+    s_pool = sampling_entries(
+        encode_wire_samples(sc.indices, sc.values, sc.mean, sc.var), cfg.k)
+
+    rng = np.random.RandomState(0)
+    duty = rng.uniform(0.3, 0.9, size=n_nodes)        # per-node duty cycle
+    phase = rng.randint(0, 8, size=n_nodes)
+    node_ids = jnp.arange(n_nodes, dtype=jnp.int32)
+    is_sampling = node_ids % 4 == 3                   # D4 senders
+    state = host_server_init(cfg)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    t0 = time.time()
+    ingested = 0
+    for s in range(slots):
+        # churn: a node is up when its duty-cycled phase says so
+        active = (rng.rand(n_nodes) < duty) \
+            & (((s + phase) // 4) % 2 == 0)
+        # repetition: a node re-sends the same window for 4 slots
+        widx = jnp.asarray((node_ids * 7 + (s // 4)) % pool)
+        entries = jax.tree_util.tree_map(
+            lambda c, sp: jnp.where(
+                jnp.reshape(is_sampling, (-1,) + (1,) * (c.ndim - 1)),
+                sp[widx], c[widx]),
+            c_pool, s_pool)
+        ingested += int(active.sum())
+        state, _ = host_serve_slot(state, entries, node_ids,
+                                   jnp.asarray(active), **kw)
+    # drain the backlog with empty ingest slots
+    none = jnp.zeros((n_nodes,), bool)
+    empty = jax.tree_util.tree_map(lambda a: a[widx], c_pool)
+    while host_server_stats(state)["backlog"] > 0:
+        state, _ = host_serve_slot(state, empty, node_ids, none, **kw)
+    dt = time.time() - t0
+
+    stats = host_server_stats(state)
+    ens = host_ensemble(state)
+    print(f"\nhost queue: {n_nodes} churny nodes x {slots} slots "
+          f"({ingested} payloads) in {dt:.2f}s "
+          f"({ingested / dt:.0f} payloads/sec incl. compile)")
+    print(f"  served {stats['served']}, deadline misses "
+          f"{stats['deadline_misses']}, overflow drops "
+          f"{stats['drops_overflow']} -> deadline-miss rate "
+          f"{100 * stats['deadline_miss_rate']:.1f}%, QoS-fail rate "
+          f"{100 * stats['qos_fail_rate']:.1f}% "
+          f"(bound {cfg.qos_slots} slots, batch {cfg.batch_size})")
+    print(f"  cache: {stats['cache_hits']} hits / {stats['cache_misses']} "
+          f"misses -> hit rate {100 * stats['cache_hit_rate']:.1f}% "
+          f"(bitwise-identical to recomputation)")
+    print(f"  compiled serve shapes: {serve_trace_count(cfg)} "
+          f"(fixed-shape EDF microbatches; churn never re-traces)")
+    answered = np.asarray(ens["counts"]) > 0
+    agree = (np.asarray(ens["pred_mean"]) == np.asarray(ens["pred_vote"]))
+    agree_pct = 100 * float(agree[answered].mean()) if answered.any() else 0.0
+    print(f"  per-node ensemble: {int(answered.sum())}/{n_nodes} nodes "
+          f"answered (mean-logit vs majority-vote agreement "
+          f"{agree_pct:.0f}% over answered nodes)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--source", default="rf",
@@ -117,6 +217,15 @@ def main():
                     help="with --fleet: shard the node axis over every "
                          "visible device (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--host-queue", action="store_true",
+                    help="stream a churny fleet trace through the host-tier "
+                         "serving subsystem (QoS queue + EDF scheduler + "
+                         "recovery cache) and report deadline-miss / "
+                         "cache-hit rates")
+    ap.add_argument("--host-batch", type=int, default=8,
+                    help="host EDF microbatch size (--host-queue)")
+    ap.add_argument("--qos", type=int, default=3,
+                    help="QoS deadline in slots after arrival (--host-queue)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -124,6 +233,10 @@ def main():
     params = train_classifier(key)
     gen = init_generator(key, HAR.window, HAR.channels)
     wins, labels = har_stream(key, args.windows)
+
+    if args.host_queue:
+        host_queue_demo(key, params, gen, wins, args.fleet or 16, args)
+        return
 
     if args.fleet:
         fleet_demo(key, params, gen, wins, labels, args.fleet,

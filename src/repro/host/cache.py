@@ -1,0 +1,123 @@
+"""Signature-keyed recovery cache — the paper's D0 memoization, host side.
+
+On the node, D0 skips inference when a window correlates with a stored
+signature.  The host sees the same repetition one hop later: periodic
+activities make nodes re-transmit *byte-identical* quantized payloads, and
+recovering + re-inferring them wastes exactly the work D0 saves on the node.
+This cache closes the loop: each payload is keyed by a 64-bit hash of its
+quantized code tensors (two independent 32-bit mixes — the codes are already
+integers, so equal payloads hash equal and the lookup is exact-match), and a
+hit returns the *bitwise-cached* logits.
+
+Bitwise equivalence with recomputation holds because the host server derives
+each payload's recovery PRNG key from this same signature
+(:func:`jax.random.fold_in`), so recomputing a payload reproduces the cached
+logits bit for bit — the cache is a pure memo, never an approximation.
+
+Eviction is FIFO via a ring cursor; all operations are fixed-shape jnp so
+lookups and inserts run inside the jitted serve slot.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RecoveryCache", "cache_init", "payload_signature",
+           "cache_lookup_batch", "cache_insert_batch"]
+
+# Knuth/FNV-flavoured odd constants for the two independent 32-bit mixes
+_MIX_SEEDS = (jnp.uint32(2654435761), jnp.uint32(2246822519))
+
+
+class RecoveryCache(NamedTuple):
+    sig: jnp.ndarray       # (cap, 2) uint32 — 64-bit payload signature
+    logits: jnp.ndarray    # (cap, L) float32 — memoized host logits
+    valid: jnp.ndarray     # (cap,) bool
+    cursor: jnp.ndarray    # () int32 — FIFO insert position
+    hits: jnp.ndarray      # () int32
+    misses: jnp.ndarray    # () int32
+
+
+def cache_init(capacity: int, n_classes: int) -> RecoveryCache:
+    return RecoveryCache(
+        sig=jnp.zeros((capacity, 2), jnp.uint32),
+        logits=jnp.zeros((capacity, n_classes), jnp.float32),
+        valid=jnp.zeros((capacity,), bool),
+        cursor=jnp.zeros((), jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        misses=jnp.zeros((), jnp.int32))
+
+
+def _leaf_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten a payload leaf to uint32 words, bit-exactly: float leaves are
+    bitcast (so -0.0 != 0.0 is preserved), integer leaves two's-complement
+    wrapped."""
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jax.lax.bitcast_convert_type(
+            x.astype(jnp.float32), jnp.uint32).reshape(-1)
+    return x.astype(jnp.uint32).reshape(-1)
+
+
+def _mix(words: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """One 32-bit hash of a uint32 word vector: xorshifted words times a
+    per-position multiplier stream, wrap-summed, then avalanched.
+
+    The multiplier stream is an *avalanched* (nonlinear) function of
+    (position, seed) — NOT ``seed * f(position)`` — so the two seeds yield
+    genuinely independent linear combinations of the words: a word delta
+    that cancels one seed's sum does not cancel the other's, keeping the
+    paired signature at ~64 collision bits rather than 32."""
+    idx = jnp.arange(words.shape[0], dtype=jnp.uint32)
+    mult = idx * jnp.uint32(2654435761) + seed
+    mult = (mult ^ (mult >> 15)) * jnp.uint32(2246822519)
+    mult = (mult ^ (mult >> 13)) | jnp.uint32(1)          # odd multipliers
+    h = jnp.sum((words ^ (words >> 16)) * mult, dtype=jnp.uint32)
+    h = (h ^ (h >> 15)) * jnp.uint32(2246822519)
+    return h ^ (h >> 13)
+
+
+def payload_signature(payload: Any) -> jnp.ndarray:
+    """(2,) uint32 signature of ONE entry's payload pytree.  Equal payloads
+    (bit-for-bit, including quantization ranges) get equal signatures; vmap
+    over the leading axis for a batch."""
+    words = jnp.concatenate(
+        [_leaf_u32(leaf) for leaf in jax.tree_util.tree_leaves(payload)])
+    return jnp.stack([_mix(words, s) for s in _MIX_SEEDS])
+
+
+def cache_lookup_batch(cache: RecoveryCache, sigs: jnp.ndarray,
+                       valid: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact-match lookup of (B, 2) signatures; returns ``(hit (B,) bool,
+    logits (B, L))`` — rows that miss carry unspecified logits (callers
+    select on ``hit``).  Rows with ``valid=False`` never hit."""
+    match = cache.valid[None, :] & jnp.all(
+        sigs[:, None, :] == cache.sig[None, :, :], axis=-1)   # (B, cap)
+    hit = jnp.any(match, axis=1) & valid
+    idx = jnp.argmax(match, axis=1)
+    return hit, cache.logits[idx]
+
+
+def cache_insert_batch(cache: RecoveryCache, sigs: jnp.ndarray,
+                       logits: jnp.ndarray, insert: jnp.ndarray
+                       ) -> RecoveryCache:
+    """FIFO-insert the rows with ``insert=True`` (typically ``valid & ~hit``)
+    at the ring cursor.  Duplicate signatures within one batch insert twice —
+    harmless: later lookups match the first copy."""
+    cap = cache.valid.shape[0]
+
+    def body(c, inp):
+        sig, lg, ins = inp
+        pos = c.cursor % cap
+        return RecoveryCache(
+            sig=c.sig.at[pos].set(jnp.where(ins, sig, c.sig[pos])),
+            logits=c.logits.at[pos].set(jnp.where(ins, lg, c.logits[pos])),
+            valid=c.valid.at[pos].set(jnp.where(ins, True, c.valid[pos])),
+            cursor=c.cursor + ins.astype(jnp.int32),
+            hits=c.hits, misses=c.misses), None
+
+    cache, _ = jax.lax.scan(body, cache, (sigs, logits, insert))
+    return cache

@@ -1,0 +1,181 @@
+"""Fixed-capacity, jit-friendly payload queue for the host tier.
+
+The host ingests wire-format coreset payloads from an intermittently-powered
+fleet: arrivals are bursty (nodes wake when their supercapacitor allows,
+Gobieski et al.), and every payload carries a QoS deadline — the slot by
+which the host must have answered for the result to still matter (Seeker's
+host-side latency bound).  This module is the buffering layer between the
+radio and the scheduler:
+
+* **ring-buffer storage** — a static-capacity slot array with a wrapping
+  write cursor; every operation is pure jnp on fixed shapes, so pushes and
+  pops trace once and live inside the host's jitted serve step;
+* **payload-agnostic** — the queue stores an arbitrary pytree of per-entry
+  arrays (the host server uses :class:`repro.host.server.HostPayload`), so
+  the same buffer works for cluster payloads, sampling payloads, or both;
+* **EDF-consistent overflow** — a push into a full queue discards the
+  *latest-deadline* entry (incoming or resident, whichever can wait least
+  usefully) and increments ``drops_overflow``, so pressure never evicts work
+  the scheduler would have run first.
+
+Deadline *expiry* (entries whose deadline has passed) is the scheduler's
+concern — see :func:`repro.host.scheduler.expire_deadlines`.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PayloadQueue", "queue_init", "queue_push", "queue_push_batch",
+           "queue_occupancy", "NO_DEADLINE"]
+
+# deadline key for empty slots: sorts after every real deadline
+NO_DEADLINE = jnp.iinfo(jnp.int32).max
+
+
+class PayloadQueue(NamedTuple):
+    """Slot-array queue; every leaf has leading ``capacity`` axis."""
+
+    payload: Any               # pytree of (cap, ...) arrays
+    node_id: jnp.ndarray       # (cap,) int32 — originating fleet node
+    arrival: jnp.ndarray       # (cap,) int32 — slot the payload arrived
+    deadline: jnp.ndarray      # (cap,) int32 — QoS deadline slot (inclusive)
+    valid: jnp.ndarray         # (cap,) bool
+    cursor: jnp.ndarray        # () int32 — ring write cursor
+    drops_overflow: jnp.ndarray  # () int32 — payloads discarded by overflow
+
+
+def queue_init(example_payload: Any, capacity: int) -> PayloadQueue:
+    """Empty queue whose payload slots mirror ``example_payload`` (one
+    UNBATCHED entry pytree; each leaf gains a leading capacity axis)."""
+    payload = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((capacity,) + jnp.shape(a), jnp.asarray(a).dtype),
+        example_payload)
+    return PayloadQueue(
+        payload=payload,
+        node_id=jnp.zeros((capacity,), jnp.int32),
+        arrival=jnp.zeros((capacity,), jnp.int32),
+        deadline=jnp.full((capacity,), NO_DEADLINE, jnp.int32),
+        valid=jnp.zeros((capacity,), bool),
+        cursor=jnp.zeros((), jnp.int32),
+        drops_overflow=jnp.zeros((), jnp.int32))
+
+
+def queue_occupancy(q: PayloadQueue) -> jnp.ndarray:
+    """() int32 — number of live entries."""
+    return jnp.sum(q.valid.astype(jnp.int32))
+
+
+def queue_push(q: PayloadQueue, payload: Any, node_id: jnp.ndarray,
+               arrival: jnp.ndarray, deadline: jnp.ndarray,
+               mask: jnp.ndarray | bool = True
+               ) -> tuple[PayloadQueue, jnp.ndarray]:
+    """Insert one entry; returns ``(queue, dropped)``.
+
+    The entry lands in the first free slot at/after the ring cursor.  When
+    the queue is full, the latest-deadline entry loses: an incoming payload
+    with an earlier deadline evicts the worst resident; otherwise the
+    incoming payload itself is discarded.  Either way exactly one payload is
+    dropped and ``drops_overflow`` increments.  ``mask=False`` makes the push
+    a no-op (inert padding rows in a batched ingest).
+    """
+    cap = q.valid.shape[0]
+    mask = jnp.asarray(mask, bool)
+    deadline = jnp.asarray(deadline, jnp.int32)
+
+    # first free slot in ring order from the cursor (cap == "no free slot")
+    ring_order = (jnp.arange(cap, dtype=jnp.int32) - q.cursor) % cap
+    free_order = jnp.where(q.valid, cap, ring_order)
+    free_slot = jnp.argmin(free_order).astype(jnp.int32)
+    has_free = jnp.any(~q.valid)
+
+    # overflow: victim = resident with the latest deadline (ties: lowest
+    # slot); an incoming deadline >= the victim's keeps the resident
+    victim = jnp.argmax(jnp.where(q.valid, q.deadline, -1)).astype(jnp.int32)
+    evict = q.deadline[victim] > deadline
+
+    write = mask & (has_free | evict)
+    widx = jnp.where(has_free, free_slot, victim)
+
+    def put(buf, val):
+        row = jnp.where(write, jnp.asarray(val, buf.dtype), buf[widx])
+        return buf.at[widx].set(row)
+
+    dropped = mask & ~has_free
+    return PayloadQueue(
+        payload=jax.tree_util.tree_map(put, q.payload, payload),
+        node_id=put(q.node_id, node_id),
+        arrival=put(q.arrival, arrival),
+        deadline=put(q.deadline, deadline),
+        valid=q.valid.at[widx].set(jnp.where(write, True, q.valid[widx])),
+        cursor=jnp.where(write, (widx + 1) % cap, q.cursor),
+        drops_overflow=q.drops_overflow + dropped.astype(jnp.int32),
+    ), dropped
+
+
+def _bulk_insert(q: PayloadQueue, payloads: Any, node_ids: jnp.ndarray,
+                 arrivals: jnp.ndarray, deadlines: jnp.ndarray,
+                 mask: jnp.ndarray) -> tuple[PayloadQueue, jnp.ndarray]:
+    """No-overflow fast path: the i-th masked entry lands in the i-th free
+    slot in ring order — one vectorized scatter per leaf instead of A
+    sequential pushes.  Bitwise-equal (slots, cursor) to the sequential path
+    whenever every masked entry fits."""
+    cap = q.valid.shape[0]
+    ring_order = (jnp.arange(cap, dtype=jnp.int32) - q.cursor) % cap
+    # free slots first, in ring order (stable sort; occupied pushed to back)
+    slot_rank = jnp.argsort(jnp.where(q.valid, cap + ring_order, ring_order))
+    entry_rank = jnp.cumsum(mask.astype(jnp.int32)) - 1        # (A,)
+    # masked-out rows scatter out of bounds -> dropped by mode="drop"
+    target = jnp.where(mask, slot_rank[jnp.clip(entry_rank, 0, cap - 1)],
+                       cap)
+
+    def put(buf, vals):
+        return buf.at[target].set(vals.astype(buf.dtype), mode="drop")
+
+    n_pushed = entry_rank[-1] + 1
+    last = target[jnp.argmax(jnp.where(mask, jnp.arange(mask.shape[0]), -1))]
+    return PayloadQueue(
+        payload=jax.tree_util.tree_map(put, q.payload, payloads),
+        node_id=put(q.node_id, node_ids),
+        arrival=put(q.arrival, arrivals),
+        deadline=put(q.deadline, deadlines.astype(jnp.int32)),
+        valid=q.valid.at[target].set(True, mode="drop"),
+        cursor=jnp.where(n_pushed > 0, (last + 1) % cap, q.cursor),
+        drops_overflow=q.drops_overflow,
+    ), jnp.zeros((), jnp.int32)
+
+
+def queue_push_batch(q: PayloadQueue, payloads: Any, node_ids: jnp.ndarray,
+                     arrivals: jnp.ndarray, deadlines: jnp.ndarray,
+                     mask: jnp.ndarray
+                     ) -> tuple[PayloadQueue, jnp.ndarray]:
+    """Push ``A`` stamped entries (leaves have leading axis A) in order;
+    returns ``(queue, n_dropped)``.  Rows with ``mask=False`` are skipped —
+    the fixed-width ingest lane of a churny fleet slot.
+
+    When every masked entry fits in the free slots (the common serving case)
+    a single vectorized scatter does the whole insert; only a lane that
+    might overflow falls back to the sequential per-entry walk with its
+    latest-deadline drop policy.  Both paths leave identical queues when no
+    overflow occurs.
+    """
+    mask = jnp.asarray(mask, bool)
+
+    def body(carry, inp):
+        payload, nid, arr, dl, m = inp
+        qq, dropped = queue_push(carry, payload, nid, arr, dl, m)
+        return qq, dropped
+
+    def sequential(args):
+        qq, pl, nid, arr, dl, m = args
+        qq, dropped = jax.lax.scan(body, qq, (pl, nid, arr, dl, m))
+        return qq, jnp.sum(dropped.astype(jnp.int32))
+
+    n_free = jnp.sum((~q.valid).astype(jnp.int32))
+    n_in = jnp.sum(mask.astype(jnp.int32))
+    return jax.lax.cond(n_in <= n_free,
+                        lambda a: _bulk_insert(*a),
+                        sequential,
+                        (q, payloads, node_ids, arrivals, deadlines, mask))

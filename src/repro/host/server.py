@@ -1,0 +1,444 @@
+"""The host serve loop: queue -> EDF scheduler -> batched recovery -> DNN.
+
+This is the host half of the paper's system, as a real serving subsystem
+instead of per-payload inline work: wire-format payloads from the fleet are
+stamped with QoS deadlines and pushed into the :mod:`repro.host.queue` ring
+buffer; each serve slot the :mod:`repro.host.scheduler` assembles one or
+more **fixed-shape** EDF microbatches; the batch is decoded
+(:func:`repro.serving.edge_host.decode_wire_coresets` /
+``decode_wire_samples``), recovered (cluster-ball resynthesis or the
+GAN generator, selected per entry), and run through the full-precision HAR
+DNN in one batched ``har_apply``; per-node results accumulate into a mean-
+logit ensemble and a majority-vote histogram (the paper's multi-sensor
+host ensemble).
+
+Design points:
+
+* **compile-cache stability** — every tensor entering the jitted slot has a
+  shape fixed by :class:`HostServeConfig` (batch size, queue capacity,
+  ingest width), never by fleet occupancy, so a churny trace compiles the
+  slot ONCE.  :func:`serve_trace_count` exposes the trace counter the tests
+  pin (acceptance: <= 2 distinct compiled shapes over a churny trace).
+* **payload-deterministic recovery PRNG** — each payload's recovery key is
+  ``fold_in(base_key, signature)``, so identical payloads recover
+  identically and the :mod:`repro.host.cache` memo is *bitwise* equal to
+  recomputation.  A batch whose live entries all hit skips recovery + DNN
+  entirely (``lax.cond``), mirroring D0's skip on the node.
+* **resumable carry** — :class:`HostServerState` is an explicit pytree
+  carry, exactly like the fleet engine's ``state0``/``final_state``:
+  chaining ``host_serve_slot``/``host_serve_trace`` calls continues the
+  clock, queue backlog, cache and ensemble where the last call stopped.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.coreset import ClusterCoreset, SamplingCoreset
+from ..core.recovery import (GeneratorParams, recover_cluster_window,
+                             recover_sampling_window)
+from ..models.har import har_apply
+from ..serving.edge_host import (WirePayload, WireSamplePayload,
+                                 decode_wire_coresets, decode_wire_samples)
+from .cache import (RecoveryCache, cache_init, cache_insert_batch,
+                    cache_lookup_batch, payload_signature)
+from .queue import PayloadQueue, queue_init, queue_occupancy, queue_push_batch
+from .scheduler import edf_pop_batch
+
+__all__ = ["HostServeConfig", "HostPayload", "HostServerState", "SlotOutput",
+           "host_payload_example", "cluster_entries", "sampling_entries",
+           "host_server_init", "host_serve_slot", "host_serve_trace",
+           "serve_fleet_payloads", "recover_infer_batch", "host_server_stats",
+           "host_ensemble", "serve_trace_count"]
+
+CLUSTER_KIND = 0    # D3 payload: quantized cluster coreset
+SAMPLING_KIND = 1   # D4 payload: quantized importance samples + moments
+
+
+@dataclasses.dataclass(frozen=True)
+class HostServeConfig:
+    """Static shape/QoS configuration of one host server (hashable: it keys
+    the compile cache — one executable per config, reused across slots)."""
+
+    channels: int               # sensor channels C
+    k: int                      # clusters per channel (cluster payloads)
+    m: int                      # samples per window (sampling payloads)
+    t: int                      # window length the host recovers to
+    n_classes: int
+    n_nodes: int                # fleet size for the per-node ensemble
+    batch_size: int = 64        # EDF microbatch rows (fixed shape)
+    queue_capacity: int = 256   # ring-buffer slots (>= ingest width per slot)
+    cache_capacity: int = 256   # recovery-memo entries
+    qos_slots: int = 4          # deadline = arrival + qos_slots (inclusive)
+    batches_per_slot: int = 1   # host service rate per slot
+
+
+class HostPayload(NamedTuple):
+    """One queue entry's payload: the union of the two wire formats, with a
+    ``kind`` discriminator (all branches traced, selection by mask — the
+    repo-wide pattern for static shapes).  Unused half is zeros."""
+
+    kind: jnp.ndarray       # () int8 — CLUSTER_KIND | SAMPLING_KIND
+    # D3: quantized cluster coreset (codes + dequantization ranges)
+    c_codes: jnp.ndarray    # (C, k, 2) int16
+    r_codes: jnp.ndarray    # (C, k) int8
+    n_codes: jnp.ndarray    # (C, k) int8
+    c_lo: jnp.ndarray       # () float32
+    c_hi: jnp.ndarray       # () float32
+    c_rhi: jnp.ndarray      # () float32
+    # D4: quantized importance samples + GAN conditioning moments
+    s_idx: jnp.ndarray      # (m,) int8
+    s_codes: jnp.ndarray    # (m, C) int16
+    s_lo: jnp.ndarray       # () float32
+    s_hi: jnp.ndarray       # () float32
+    s_mean: jnp.ndarray     # (C,) float32
+    s_var: jnp.ndarray      # (C,) float32
+
+
+class SlotOutput(NamedTuple):
+    """Per-slot served results: ``batches_per_slot * batch_size`` rows in
+    EDF service order; padding rows have ``valid=False``."""
+
+    node_id: jnp.ndarray    # (Bq,) int32
+    logits: jnp.ndarray     # (Bq, L) float32
+    deadline: jnp.ndarray   # (Bq,) int32
+    cache_hit: jnp.ndarray  # (Bq,) bool
+    valid: jnp.ndarray      # (Bq,) bool
+
+
+class HostServerState(NamedTuple):
+    """The resumable serve-loop carry (cf. the fleet engine's state0)."""
+
+    queue: PayloadQueue
+    cache: RecoveryCache
+    slot: jnp.ndarray             # () int32 — host clock
+    served: jnp.ndarray           # () int32 — payloads answered in time
+    deadline_misses: jnp.ndarray  # () int32 — expired before service
+    ensemble_logits: jnp.ndarray  # (n_nodes, L) float32 — summed logits
+    ensemble_votes: jnp.ndarray   # (n_nodes, L) int32 — argmax histogram
+
+
+def host_payload_example(cfg: HostServeConfig) -> HostPayload:
+    """Zero entry pytree defining the queue's slot shapes."""
+    c, k, m = cfg.channels, cfg.k, cfg.m
+    z = jnp.zeros
+    return HostPayload(
+        kind=z((), jnp.int8),
+        c_codes=z((c, k, 2), jnp.int16), r_codes=z((c, k), jnp.int8),
+        n_codes=z((c, k), jnp.int8), c_lo=z(()), c_hi=z(()), c_rhi=z(()),
+        s_idx=z((m,), jnp.int8), s_codes=z((m, c), jnp.int16),
+        s_lo=z(()), s_hi=z(()), s_mean=z((c,)), s_var=z((c,)))
+
+
+def cluster_entries(wire: WirePayload, m: int) -> HostPayload:
+    """Batched D3 entries from a quantized cluster wire payload (the tensors
+    :func:`repro.serving.edge_host.fleet_serve_step` gathers)."""
+    b, c, _, _ = wire.c_codes.shape
+    z = jnp.zeros
+    return HostPayload(
+        kind=z((b,), jnp.int8),
+        c_codes=wire.c_codes, r_codes=wire.r_codes, n_codes=wire.n_codes,
+        c_lo=wire.lo.reshape(b), c_hi=wire.hi.reshape(b),
+        c_rhi=wire.rhi.reshape(b),
+        s_idx=z((b, m), jnp.int8), s_codes=z((b, m, c), jnp.int16),
+        s_lo=z((b,)), s_hi=z((b,)), s_mean=z((b, c)), s_var=z((b, c)))
+
+
+def sampling_entries(swire: WireSamplePayload, k: int) -> HostPayload:
+    """Batched D4 entries from a quantized sampling wire payload."""
+    b, m = swire.idx.shape
+    c = swire.v_codes.shape[-1]
+    z = jnp.zeros
+    return HostPayload(
+        kind=jnp.full((b,), SAMPLING_KIND, jnp.int8),
+        c_codes=z((b, c, k, 2), jnp.int16), r_codes=z((b, c, k), jnp.int8),
+        n_codes=z((b, c, k), jnp.int8), c_lo=z((b,)), c_hi=z((b,)),
+        c_rhi=z((b,)),
+        s_idx=swire.idx, s_codes=swire.v_codes,
+        s_lo=swire.lo.reshape(b), s_hi=swire.hi.reshape(b),
+        s_mean=swire.mean, s_var=swire.var)
+
+
+def host_server_init(cfg: HostServeConfig) -> HostServerState:
+    return HostServerState(
+        queue=queue_init(host_payload_example(cfg), cfg.queue_capacity),
+        cache=cache_init(cfg.cache_capacity, cfg.n_classes),
+        slot=jnp.zeros((), jnp.int32),
+        served=jnp.zeros((), jnp.int32),
+        deadline_misses=jnp.zeros((), jnp.int32),
+        ensemble_logits=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.float32),
+        ensemble_votes=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Batched recovery + inference (the host DNN path)
+# ---------------------------------------------------------------------------
+
+def recover_infer_batch(payload: WirePayload, host_params: dict,
+                        keys: jax.Array, t: int) -> jnp.ndarray:
+    """Dequantize a cluster wire-payload batch, recover windows, run the
+    full-precision DNN -> (B, n_classes) logits.  The batched host compute
+    shared by the serving tiers (:func:`edge_host_serve_step`,
+    :func:`fleet_serve_step`) and this server's miss path."""
+    centers, radii, counts = decode_wire_coresets(payload)
+    wins = jax.vmap(lambda c, r, n, kk: recover_cluster_window(
+        ClusterCoreset(c, r, n), kk, t))(centers, radii, counts, keys)
+    return har_apply(host_params, wins)
+
+
+def _entry_windows(p: HostPayload, gen_params: GeneratorParams,
+                   keys: jax.Array, t: int, valid: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Recover a (B, T, C) window batch from mixed-kind entries.
+
+    Both recovery paths are traced, but a ``lax.switch`` on the batch's kind
+    mix runs only what the batch needs at runtime: a single-kind microbatch
+    (the common case — a fleet round is all-D3) skips the other recovery
+    entirely; only genuinely mixed batches compute both and select per
+    entry.  Rows with ``valid=False`` count as neither kind.
+    """
+    b = p.kind.shape[0]
+
+    def cluster_windows(_):
+        wire = WirePayload(p.c_codes, p.r_codes, p.n_codes,
+                           p.c_lo.reshape(b, 1, 1, 1),
+                           p.c_hi.reshape(b, 1, 1, 1),
+                           p.c_rhi.reshape(b, 1, 1))
+        centers, radii, counts = decode_wire_coresets(wire)
+        return jax.vmap(lambda c, r, n, kk: recover_cluster_window(
+            ClusterCoreset(c, r, n), kk, t))(centers, radii, counts, keys)
+
+    def sampling_windows(_):
+        swire = WireSamplePayload(p.s_idx, p.s_codes, p.s_lo.reshape(b, 1, 1),
+                                  p.s_hi.reshape(b, 1, 1), p.s_mean, p.s_var)
+        idx, vals, mean, var = decode_wire_samples(swire)
+        return jax.vmap(
+            lambda i, v, mu, va, kk: recover_sampling_window(
+                gen_params,
+                SamplingCoreset(i, v, jnp.ones_like(i, jnp.float32), mu, va),
+                kk, t))(idx, vals, mean, var, keys)
+
+    def mixed(_):
+        return jnp.where((p.kind == CLUSTER_KIND)[:, None, None],
+                         cluster_windows(None), sampling_windows(None))
+
+    has_sampling = jnp.any(valid & (p.kind == SAMPLING_KIND))
+    has_cluster = jnp.any(valid & (p.kind == CLUSTER_KIND))
+    branch = jnp.where(has_sampling & has_cluster, 2,
+                       jnp.where(has_sampling, 1, 0))
+    return jax.lax.switch(branch, [cluster_windows, sampling_windows, mixed],
+                          None)
+
+
+# ---------------------------------------------------------------------------
+# The jitted serve slot
+# ---------------------------------------------------------------------------
+
+# trace-time event counter: incremented when XLA (re)traces a serve function,
+# i.e. once per distinct compiled shape — the compile-cache acceptance probe
+_TRACE_EVENTS: collections.Counter = collections.Counter()
+
+
+def serve_trace_count(cfg: HostServeConfig | None = None) -> int:
+    """How many times serve functions were traced (== compiled shapes).
+
+    With ``cfg``, counts every trace for that config *including* its
+    service-rate variants (``batches_per_slot`` differences — e.g. the
+    config :func:`serve_fleet_payloads` derives per fleet round): a variant
+    is a distinct compiled shape and must show up in the probe.  Without
+    ``cfg``, the global total."""
+    if cfg is not None:
+        key = dataclasses.replace(cfg, batches_per_slot=0)
+        return sum(
+            n for (c, _), n in _TRACE_EVENTS.items()
+            if dataclasses.replace(c, batches_per_slot=0) == key)
+    return sum(_TRACE_EVENTS.values())
+
+
+def _slot_body(cfg: HostServeConfig, state: HostServerState,
+               entries: HostPayload, node_ids: jnp.ndarray,
+               mask: jnp.ndarray, host_params: dict,
+               gen_params: GeneratorParams, base_key: jax.Array
+               ) -> tuple[HostServerState, SlotOutput]:
+    """One serve slot: ingest stamped arrivals, then run
+    ``cfg.batches_per_slot`` EDF microbatches through cache + recovery +
+    DNN.  Pure function of fixed-shape inputs."""
+    arrival = jnp.broadcast_to(state.slot, node_ids.shape)
+    deadline = arrival + cfg.qos_slots
+    queue, _ = queue_push_batch(state.queue, entries, node_ids, arrival,
+                                deadline, mask)
+
+    cache = state.cache
+    served, missed_total = state.served, state.deadline_misses
+    ens_l, ens_v = state.ensemble_logits, state.ensemble_votes
+    outs = []
+    for _ in range(cfg.batches_per_slot):
+        queue, batch, missed = edf_pop_batch(queue, cfg.batch_size,
+                                             now=state.slot)
+        missed_total = missed_total + missed
+
+        sigs = jax.vmap(payload_signature)(batch.payload)        # (B, 2)
+        hit, cached = cache_lookup_batch(cache, sigs, batch.valid)
+        keys = jax.vmap(
+            lambda s: jax.random.fold_in(jax.random.fold_in(base_key, s[0]),
+                                         s[1]))(sigs)
+
+        def compute(_):
+            wins = _entry_windows(batch.payload, gen_params, keys, cfg.t,
+                                  batch.valid)
+            return har_apply(host_params, wins)
+
+        # a fully-memoized batch skips recovery + DNN (the host-side D0 skip)
+        all_hit = jnp.all(hit | ~batch.valid)
+        logits = jax.lax.cond(all_hit, lambda _: cached, compute, None)
+        logits = jnp.where(hit[:, None], cached, logits)
+
+        fresh = batch.valid & ~hit
+        cache = cache_insert_batch(cache, sigs, logits, fresh)
+        cache = cache._replace(
+            hits=cache.hits + jnp.sum(hit.astype(jnp.int32)),
+            misses=cache.misses + jnp.sum(fresh.astype(jnp.int32)))
+        served = served + jnp.sum(batch.valid.astype(jnp.int32))
+
+        # per-node ensemble: mean-logit sum + majority-vote histogram
+        nid = jnp.clip(jnp.where(batch.valid, batch.node_id, 0),
+                       0, cfg.n_nodes - 1)
+        w = batch.valid.astype(jnp.float32)[:, None]
+        ens_l = ens_l.at[nid].add(logits * w)
+        votes = (jax.nn.one_hot(jnp.argmax(logits, axis=-1), cfg.n_classes,
+                                dtype=jnp.int32)
+                 * batch.valid[:, None].astype(jnp.int32))
+        ens_v = ens_v.at[nid].add(votes)
+        outs.append(SlotOutput(batch.node_id, logits, batch.deadline,
+                               hit, batch.valid))
+
+    out = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                 *outs)
+    new_state = HostServerState(queue, cache, state.slot + 1, served,
+                                missed_total, ens_l, ens_v)
+    return new_state, out
+
+
+@functools.lru_cache(maxsize=32)
+def _build_serve_slot(cfg: HostServeConfig, donate: bool):
+    def slot(state, entries, node_ids, mask, host_params, gen_params,
+             base_key):
+        _TRACE_EVENTS[(cfg, "slot")] += 1    # trace-time only
+        return _slot_body(cfg, state, entries, node_ids, mask, host_params,
+                          gen_params, base_key)
+    return jax.jit(slot, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=32)
+def _build_serve_trace(cfg: HostServeConfig, donate: bool):
+    def trace(state, entries, node_ids, masks, host_params, gen_params,
+              base_key):
+        _TRACE_EVENTS[(cfg, "trace")] += 1   # trace-time only
+
+        def step(carry, inp):
+            e, nid, m = inp
+            return _slot_body(cfg, carry, e, nid, m, host_params, gen_params,
+                              base_key)
+
+        return jax.lax.scan(step, state, (entries, node_ids, masks))
+    return jax.jit(trace, donate_argnums=(0,) if donate else ())
+
+
+def host_serve_slot(state: HostServerState, entries: HostPayload,
+                    node_ids: jnp.ndarray, mask: jnp.ndarray, *,
+                    cfg: HostServeConfig, host_params: dict,
+                    gen_params: GeneratorParams, base_key: jax.Array,
+                    donate: bool = False
+                    ) -> tuple[HostServerState, SlotOutput]:
+    """Streaming entry point: one serve slot over a fixed-width ingest lane.
+
+    ``entries`` leaves have leading axis A (the lane width — pad a churny
+    slot's arrivals up to a FIXED A and mask the padding; a varying A would
+    recompile).  Returns ``(state', SlotOutput)``; feed ``state'`` back in —
+    backlog, cache, clock and ensemble all carry over."""
+    run = _build_serve_slot(cfg, donate)
+    return run(state, entries, jnp.asarray(node_ids, jnp.int32),
+               jnp.asarray(mask, bool), host_params, gen_params, base_key)
+
+
+def host_serve_trace(state: HostServerState, entries: HostPayload,
+                     node_ids: jnp.ndarray, masks: jnp.ndarray, *,
+                     cfg: HostServeConfig, host_params: dict,
+                     gen_params: GeneratorParams, base_key: jax.Array,
+                     donate: bool = False
+                     ) -> tuple[HostServerState, SlotOutput]:
+    """Whole-trace entry point: ``lax.scan`` of the serve slot over S slots
+    (entry leaves (S, A, ...), masks (S, A)) in ONE compiled program.
+    Resumable exactly like the fleet engine: chaining two traces through the
+    returned state equals one long trace."""
+    run = _build_serve_trace(cfg, donate)
+    return run(state, entries, jnp.asarray(node_ids, jnp.int32),
+               jnp.asarray(masks, bool), host_params, gen_params, base_key)
+
+
+def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
+                         node_ids: jnp.ndarray, *, cfg: HostServeConfig,
+                         host_params: dict, gen_params: GeneratorParams,
+                         base_key: jax.Array, donate: bool = False
+                         ) -> tuple[HostServerState, SlotOutput]:
+    """Ingest one fleet round of gathered cluster payloads (what
+    :func:`repro.serving.edge_host.fleet_serve_step` all_gathers) and serve
+    enough EDF microbatches to cover them at the configured batch size."""
+    entries = cluster_entries(wire, cfg.m)
+    b = entries.kind.shape[0]
+    if b > cfg.queue_capacity:
+        raise ValueError(
+            f"fleet round of {b} payloads exceeds queue capacity "
+            f"{cfg.queue_capacity}; raise HostServeConfig.queue_capacity")
+    n_batches = -(-b // cfg.batch_size)
+    cfg = dataclasses.replace(cfg, batches_per_slot=n_batches)
+    return host_serve_slot(state, entries, node_ids,
+                           jnp.ones((b,), bool), cfg=cfg,
+                           host_params=host_params, gen_params=gen_params,
+                           base_key=base_key, donate=donate)
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+def host_server_stats(state: HostServerState) -> dict:
+    """QoS counters as python numbers (one sync; call off the hot path)."""
+    served = int(state.served)
+    missed = int(state.deadline_misses)
+    dropped = int(state.queue.drops_overflow)
+    hits, misses = int(state.cache.hits), int(state.cache.misses)
+    total = served + missed + dropped
+    return {
+        "slot": int(state.slot),
+        "served": served,
+        "deadline_misses": missed,
+        "drops_overflow": dropped,
+        "backlog": int(queue_occupancy(state.queue)),
+        "deadline_miss_rate": missed / max(total, 1),
+        "qos_fail_rate": (missed + dropped) / max(total, 1),  # misses + drops
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "cache_hit_rate": hits / max(hits + misses, 1),
+    }
+
+
+def host_ensemble(state: HostServerState) -> dict:
+    """Per-node ensemble answers from the accumulated serve history:
+    ``pred_mean`` (argmax of summed logits — the paper's logit ensemble) and
+    ``pred_vote`` (majority vote over per-payload argmaxes), plus per-node
+    served counts.  Nodes never served predict class 0 with count 0."""
+    counts = jnp.sum(state.ensemble_votes, axis=-1)            # (N,)
+    mean_logits = state.ensemble_logits \
+        / jnp.maximum(counts, 1)[:, None].astype(jnp.float32)
+    return {
+        "counts": counts,
+        "mean_logits": mean_logits,
+        "pred_mean": jnp.argmax(mean_logits, axis=-1),
+        "pred_vote": jnp.argmax(state.ensemble_votes, axis=-1),
+    }

@@ -4,7 +4,9 @@ from .edge_host import (  # noqa: F401
     seeker_sensor_step_given_corr, seeker_host_step, seeker_simulate,
     seeker_simulate_reference, edge_host_serve_step, fleet_serve_step,
     WirePayload, encode_wire_coresets, decode_wire_coresets,
-    wire_payload_nbytes,
+    wire_payload_nbytes, wire_payload_to_bytes, wire_payload_from_bytes,
+    WireSamplePayload, encode_wire_samples, decode_wire_samples,
+    wire_sample_nbytes,
 )
 from .fleet import (  # noqa: F401
     fleet_node_init, seeker_fleet_simulate, seeker_fleet_simulate_sharded,

@@ -47,7 +47,10 @@ __all__ = ["SeekerNodeState", "seeker_node_init", "seeker_sensor_step",
            "seeker_simulate", "seeker_simulate_reference",
            "edge_host_serve_step", "fleet_serve_step", "WirePayload",
            "encode_wire_coresets", "decode_wire_coresets",
-           "wire_payload_nbytes"]
+           "wire_payload_nbytes", "wire_payload_to_bytes",
+           "wire_payload_from_bytes", "WireSamplePayload",
+           "encode_wire_samples", "decode_wire_samples",
+           "wire_sample_nbytes"]
 
 
 class SeekerNodeState(NamedTuple):
@@ -332,12 +335,64 @@ def encode_wire_coresets(centers: jnp.ndarray, radii: jnp.ndarray,
     return WirePayload(c_codes, r_codes, n_codes, lo, hi, rhi)
 
 
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+try:                                   # jax.core slimming across versions
+    _Tracer = jax.core.Tracer
+except AttributeError:                 # pragma: no cover - newest jax only
+    from jax._src.core import Tracer as _Tracer
+
+
+def _is_concrete(x) -> bool:
+    """True when ``x`` carries actual values (not a jit/vmap tracer) — value
+    validation only runs on the host ingest path, never during tracing."""
+    return not isinstance(x, _Tracer)
+
+
 def decode_wire_coresets(p: WirePayload):
-    """Host-side dequantization; returns (centers, radii, counts int32)."""
-    centers = ((p.c_codes.astype(jnp.float32) + 32768.0) / 65535.0
+    """Host-side dequantization; returns (centers, radii, counts int32).
+
+    The host queue ingests these payloads from untrusted radio bytes, so the
+    decode is defensive: field dtypes and cross-field shapes are validated
+    always (static, jit-safe); code-range checks (4-bit counts) additionally
+    run whenever the payload is concrete.  Malformed payloads raise
+    ``ValueError`` instead of silently dequantizing garbage.
+    """
+    c_codes, r_codes, n_codes = map(jnp.asarray,
+                                    (p.c_codes, p.r_codes, p.n_codes))
+    _check(c_codes.dtype == jnp.int16,
+           f"wire payload c_codes must be int16, got {c_codes.dtype}")
+    _check(r_codes.dtype == jnp.int8,
+           f"wire payload r_codes must be int8, got {r_codes.dtype}")
+    _check(n_codes.dtype == jnp.int8,
+           f"wire payload n_codes must be int8, got {n_codes.dtype}")
+    _check(c_codes.ndim >= 2 and c_codes.shape[-1] == 2,
+           f"wire payload c_codes must be (..., k, 2) 2-D center codes, "
+           f"got shape {c_codes.shape}")
+    _check(r_codes.shape == c_codes.shape[:-1],
+           f"wire payload r_codes shape {r_codes.shape} does not match "
+           f"c_codes {c_codes.shape}")
+    _check(n_codes.shape == r_codes.shape,
+           f"wire payload n_codes shape {n_codes.shape} does not match "
+           f"r_codes {r_codes.shape}")
+    for name, f in (("lo", p.lo), ("hi", p.hi), ("rhi", p.rhi)):
+        _check(jnp.issubdtype(jnp.asarray(f).dtype, jnp.floating),
+               f"wire payload {name} range must be floating, got "
+               f"{jnp.asarray(f).dtype}")
+    if _is_concrete(n_codes):
+        import numpy as np
+        nc = np.asarray(n_codes)
+        _check(bool((nc >= 0).all() and (nc <= 15).all()),
+               f"wire payload counts outside the 4-bit field [0, 15]: "
+               f"min {nc.min()}, max {nc.max()}")
+
+    centers = ((c_codes.astype(jnp.float32) + 32768.0) / 65535.0
                * (p.hi - p.lo) + p.lo)
-    radii = (p.r_codes.astype(jnp.float32) + 128.0) / 255.0 * p.rhi
-    return centers, radii, p.n_codes.astype(jnp.int32)
+    radii = (r_codes.astype(jnp.float32) + 128.0) / 255.0 * p.rhi
+    return centers, radii, n_codes.astype(jnp.int32)
 
 
 def wire_payload_nbytes(k: int, channels: int) -> int:
@@ -347,6 +402,164 @@ def wire_payload_nbytes(k: int, channels: int) -> int:
     paper's §3.2.2 accounting at the tensor field widths."""
     return channels * cluster_payload_bytes(k, bytes_center=4, bytes_radius=1,
                                             bits_count=8)
+
+
+# --- byte-level framing: what the host's untrusted ingest actually parses --
+
+_WIRE_MAGIC = 0x5EEC          # "SEEker Coreset"
+_WIRE_VERSION = 1
+_WIRE_HEADER = 20             # 5 x uint32: magic, version, B, C, k
+
+
+def wire_payload_to_bytes(p: WirePayload) -> bytes:
+    """Serialize a quantized coreset payload to one radio frame: a 20-B
+    header (magic, version, B, C, k) followed by the little-endian code
+    tensors and float ranges."""
+    import numpy as np
+
+    b, c, k, _ = p.c_codes.shape
+    head = np.asarray([_WIRE_MAGIC, _WIRE_VERSION, b, c, k], "<u4")
+    return b"".join([
+        head.tobytes(),
+        np.asarray(p.c_codes).astype("<i2").tobytes(),
+        np.asarray(p.r_codes).astype("i1").tobytes(),
+        np.asarray(p.n_codes).astype("i1").tobytes(),
+        np.asarray(p.lo).astype("<f4").tobytes(),
+        np.asarray(p.hi).astype("<f4").tobytes(),
+        np.asarray(p.rhi).astype("<f4").tobytes(),
+    ])
+
+
+def wire_payload_from_bytes(buf: bytes) -> WirePayload:
+    """Parse + validate one radio frame back into a :class:`WirePayload`.
+
+    This is the host queue's trust boundary: buffer length, header fields,
+    count codes and range floats are all checked, and any malformed frame
+    raises ``ValueError`` with the reason — truncation, bad magic, counts
+    outside the 4-bit field, or non-finite dequantization ranges.
+    """
+    import numpy as np
+
+    buf = bytes(buf)
+    _check(len(buf) >= _WIRE_HEADER,
+           f"truncated wire frame: {len(buf)} B is shorter than the "
+           f"{_WIRE_HEADER}-B header")
+    magic, version, b, c, k = np.frombuffer(buf[:_WIRE_HEADER], "<u4")
+    _check(magic == _WIRE_MAGIC,
+           f"not a Seeker coreset frame (magic 0x{int(magic):X}, "
+           f"want 0x{_WIRE_MAGIC:X})")
+    _check(version == _WIRE_VERSION,
+           f"unsupported wire version {int(version)} (want {_WIRE_VERSION})")
+    b, c, k = int(b), int(c), int(k)
+    _check(b > 0 and c > 0 and k > 0,
+           f"degenerate wire dims B={b}, C={c}, k={k}")
+    want = _WIRE_HEADER + 6 * b * c * k + 12 * b
+    _check(len(buf) == want,
+           f"truncated/oversized wire frame: {len(buf)} B, B={b} C={c} "
+           f"k={k} needs {want} B")
+
+    off = _WIRE_HEADER
+    def take(count, dtype, shape):
+        nonlocal off
+        n = count * np.dtype(dtype).itemsize
+        arr = np.frombuffer(buf[off:off + n], dtype).reshape(shape)
+        off += n
+        return arr
+
+    c_codes = take(b * c * k * 2, "<i2", (b, c, k, 2))
+    r_codes = take(b * c * k, "i1", (b, c, k))
+    n_codes = take(b * c * k, "i1", (b, c, k))
+    lo = take(b, "<f4", (b, 1, 1, 1))
+    hi = take(b, "<f4", (b, 1, 1, 1))
+    rhi = take(b, "<f4", (b, 1, 1))
+    _check(bool((n_codes >= 0).all() and (n_codes <= 15).all()),
+           f"wire frame counts outside the 4-bit field [0, 15]: "
+           f"min {n_codes.min()}, max {n_codes.max()}")
+    _check(bool(np.isfinite(lo).all() and np.isfinite(hi).all()
+                and np.isfinite(rhi).all()),
+           "wire frame dequantization ranges are not finite")
+    _check(bool((hi >= lo).all()),
+           "wire frame center range has hi < lo")
+    return WirePayload(jnp.asarray(c_codes), jnp.asarray(r_codes),
+                       jnp.asarray(n_codes), jnp.asarray(lo),
+                       jnp.asarray(hi), jnp.asarray(rhi))
+
+
+# ---------------------------------------------------------------------------
+# Sampling-coreset wire format (the D4 payload: samples + GAN conditioning)
+# ---------------------------------------------------------------------------
+
+class WireSamplePayload(NamedTuple):
+    """Quantized importance-sampling payload on the wire: int8 time indices
+    (1 B, paper §3.2.2), int16 value codes (2 B per channel) with the
+    per-window dequantization range, and the first/second moments that
+    condition the recovery GAN (paper A.1) — carried as floats like the
+    cluster format's range scalars, accounted at the paper's 2-B width."""
+
+    idx: jnp.ndarray        # (B, m) int8 — selected time indices
+    v_codes: jnp.ndarray    # (B, m, C) int16 — quantized sample values
+    lo: jnp.ndarray         # (B, 1, 1) value range low
+    hi: jnp.ndarray         # (B, 1, 1) value range high
+    mean: jnp.ndarray       # (B, C) window mean (GAN conditioning)
+    var: jnp.ndarray        # (B, C) window variance (GAN conditioning)
+
+
+def encode_wire_samples(indices: jnp.ndarray, values: jnp.ndarray,
+                        mean: jnp.ndarray, var: jnp.ndarray
+                        ) -> WireSamplePayload:
+    """Quantize batched sampling coresets for transmission.
+
+    indices (B, m) int, values (B, m, C), mean/var (B, C) — the batched
+    fields of :class:`repro.core.coreset.SamplingCoreset`.  Indices must fit
+    the int8 wire field (window length < 128 — the paper's windows are 60).
+    """
+    if _is_concrete(indices):
+        import numpy as np
+        ix = np.asarray(indices)
+        _check(bool((ix >= 0).all() and (ix <= 127).all()),
+               f"sample indices outside the int8 wire field [0, 127]: "
+               f"min {ix.min()}, max {ix.max()}")
+    lo = jnp.min(values, axis=(1, 2), keepdims=True)
+    hi = jnp.max(values, axis=(1, 2), keepdims=True)
+    v_codes = jnp.round((values - lo) / jnp.maximum(hi - lo, 1e-9)
+                        * 65535.0 - 32768.0).astype(jnp.int16)
+    return WireSamplePayload(indices.astype(jnp.int8), v_codes, lo, hi,
+                             mean.astype(jnp.float32),
+                             var.astype(jnp.float32))
+
+
+def decode_wire_samples(p: WireSamplePayload):
+    """Host-side dequantization; returns (indices int32, values, mean, var).
+    Defensive like :func:`decode_wire_coresets`: dtype/shape always checked,
+    index-range checks when the payload is concrete."""
+    idx, v_codes = jnp.asarray(p.idx), jnp.asarray(p.v_codes)
+    _check(idx.dtype == jnp.int8,
+           f"sample payload idx must be int8, got {idx.dtype}")
+    _check(v_codes.dtype == jnp.int16,
+           f"sample payload v_codes must be int16, got {v_codes.dtype}")
+    _check(v_codes.ndim >= 1 and idx.shape == v_codes.shape[:-1],
+           f"sample payload idx shape {idx.shape} does not match v_codes "
+           f"{v_codes.shape}")
+    mean, var = jnp.asarray(p.mean), jnp.asarray(p.var)
+    _check(mean.shape[-1] == v_codes.shape[-1]
+           and var.shape[-1] == v_codes.shape[-1],
+           f"sample payload moments {mean.shape}/{var.shape} do not match "
+           f"channel dim of v_codes {v_codes.shape}")
+    if _is_concrete(idx):
+        import numpy as np
+        ix = np.asarray(idx)
+        _check(bool((ix >= 0).all()),
+               f"sample payload has negative time indices (min {ix.min()})")
+    values = ((v_codes.astype(jnp.float32) + 32768.0) / 65535.0
+              * (p.hi - p.lo) + p.lo)
+    return idx.astype(jnp.int32), values, mean, var
+
+
+def wire_sample_nbytes(m: int, channels: int) -> int:
+    """Bytes a sampling payload puts on the wire per window: m x (1-B index
+    + 2-B value per channel) + the 2-B mean/var moments per channel (paper
+    §3.2.2 / A.1 accounting)."""
+    return sampling_payload_bytes(m, channels=channels)
 
 
 # ---------------------------------------------------------------------------
@@ -360,19 +573,6 @@ def _edge_encode_coresets(win: jnp.ndarray, k: int) -> WirePayload:
     centers, radii, counts = jax.vmap(
         lambda w: channel_cluster_coresets(w, k=k, iters=4))(win)
     return encode_wire_coresets(centers, radii, counts)
-
-
-def _host_recover_infer(payload: WirePayload, host_params: dict,
-                        key: jax.Array, t: int) -> jnp.ndarray:
-    """Host half of a serving tier: dequantize a received payload batch,
-    recover windows, run the full-precision DNN -> (B, n_classes) logits."""
-    from ..core.coreset import ClusterCoreset
-
-    centers, radii, counts = decode_wire_coresets(payload)
-    keys = jax.random.split(key, centers.shape[0])
-    wins_rec = jax.vmap(lambda c, r, n, kk: recover_cluster_window(
-        ClusterCoreset(c, r, n), kk, t))(centers, radii, counts, keys)
-    return har_apply(host_params, wins_rec)
 
 
 def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
@@ -389,8 +589,14 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
     windows: (B, T, C) globally, sharded over ("pod", "data") on B.
     Returns (B, n_classes) host logits for the *peer's* windows, in the peer
     pod's shards.
+
+    The host half (decode -> batched recovery -> DNN) is the host-tier
+    subsystem's :func:`repro.host.server.recover_infer_batch` — this
+    function only models the *edge* side and the collective.
     """
     from jax.sharding import PartitionSpec as P
+
+    from ..host.server import recover_infer_batch
 
     key = key if key is not None else jax.random.PRNGKey(0)
     t = windows.shape[1]
@@ -407,8 +613,10 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
         payload = WirePayload(*(jax.lax.ppermute(f, "pod", perm)
                                 for f in payload))
 
-        # --- host side: recover the peer's coresets and infer ---------------
-        return _host_recover_infer(payload, host_params, key, t)
+        # --- host tier: recover the peer's coresets and infer ---------------
+        return recover_infer_batch(
+            payload, host_params,
+            jax.random.split(key, payload.c_codes.shape[0]), t)
 
     from ..sharding import shard_map_compat
     fn = shard_map_compat(
@@ -421,7 +629,8 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
 
 def fleet_serve_step(windows: jnp.ndarray, *, host_params,
                      har_cfg: HARConfig, mesh, k: int = 12,
-                     key: jax.Array | None = None):
+                     key: jax.Array | None = None,
+                     host_state=None, serve_cfg=None, gen_params=None):
     """Sharded-fleet edge→host tier: gather ONLY coreset payloads to the host.
 
     The companion to :func:`repro.serving.fleet.seeker_fleet_simulate_sharded`
@@ -429,21 +638,37 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     coresets for its *local* node tile and quantizes them to the compact wire
     format; the int16/int8 code tensors are then ``all_gather``-ed over the
     fleet's node axes (minor axis first, so global node order is preserved)
-    to the host tier, which dequantizes, recovers windows, and runs the
-    full-precision DNN for the whole fleet.  Raw windows and node state never
-    leave their shard — only coreset bytes cross the mesh, reproducing the
-    paper's edge-host communication asymmetry at the collective level.
+    to the host tier.  Raw windows and node state never leave their shard —
+    only coreset bytes cross the mesh, reproducing the paper's edge-host
+    communication asymmetry at the collective level.
+
+    The host work is delegated to the host-tier subsystem (:mod:`repro.host`)
+    in one of two modes:
+
+    * default — the gathered batch runs straight through
+      :func:`repro.host.server.recover_infer_batch` (decode -> batched
+      recovery -> DNN), replicated, returning per-node logits;
+    * ``host_state``/``serve_cfg`` given — the gathered payloads are
+      *enqueued* into the host server (QoS deadline stamping, EDF microbatch
+      assembly, recovery cache) and served at ``serve_cfg.batch_size``;
+      returns the evolved ``host_state`` and the round's
+      :class:`repro.host.server.SlotOutput` instead of raw logits, so a
+      serving loop carries queue backlog / cache / ensemble across rounds.
 
     Args:
         windows: (N, T, C) fleet sensor windows, one per node.  N that does
             not divide the mesh quantum is padded with zero windows and the
-            padding is sliced off the returned logits.
+            padding is sliced off before the host tier sees it.
         mesh: mesh whose FLEET_RULES node axes carry the fleet.
+        host_state: optional :class:`repro.host.server.HostServerState` to
+            feed (requires ``serve_cfg`` and ``gen_params``).
 
-    Returns dict: ``host_logits`` (N, L) for every node, ``wire_bytes`` —
-    total quantized payload bytes gathered across the mesh, ``raw_bytes`` —
-    the raw-window equivalent (the communication the gather avoided).
+    Returns dict: ``wire_bytes`` — total quantized payload bytes gathered
+    across the mesh, ``raw_bytes`` — the raw-window equivalent (the
+    communication the gather avoided), plus either ``host_logits`` (N, L)
+    (default mode) or ``host_state``/``slot_output`` (queue mode).
     """
+    from ..host.server import recover_infer_batch, serve_fleet_payloads
     from ..sharding import node_mesh_axes, shard_map_compat
 
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -468,16 +693,36 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
                                                        tiled=True)
                                     for f in payload))
 
-        # --- host side: dequantize, recover, full-precision inference ------
-        return _host_recover_infer(payload, host_params, kk, t)
-        # -> (N+pad, L) replicated
+        if host_state is None:
+            # --- host tier, direct mode: decode, recover, infer ------------
+            return recover_infer_batch(
+                payload, host_params,
+                jax.random.split(kk, payload.c_codes.shape[0]), t)
+            # -> (N+pad, L) replicated
+        return payload               # -> gathered wire payload, replicated
 
     from jax.sharding import PartitionSpec as P
+    out_specs = P() if host_state is None else WirePayload(*([P()] * 6))
     fn = shard_map_compat(tier, mesh, in_specs=(P(axis_names), P()),
-                          out_specs=P(), axis_names=frozenset(axis_names))
-    logits = fn(windows, key)[:n]
-    return {
-        "host_logits": logits,
+                          out_specs=out_specs,
+                          axis_names=frozenset(axis_names))
+    out = {
         "wire_bytes": n * wire_payload_nbytes(k, c),
         "raw_bytes": n * raw_payload_bytes(t) * c,
     }
+    if host_state is None:
+        out["host_logits"] = fn(windows, key)[:n]
+        return out
+
+    # --- queue mode: the gathered payloads FEED the host subsystem ---------
+    if serve_cfg is None or gen_params is None:
+        raise ValueError("fleet_serve_step host_state mode needs serve_cfg "
+                         "and gen_params")
+    payload = fn(windows, key)
+    payload = WirePayload(*(f[:n] for f in payload))   # drop inert pad nodes
+    state, slot_out = serve_fleet_payloads(
+        host_state, payload, jnp.arange(n, dtype=jnp.int32), cfg=serve_cfg,
+        host_params=host_params, gen_params=gen_params, base_key=key)
+    out["host_state"] = state
+    out["slot_output"] = slot_out
+    return out

@@ -1,0 +1,200 @@
+"""Host-tier queue + EDF scheduler invariants (ISSUE 3 satellites).
+
+Property-tested through the ``tests/_prop.py`` shim:
+
+* EDF pops return live entries in deadline order (stable tie-break);
+* overflow drops the LATEST-deadline entry — incoming or resident — and
+  increments the drop counter by exactly one per overflowing push;
+* expiry accounting: entries whose deadline passed are counted as misses,
+  never served;
+* the ring reuses slots across push/pop cycles well past its capacity.
+
+The queue under test carries a tiny scalar payload pytree — the queue is
+payload-agnostic; the full ``HostPayload`` plumbing is exercised by
+test_host_server.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _prop import given, settings, st
+
+from repro.host import (MicroBatch, NO_DEADLINE, edf_pop_batch,
+                        expire_deadlines, queue_init, queue_occupancy,
+                        queue_push, queue_push_batch)
+
+
+def _mini_queue(capacity):
+    """Queue whose payload is a single () int32 'payload id' leaf."""
+    return queue_init({"pid": jnp.zeros((), jnp.int32)}, capacity)
+
+
+def _push_all(q, deadlines, arrival=0):
+    for i, d in enumerate(deadlines):
+        q, _ = queue_push(q, {"pid": jnp.asarray(i, jnp.int32)},
+                          node_id=i, arrival=arrival, deadline=d)
+    return q
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.integers(4, 24),
+       batch=st.integers(1, 8))
+def test_edf_pops_in_deadline_order(seed, cap, batch):
+    rng = np.random.RandomState(seed)
+    n = int(rng.randint(1, cap + 1))
+    deadlines = rng.randint(0, 1000, size=n)
+    q = _push_all(_mini_queue(cap), deadlines)
+
+    popped = []
+    for _ in range(-(-n // batch)):
+        q, mb, missed = edf_pop_batch(q, batch)
+        assert int(missed) == 0
+        popped.extend(np.asarray(mb.deadline)[np.asarray(mb.valid)].tolist())
+    assert popped == sorted(deadlines.tolist())
+    assert int(queue_occupancy(q)) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.integers(2, 12))
+def test_overflow_drops_latest_deadline_and_counts(seed, cap):
+    rng = np.random.RandomState(seed)
+    # cap + 1 DISTINCT deadlines: exactly one must be dropped — the largest
+    deadlines = rng.permutation(cap + 1) * 7 + int(rng.randint(0, 100))
+    q = _push_all(_mini_queue(cap), deadlines)
+
+    assert int(q.drops_overflow) == 1
+    assert int(queue_occupancy(q)) == cap
+    kept = np.asarray(q.deadline)[np.asarray(q.valid)]
+    assert sorted(kept.tolist()) == sorted(deadlines.tolist())[:-1], \
+        "the latest-deadline entry must be the one dropped"
+
+
+def test_overflow_prefers_evicting_resident_with_later_deadline():
+    q = _push_all(_mini_queue(2), [10, 20])
+    # incoming deadline 5 beats resident 20 -> 20 is evicted
+    q, dropped = queue_push(q, {"pid": jnp.asarray(99, jnp.int32)},
+                            node_id=9, arrival=0, deadline=5)
+    assert bool(dropped)
+    kept = sorted(np.asarray(q.deadline)[np.asarray(q.valid)].tolist())
+    assert kept == [5, 10]
+    assert int(q.drops_overflow) == 1
+    # incoming deadline 30 is the latest -> incoming itself is dropped
+    q, dropped = queue_push(q, {"pid": jnp.asarray(98, jnp.int32)},
+                            node_id=8, arrival=0, deadline=30)
+    assert bool(dropped)
+    kept = sorted(np.asarray(q.deadline)[np.asarray(q.valid)].tolist())
+    assert kept == [5, 10]
+    assert int(q.drops_overflow) == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), now=st.integers(0, 50))
+def test_expiry_counts_misses_and_never_serves_late(seed, now):
+    rng = np.random.RandomState(seed)
+    deadlines = rng.randint(0, 100, size=12)
+    q = _push_all(_mini_queue(16), deadlines)
+    late = int((deadlines < now).sum())
+
+    q, missed = expire_deadlines(q, jnp.asarray(now))
+    assert int(missed) == late
+    q2, mb, missed2 = edf_pop_batch(q, 16, now=jnp.asarray(now))
+    assert int(missed2) == 0                     # already expired above
+    served = np.asarray(mb.deadline)[np.asarray(mb.valid)]
+    assert (served >= now).all()
+    assert len(served) == len(deadlines) - late
+
+
+def test_edf_pop_expires_before_assembly():
+    q = _push_all(_mini_queue(8), [1, 2, 9, 10])
+    q, mb, missed = edf_pop_batch(q, 4, now=jnp.asarray(5))
+    assert int(missed) == 2                      # deadlines 1, 2 are late
+    served = np.asarray(mb.deadline)[np.asarray(mb.valid)]
+    np.testing.assert_array_equal(served, [9, 10])
+
+
+def test_partial_batch_is_masked_padding():
+    q = _push_all(_mini_queue(8), [3])
+    q, mb, _ = edf_pop_batch(q, 4)
+    assert isinstance(mb, MicroBatch)
+    assert mb.deadline.shape == (4,) and mb.valid.shape == (4,)
+    assert int(np.asarray(mb.valid).sum()) == 1
+    # padding rows carry the empty-slot sentinel deadline
+    assert (np.asarray(mb.deadline)[~np.asarray(mb.valid)]
+            == NO_DEADLINE).all()
+
+
+def test_ring_reuses_slots_across_many_cycles():
+    cap = 4
+    q = _mini_queue(cap)
+    for cycle in range(5 * cap):
+        q, dropped = queue_push(q, {"pid": jnp.asarray(cycle, jnp.int32)},
+                                node_id=cycle, arrival=cycle,
+                                deadline=cycle + 3)
+        assert not bool(dropped)
+        q, mb, missed = edf_pop_batch(q, 1, now=jnp.asarray(cycle))
+        assert int(missed) == 0
+        assert int(np.asarray(mb.payload["pid"])[0]) == cycle
+    assert int(queue_occupancy(q)) == 0
+    assert int(q.drops_overflow) == 0
+
+
+def test_push_batch_masks_inert_rows():
+    q = _mini_queue(8)
+    pids = jnp.arange(6, dtype=jnp.int32)
+    mask = jnp.asarray([True, False, True, True, False, True])
+    q, n_dropped = queue_push_batch(
+        q, {"pid": pids}, jnp.arange(6, dtype=jnp.int32),
+        jnp.zeros(6, jnp.int32), jnp.arange(6, dtype=jnp.int32) + 10, mask)
+    assert int(n_dropped) == 0
+    assert int(queue_occupancy(q)) == 4
+    live = sorted(np.asarray(q.payload["pid"])[np.asarray(q.valid)].tolist())
+    assert live == [0, 2, 3, 5]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.integers(4, 16))
+def test_push_batch_bulk_path_matches_sequential(seed, cap):
+    """The vectorized no-overflow fast path must be bitwise-equal (slots,
+    cursor, counters) to A sequential pushes."""
+    rng = np.random.RandomState(seed)
+    pre = int(rng.randint(0, cap // 2 + 1))
+    q0 = _push_all(_mini_queue(cap), rng.randint(0, 50, size=pre))
+    # pop a couple to move the cursor / punch holes
+    for _ in range(int(rng.randint(0, pre + 1))):
+        q0, _, _ = edf_pop_batch(q0, 1)
+
+    a = int(rng.randint(1, cap - int(np.asarray(queue_occupancy(q0))) + 1))
+    pids = jnp.arange(100, 100 + a, dtype=jnp.int32)
+    nids = jnp.arange(a, dtype=jnp.int32)
+    arrs = jnp.zeros(a, jnp.int32)
+    dls = jnp.asarray(rng.randint(0, 50, size=a), jnp.int32)
+    mask = jnp.asarray(rng.rand(a) < 0.8)
+
+    batch_q, n_drop = queue_push_batch(q0, {"pid": pids}, nids, arrs, dls,
+                                       mask)
+    seq_q = q0
+    for i in range(a):
+        seq_q, _ = queue_push(seq_q, {"pid": pids[i]}, nids[i], arrs[i],
+                              dls[i], mask[i])
+    assert int(n_drop) == 0
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(batch_q),
+                              jax.tree_util.tree_leaves(seq_q)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
+def test_queue_ops_are_jittable():
+    """The whole push/pop cycle traces into one jitted fn (the serve slot
+    relies on this)."""
+    q = _mini_queue(8)
+
+    @jax.jit
+    def cycle(q, pid, deadline, now):
+        q, _ = queue_push(q, {"pid": pid}, node_id=0, arrival=now,
+                          deadline=deadline)
+        q, mb, missed = edf_pop_batch(q, 2, now=now)
+        return q, mb, missed
+
+    q, mb, missed = cycle(q, jnp.asarray(7, jnp.int32),
+                          jnp.asarray(4, jnp.int32), jnp.asarray(1, jnp.int32))
+    assert int(np.asarray(mb.valid).sum()) == 1
+    assert int(np.asarray(mb.payload["pid"])[0]) == 7

@@ -1,0 +1,336 @@
+"""Host serving subsystem end-to-end: fixed-shape compile behaviour, the
+recovery cache's bitwise contract, QoS accounting, resume, and the rewired
+``fleet_serve_step`` queue mode (ISSUE 3 acceptance tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core.coreset import channel_cluster_coresets, importance_coreset
+from repro.core.recovery import init_generator
+from repro.data.sensors import har_stream
+from repro.models.har import har_init
+from repro.host import (HostServeConfig, cluster_entries, host_ensemble,
+                        host_serve_slot, host_serve_trace, host_server_init,
+                        host_server_stats, sampling_entries,
+                        serve_trace_count)
+from repro.serving import encode_wire_coresets, encode_wire_samples
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    wins, labels = har_stream(key, 8)
+    centers, radii, counts = jax.vmap(
+        lambda w: channel_cluster_coresets(w, k=12, iters=4))(wins)
+    wire = encode_wire_coresets(centers, radii, counts)
+    return key, params, gen, wins, labels, wire
+
+
+def _cfg(**kw):
+    base = dict(channels=HAR.channels, k=12, m=20, t=HAR.window,
+                n_classes=HAR.n_classes, n_nodes=8, batch_size=4,
+                queue_capacity=16, cache_capacity=16, qos_slots=4)
+    base.update(kw)
+    return HostServeConfig(**base)
+
+
+def _by_node(out):
+    """{node_id: logits row} for the valid rows of a SlotOutput."""
+    valid = np.asarray(out.valid)
+    return {int(n): np.asarray(out.logits)[i]
+            for i, n in enumerate(np.asarray(out.node_id)) if valid[i]}
+
+
+# ---------------------------------------------------------------------------
+# Cache: a hit is bitwise-identical to recomputation
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_bitwise_identical_to_recomputation(setup):
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=8)
+    entries = cluster_entries(wire, cfg.m)
+    nid = jnp.arange(8, dtype=jnp.int32)
+    mask = jnp.ones((8,), bool)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state = host_server_init(cfg)
+    state, first = host_serve_slot(state, entries, nid, mask, **kw)
+    assert host_server_stats(state)["cache_misses"] == 8
+    # same payloads again: all served from the cache ...
+    state, again = host_serve_slot(state, entries, nid, mask, **kw)
+    stats = host_server_stats(state)
+    assert stats["cache_hits"] == 8 and stats["cache_misses"] == 8
+    assert bool(np.asarray(again.cache_hit)[np.asarray(again.valid)].all())
+    # ... bitwise equal to the first (recomputed) answers
+    a, b = _by_node(first), _by_node(again)
+    assert a.keys() == b.keys()
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n])
+    # and a FRESH server recomputing from scratch reproduces them bitwise
+    # (payload-deterministic recovery PRNG: key = fold_in(base_key, sig))
+    state2, recomputed = host_serve_slot(host_server_init(cfg), entries, nid,
+                                         mask, **kw)
+    c = _by_node(recomputed)
+    for n in a:
+        np.testing.assert_array_equal(a[n], c[n])
+
+
+def test_cache_is_exact_match_not_approximate(setup):
+    """Perturbing ONE code in a payload must miss the cache."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=1, n_nodes=1)
+    one = jax.tree_util.tree_map(lambda a: a[:1], wire)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+    nid = jnp.zeros((1,), jnp.int32)
+    mask = jnp.ones((1,), bool)
+
+    state = host_server_init(cfg)
+    state, _ = host_serve_slot(state, cluster_entries(one, cfg.m), nid, mask,
+                               **kw)
+    tweaked = one._replace(c_codes=one.c_codes.at[0, 0, 0, 0].add(1))
+    state, out = host_serve_slot(state, cluster_entries(tweaked, cfg.m), nid,
+                                 mask, **kw)
+    assert host_server_stats(state)["cache_misses"] == 2
+    assert not bool(np.asarray(out.cache_hit)[0])
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape batch assembly: churny trace, <= 2 compiled shapes
+# ---------------------------------------------------------------------------
+
+def test_churny_trace_compiles_at_most_two_shapes(setup):
+    """Acceptance: over a churny trace with VARYING per-slot payload counts,
+    the serve slot (queue push + EDF assembly + recovery + DNN) traces at
+    most twice — fleet churn never changes a tensor shape."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=3, queue_capacity=24, qos_slots=2)
+    entries = cluster_entries(wire, cfg.m)
+    nid = jnp.arange(8, dtype=jnp.int32)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    before = serve_trace_count(cfg)
+    state = host_server_init(cfg)
+    rng = np.random.RandomState(7)
+    for slot in range(10):
+        active = rng.rand(8) < rng.uniform(0.1, 0.9)   # nodes drop in/out
+        state, _ = host_serve_slot(state, entries, nid,
+                                   jnp.asarray(active), **kw)
+    assert serve_trace_count(cfg) - before <= 2
+
+
+def test_payload_conservation_over_churny_trace(setup):
+    """Every ingested payload is served, missed, dropped, or still queued."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, queue_capacity=8, qos_slots=1)
+    entries = cluster_entries(wire, cfg.m)
+    nid = jnp.arange(8, dtype=jnp.int32)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state = host_server_init(cfg)
+    rng = np.random.RandomState(3)
+    total = 0
+    for slot in range(8):
+        active = rng.rand(8) < 0.7
+        total += int(active.sum())
+        state, _ = host_serve_slot(state, entries, nid,
+                                   jnp.asarray(active), **kw)
+    stats = host_server_stats(state)
+    assert (stats["served"] + stats["deadline_misses"]
+            + stats["drops_overflow"] + stats["backlog"]) == total
+
+
+# ---------------------------------------------------------------------------
+# QoS accounting: EDF service order, deadline misses, overflow drops
+# ---------------------------------------------------------------------------
+
+def test_backlog_served_before_fresh_arrivals(setup):
+    """EDF across slots: slot-0 leftovers (earlier deadlines) must be served
+    before slot-1 arrivals."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, qos_slots=4)
+    entries = cluster_entries(wire, cfg.m)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state = host_server_init(cfg)
+    four = jax.tree_util.tree_map(lambda a: a[:4], entries)
+    state, out0 = host_serve_slot(state, four, jnp.arange(4, dtype=jnp.int32),
+                                  jnp.ones((4,), bool), **kw)
+    assert sorted(_by_node(out0)) == [0, 1]        # 2 served, 2 backlogged
+    two = jax.tree_util.tree_map(lambda a: a[4:6], entries)
+    state, out1 = host_serve_slot(state, two,
+                                  jnp.asarray([4, 5], jnp.int32),
+                                  jnp.ones((2,), bool), **kw)
+    assert sorted(_by_node(out1)) == [2, 3]        # backlog first (EDF)
+    assert host_server_stats(state)["backlog"] == 2
+
+
+def test_deadline_misses_counted_not_served(setup):
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, qos_slots=0)
+    entries = cluster_entries(wire, cfg.m)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state = host_server_init(cfg)
+    four = jax.tree_util.tree_map(lambda a: a[:4], entries)
+    state, _ = host_serve_slot(state, four, jnp.arange(4, dtype=jnp.int32),
+                               jnp.ones((4,), bool), **kw)
+    # qos 0: the 2 unserved leftovers expire at the next slot's assembly
+    state, out = host_serve_slot(
+        state, four, jnp.arange(4, dtype=jnp.int32), jnp.zeros((4,), bool),
+        **kw)
+    stats = host_server_stats(state)
+    assert stats["served"] == 2 and stats["deadline_misses"] == 2
+    assert int(np.asarray(out.valid).sum()) == 0
+
+
+def test_overflow_drops_counted(setup):
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, queue_capacity=4, qos_slots=8)
+    entries = cluster_entries(wire, cfg.m)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state = host_server_init(cfg)
+    state, _ = host_serve_slot(state, entries,
+                               jnp.arange(8, dtype=jnp.int32),
+                               jnp.ones((8,), bool), **kw)
+    # 8 arrivals into a 4-slot ring: 4 dropped, 2 served, 2 backlogged
+    stats = host_server_stats(state)
+    assert stats["drops_overflow"] == 4
+    assert stats["served"] == 2 and stats["backlog"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Mixed payload kinds + trace/resume
+# ---------------------------------------------------------------------------
+
+def test_sampling_payloads_take_the_gan_path(setup):
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=4, n_nodes=4)
+    sc = jax.vmap(lambda w, k_: importance_coreset(w, cfg.m, k_))(
+        wins[:4], jax.random.split(key, 4))
+    swire = encode_wire_samples(sc.indices, sc.values, sc.mean, sc.var)
+    s_entries = sampling_entries(swire, cfg.k)
+    c_entries = cluster_entries(jax.tree_util.tree_map(lambda a: a[:4], wire),
+                                cfg.m)
+    nid = jnp.arange(4, dtype=jnp.int32)
+    mask = jnp.ones((4,), bool)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    _, out_s = host_serve_slot(host_server_init(cfg), s_entries, nid, mask,
+                               **kw)
+    _, out_c = host_serve_slot(host_server_init(cfg), c_entries, nid, mask,
+                               **kw)
+    ls, lc = _by_node(out_s), _by_node(out_c)
+    assert ls.keys() == lc.keys() == {0, 1, 2, 3}
+    assert all(np.isfinite(ls[n]).all() for n in ls)
+    # the two recovery paths answer differently for the same windows
+    assert any(not np.array_equal(ls[n], lc[n]) for n in ls)
+
+
+def test_serve_trace_resume_equals_one_long_run(setup):
+    """Resumable carry, fleet-engine style: scanning 6 slots equals chaining
+    3 + 3 through the returned state, bitwise."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, queue_capacity=32)
+    entries = cluster_entries(wire, cfg.m)
+    s, a = 6, 8
+    tr_entries = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (s,) + x.shape), entries)
+    nids = jnp.broadcast_to(jnp.arange(a, dtype=jnp.int32)[None], (s, a))
+    rng = np.random.RandomState(11)
+    masks = jnp.asarray(rng.rand(s, a) < 0.5)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    full_state, full_out = host_serve_trace(
+        host_server_init(cfg), tr_entries, nids, masks, **kw)
+    half = s // 2
+    st1, out1 = host_serve_trace(
+        host_server_init(cfg),
+        jax.tree_util.tree_map(lambda x: x[:half], tr_entries),
+        nids[:half], masks[:half], **kw)
+    st2, out2 = host_serve_trace(
+        st1, jax.tree_util.tree_map(lambda x: x[half:], tr_entries),
+        nids[half:], masks[half:], **kw)
+
+    for leaf_full, leaf_2 in zip(jax.tree_util.tree_leaves(full_out),
+                                 jax.tree_util.tree_leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(leaf_full)[half:],
+                                      np.asarray(leaf_2))
+    for leaf_full, leaf_2 in zip(jax.tree_util.tree_leaves(full_state),
+                                 jax.tree_util.tree_leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(leaf_full),
+                                      np.asarray(leaf_2))
+
+
+def test_ensemble_accumulates_per_node(setup):
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=4, n_nodes=4)
+    entries = cluster_entries(jax.tree_util.tree_map(lambda a: a[:4], wire),
+                              cfg.m)
+    nid = jnp.asarray([0, 0, 1, 2], jnp.int32)     # node 0 twice
+    mask = jnp.ones((4,), bool)
+    kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
+
+    state, out = host_serve_slot(host_server_init(cfg), entries, nid, mask,
+                                 **kw)
+    ens = host_ensemble(state)
+    np.testing.assert_array_equal(np.asarray(ens["counts"]), [2, 1, 1, 0])
+    valid = np.asarray(out.valid)
+    logits = np.asarray(out.logits)[valid]
+    nodes = np.asarray(out.node_id)[valid]
+    want0 = logits[nodes == 0].sum(axis=0) / 2.0
+    np.testing.assert_allclose(np.asarray(ens["mean_logits"])[0], want0,
+                               rtol=1e-6)
+    assert int(ens["pred_mean"][0]) == int(np.argmax(want0))
+
+
+# ---------------------------------------------------------------------------
+# fleet_serve_step queue mode (the rewire)
+# ---------------------------------------------------------------------------
+
+def test_fleet_serve_step_feeds_host_server(setup):
+    from repro.serving import fleet_serve_step
+    from repro.sharding import make_mesh_compat
+
+    key, params, gen, wins, labels, wire = setup
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    cfg = _cfg(batch_size=4, n_nodes=6, queue_capacity=8)
+    state = host_server_init(cfg)
+    out = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                           mesh=mesh, key=key, host_state=state,
+                           serve_cfg=cfg, gen_params=gen)
+    stats = host_server_stats(out["host_state"])
+    assert stats["served"] == 6 and stats["deadline_misses"] == 0
+    served = _by_node(out["slot_output"])
+    assert sorted(served) == [0, 1, 2, 3, 4, 5]
+    assert all(np.isfinite(v).all() for v in served.values())
+    assert out["wire_bytes"] < out["raw_bytes"]
+    # a second round of the same windows is fully cache-served
+    out2 = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                            mesh=mesh, key=key,
+                            host_state=out["host_state"], serve_cfg=cfg,
+                            gen_params=gen)
+    stats2 = host_server_stats(out2["host_state"])
+    assert stats2["cache_hits"] == 6
+    a, b = served, _by_node(out2["slot_output"])
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n])
+
+
+def test_fleet_serve_step_queue_mode_requires_cfg(setup):
+    from repro.serving import fleet_serve_step
+    from repro.sharding import make_mesh_compat
+
+    key, params, gen, wins, labels, wire = setup
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="serve_cfg"):
+        fleet_serve_step(wins[:4], host_params=params, har_cfg=HAR,
+                         mesh=mesh, key=key,
+                         host_state=host_server_init(cfg))

@@ -11,8 +11,11 @@ from repro.core.coreset import channel_cluster_coresets, cluster_payload_bytes
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_stream
 from repro.models.har import har_init
-from repro.serving import (decode_wire_coresets, edge_host_serve_step,
-                           encode_wire_coresets, wire_payload_nbytes)
+from repro.serving import (WirePayload, decode_wire_coresets,
+                           decode_wire_samples, edge_host_serve_step,
+                           encode_wire_coresets, encode_wire_samples,
+                           wire_payload_from_bytes, wire_payload_nbytes,
+                           wire_payload_to_bytes, wire_sample_nbytes)
 
 K = 12
 
@@ -80,6 +83,114 @@ def test_wire_payload_byte_accounting(coresets):
     assert cluster_payload_bytes(12) == 42
     # coreset wire bytes stay well under the raw window even in tensor form
     assert wire_payload_nbytes(k, c) < 240 * c
+
+
+def test_decode_rejects_wrong_dtypes(coresets):
+    """The host queue ingests untrusted payloads: a float tensor smuggled in
+    place of the int16 codes must raise, not silently dequantize."""
+    p = encode_wire_coresets(*coresets)
+    with pytest.raises(ValueError, match="c_codes must be int16"):
+        decode_wire_coresets(p._replace(c_codes=p.c_codes.astype(jnp.float32)))
+    with pytest.raises(ValueError, match="r_codes must be int8"):
+        decode_wire_coresets(p._replace(r_codes=p.r_codes.astype(jnp.int16)))
+    with pytest.raises(ValueError, match="n_codes must be int8"):
+        decode_wire_coresets(p._replace(n_codes=p.n_codes.astype(jnp.int32)))
+
+
+def test_decode_rejects_shape_mismatch(coresets):
+    p = encode_wire_coresets(*coresets)
+    with pytest.raises(ValueError, match="r_codes shape"):
+        decode_wire_coresets(p._replace(r_codes=p.r_codes[:, :, :-1]))
+    with pytest.raises(ValueError, match="n_codes shape"):
+        decode_wire_coresets(p._replace(n_codes=p.n_codes[:-1]))
+    with pytest.raises(ValueError, match=r"\(\.\.\., k, 2\)"):
+        decode_wire_coresets(p._replace(c_codes=p.c_codes[..., :1]))
+
+
+def test_decode_rejects_counts_outside_4bit_field(coresets):
+    p = encode_wire_coresets(*coresets)
+    bad = p._replace(n_codes=p.n_codes.at[0, 0, 0].set(16))
+    with pytest.raises(ValueError, match=r"4-bit field"):
+        decode_wire_coresets(bad)
+
+
+def test_bytes_roundtrip_is_bitwise(coresets):
+    p = encode_wire_coresets(*coresets)
+    q = wire_payload_from_bytes(wire_payload_to_bytes(p))
+    for a, b in zip(p, q):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the parsed frame decodes identically
+    for a, b in zip(decode_wire_coresets(p), decode_wire_coresets(q)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bytes_rejects_malformed_frames(coresets):
+    p = encode_wire_coresets(*coresets)
+    buf = wire_payload_to_bytes(p)
+    with pytest.raises(ValueError, match="truncated"):
+        wire_payload_from_bytes(buf[:-3])
+    with pytest.raises(ValueError, match="shorter than"):
+        wire_payload_from_bytes(buf[:10])
+    with pytest.raises(ValueError, match="magic"):
+        wire_payload_from_bytes(b"\x00" * len(buf))
+    # corrupt a count byte past 15 inside the frame: parse must reject
+    b, c, k, _ = p.c_codes.shape
+    n_off = 20 + 4 * b * c * k + b * c * k      # header + c_codes + r_codes
+    bad = bytearray(buf)
+    bad[n_off] = 200
+    with pytest.raises(ValueError, match="4-bit field"):
+        wire_payload_from_bytes(bytes(bad))
+
+
+# ---------------------------------------------------------------------------
+# Sampling (D4) wire format
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sample_coresets():
+    from repro.core.coreset import importance_coreset
+    wins, _ = har_stream(jax.random.PRNGKey(5), 4)
+    keys = jax.random.split(jax.random.PRNGKey(6), 4)
+    sc = jax.vmap(lambda w, k: importance_coreset(w, 20, k))(wins, keys)
+    return sc
+
+
+def test_sample_wire_roundtrip_error_bounds(sample_coresets):
+    sc = sample_coresets
+    p = encode_wire_samples(sc.indices, sc.values, sc.mean, sc.var)
+    assert p.idx.dtype == jnp.int8 and p.v_codes.dtype == jnp.int16
+    idx, vals, mean, var = decode_wire_samples(p)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(sc.indices))
+    step = np.asarray((p.hi - p.lo) / 65535.0)
+    err = np.abs(np.asarray(vals - sc.values))
+    assert (err <= step * 0.5 + 1e-5).all(), err.max()
+    np.testing.assert_array_equal(np.asarray(mean), np.asarray(sc.mean))
+    np.testing.assert_array_equal(np.asarray(var), np.asarray(sc.var))
+
+
+def test_sample_wire_defensive_decode(sample_coresets):
+    sc = sample_coresets
+    p = encode_wire_samples(sc.indices, sc.values, sc.mean, sc.var)
+    with pytest.raises(ValueError, match="idx must be int8"):
+        decode_wire_samples(p._replace(idx=p.idx.astype(jnp.int32)))
+    with pytest.raises(ValueError, match="v_codes must be int16"):
+        decode_wire_samples(p._replace(v_codes=p.v_codes.astype(jnp.int8)))
+    with pytest.raises(ValueError, match="does not match v_codes"):
+        decode_wire_samples(p._replace(idx=p.idx[:, :-1]))
+    with pytest.raises(ValueError, match="moments"):
+        decode_wire_samples(p._replace(mean=p.mean[:, :-1]))
+    with pytest.raises(ValueError, match="negative time indices"):
+        decode_wire_samples(p._replace(idx=p.idx.at[0, 0].set(-3)))
+    with pytest.raises(ValueError, match="int8 wire field"):
+        encode_wire_samples(sc.indices.at[0, 0].set(200), sc.values,
+                            sc.mean, sc.var)
+
+
+def test_sample_wire_byte_accounting(sample_coresets):
+    """m=20, C=3: 20 x (1 B idx + 2 B x 3 values) + 2 x 2 B x 3 moments."""
+    assert wire_sample_nbytes(20, 3) == 20 * (1 + 2 * 3) + 4 * 3
+    # well under the raw (T, C) window, like the cluster format
+    assert wire_sample_nbytes(20, 3) < 240 * 3
 
 
 def test_serve_step_roundtrip_on_pod_mesh():
