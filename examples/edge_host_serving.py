@@ -4,6 +4,8 @@
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 64
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python examples/edge_host_serving.py --fleet 64 --sharded
+    PYTHONPATH=src python examples/edge_host_serving.py --fleet 64 \
+        --churn 0.3 --chunk 32
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 24 \
         --host-queue
 
@@ -14,7 +16,10 @@ fraction, accuracy, decision mix, and communication volume vs raw.
 
 ``--fleet N`` instead simulates N independent nodes with heterogeneous
 harvest modalities in one batched scan (the fleet engine), reporting
-per-modality completion and fleet-level wire volume.
+per-modality completion and fleet-level wire volume.  ``--churn FRAC``
+makes the fleet intermittent (duty-cycled per-node alive traces: nodes
+brown out, freeze, rejoin); ``--chunk SLOTS`` streams the window stream in
+segments through the resume contract instead of one long scan.
 
 ``--host-queue`` streams a *churny* fleet trace — nodes dropping in and out
 slot to slot, periodically re-transmitting identical payloads — through the
@@ -61,28 +66,40 @@ def train_classifier(key):
 
 
 def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
-               sharded: bool = False):
+               sharded: bool = False, churn: float = 0.0, chunk: int = 0):
     """N heterogeneous nodes in one batched scan: the fleet engine.
 
     ``sharded`` splits the node axis over every visible device (run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get a CPU
     mesh) — same traces, fleet aggregates psum-ed across shards.
+    ``churn`` > 0 runs the intermittent fleet: each node follows a
+    duty-cycled alive trace (duty = 1 - churn) and browns out/rejoins
+    mid-deployment.  ``chunk`` > 0 streams the windows in chunk-slot
+    segments instead of one long scan (bitwise-identical results).
     """
     import time
 
+    from repro.core import fleet_alive_traces
+    from repro.serving import seeker_fleet_simulate_streamed
+
     s = wins.shape[0]
     harvest = fleet_harvest_traces(key, n_nodes, s)
-    t0 = time.time()
+    alive = None
+    if churn > 0:
+        alive = fleet_alive_traces(key, n_nodes, s, duty=1.0 - churn)
+    kw = dict(signatures=class_signatures(), qdnn_params=params,
+              host_params=params, gen_params=gen, har_cfg=HAR,
+              labels=labels, alive=alive)
     if sharded:
-        mesh = make_mesh_compat((jax.device_count(),), ("data",))
-        res = seeker_fleet_simulate_sharded(
-            wins, harvest, signatures=class_signatures(), qdnn_params=params,
-            host_params=params, gen_params=gen, har_cfg=HAR, mesh=mesh,
-            labels=labels)
+        kw["mesh"] = make_mesh_compat((jax.device_count(),), ("data",))
+    t0 = time.time()
+    if chunk > 0:
+        res = seeker_fleet_simulate_streamed(wins, harvest, chunk=chunk,
+                                             **kw)
+    elif sharded:
+        res = seeker_fleet_simulate_sharded(wins, harvest, **kw)
     else:
-        res = seeker_fleet_simulate(
-            wins, harvest, signatures=class_signatures(), qdnn_params=params,
-            host_params=params, gen_params=gen, har_cfg=HAR)
+        res = seeker_fleet_simulate(wins, harvest, **kw)
     jax.block_until_ready(res["decisions"])
     dt = time.time() - t0
 
@@ -92,12 +109,22 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
         & completed
     print(f"\nfleet of {n_nodes} nodes x {s} slots in {dt:.2f}s "
           f"({n_nodes * s / dt:.0f} windows/sec incl. compile)")
+    if chunk > 0:
+        print(f"streamed in {res['n_chunks']} chunks of {chunk} slots "
+              f"(peak window memory {min(chunk, s) / s:.2f}x one long scan)")
+    if alive is not None:
+        up = int(res["alive_slots"])
+        print(f"churn: nodes up {100 * up / (n_nodes * s):.0f}% of slots "
+              f"(duty {1 - churn:.2f}); dead slots DEFER with frozen state "
+              f"and rejoin in place")
     if sharded:
         print(f"node axis sharded over {jax.device_count()} devices "
               f"(mesh axes {res['node_axes']}, {res['padded_nodes']} inert "
-              f"pad nodes); decision histogram "
-              f"{np.asarray(res['decision_histogram']).tolist()}, "
-              f"fleet accuracy {100 * float(res['fleet_accuracy']):.1f}%")
+              f"pad nodes)")
+    print(f"decision histogram {np.asarray(res['decision_histogram']).tolist()}"
+          f" (alive slots only), fleet accuracy "
+          f"{100 * float(res['fleet_accuracy']):.1f}%, completed "
+          f"{100 * float(res['completed_frac']):.1f}%")
     print("per-modality stats (nodes cycle rf/wifi/piezo/solar):")
     node_src = fleet_source_assignment(n_nodes)
     for si, src in enumerate(EH_SOURCES):
@@ -217,6 +244,14 @@ def main():
                     help="with --fleet: shard the node axis over every "
                          "visible device (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--churn", type=float, default=0.0, metavar="FRAC",
+                    help="with --fleet: intermittent fleet — each node "
+                         "follows a duty-cycled alive trace with duty "
+                         "1-FRAC, browning out and rejoining mid-run")
+    ap.add_argument("--chunk", type=int, default=0, metavar="SLOTS",
+                    help="with --fleet: stream windows in SLOTS-slot "
+                         "segments through the resume contract instead of "
+                         "one long scan (bitwise-identical)")
     ap.add_argument("--host-queue", action="store_true",
                     help="stream a churny fleet trace through the host-tier "
                          "serving subsystem (QoS queue + EDF scheduler + "
@@ -240,7 +275,7 @@ def main():
 
     if args.fleet:
         fleet_demo(key, params, gen, wins, labels, args.fleet,
-                   sharded=args.sharded)
+                   sharded=args.sharded, churn=args.churn, chunk=args.chunk)
         return
 
     harvest = harvest_trace(key, args.windows, args.source)

@@ -16,6 +16,7 @@ from .memo import pearson, signature_correlations, memo_decision, MemoResult  # 
 from .energy import (  # noqa: F401
     EnergyCosts, TABLE2_COSTS, harvest_trace, EH_SOURCES,
     fleet_source_assignment, fleet_harvest_traces, supercap_step,
+    fleet_phase_offsets, fleet_alive_traces,
     PredictorState, predictor_init, predictor_update, predictor_forecast,
 )
 from .aac import AACTable, make_aac_table, select_k  # noqa: F401

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 __all__ = [
     "EnergyCosts", "TABLE2_COSTS", "harvest_trace", "EH_SOURCES",
     "fleet_source_assignment", "fleet_harvest_traces", "supercap_step",
+    "fleet_phase_offsets", "fleet_alive_traces",
     "PredictorState", "predictor_init", "predictor_update",
     "predictor_forecast",
 ]
@@ -150,6 +151,58 @@ def fleet_harvest_traces(key: jax.Array, n_nodes: int, n_slots: int,
         traces = jax.vmap(lambda k: harvest_trace(k, n_slots, src))(keys[sel])
         out = out.at[sel].set(traces)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Node churn: dropout/rejoin alive traces (intermittent execution)
+# ---------------------------------------------------------------------------
+#
+# Harvested deployments are intermittent by construction: a node runs while
+# its supercapacitor allows and browns out otherwise (Gobieski et al.,
+# arXiv:1810.07751; Islam et al.'s energy-adaptive intermittent inference).
+# The fleet engine models this as a per-node boolean *alive trace*: a
+# duty-cycled square wave with a per-node activity phase offset (no two
+# nodes wake in sync) plus random per-slot glitches (brown-outs mid-burst).
+# Seeded exactly like ``fleet_harvest_traces``: node ``i`` draws from
+# ``fold_in(key, i)``, so traces are reproducible and extendable per node.
+
+def fleet_phase_offsets(key: jax.Array, n_nodes: int,
+                        period: int = 16) -> jnp.ndarray:
+    """(N,) int32 per-node activity phase offsets in ``[0, period)``.
+
+    The single source of truth for where each node sits in its duty cycle —
+    :func:`fleet_alive_traces` consumes these, and reporting code can group
+    nodes by wake phase the same way ``fleet_source_assignment`` groups by
+    harvest modality."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_nodes))
+    return jax.vmap(
+        lambda k: jax.random.randint(jax.random.fold_in(k, 0), (), 0, period)
+    )(keys).astype(jnp.int32)
+
+
+def fleet_alive_traces(key: jax.Array, n_nodes: int, n_slots: int, *,
+                       duty: float = 0.75, period: int = 16,
+                       p_glitch: float = 0.05) -> jnp.ndarray:
+    """(N, S) bool — per-node dropout/rejoin process for a churny fleet.
+
+    Node ``i`` is up while its phase-offset duty cycle says so
+    (``(t + phase_i) % period < duty * period``) and it doesn't glitch
+    (an independent per-slot brown-out with probability ``p_glitch``).
+    ``duty=1.0, p_glitch=0.0`` yields the all-True trace — the fixed,
+    always-registered fleet the engine simulated before churn existed —
+    which the equivalence tests pin bitwise against the churn-free path.
+    """
+    if not 0.0 <= duty <= 1.0:
+        raise ValueError(f"duty must be in [0, 1], got {duty}")
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_nodes))
+    phases = fleet_phase_offsets(key, n_nodes, period)
+    t = jnp.arange(n_slots, dtype=jnp.int32)
+    on = ((t[None, :] + phases[:, None]) % period
+          < jnp.asarray(duty * period, jnp.float32))           # (N, S)
+    glitch = jax.vmap(
+        lambda k: jax.random.uniform(jax.random.fold_in(k, 1), (n_slots,))
+        < p_glitch)(keys)
+    return on & ~glitch
 
 
 # ---------------------------------------------------------------------------

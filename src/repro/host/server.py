@@ -52,9 +52,9 @@ from .scheduler import edf_pop_batch
 
 __all__ = ["HostServeConfig", "HostPayload", "HostServerState", "SlotOutput",
            "host_payload_example", "cluster_entries", "sampling_entries",
-           "host_server_init", "host_serve_slot", "host_serve_trace",
-           "serve_fleet_payloads", "recover_infer_batch", "host_server_stats",
-           "host_ensemble", "serve_trace_count"]
+           "host_server_init", "host_server_init_stacked", "host_serve_slot",
+           "host_serve_trace", "serve_fleet_payloads", "recover_infer_batch",
+           "host_server_stats", "host_ensemble", "serve_trace_count"]
 
 CLUSTER_KIND = 0    # D3 payload: quantized cluster coreset
 SAMPLING_KIND = 1   # D4 payload: quantized importance samples + moments
@@ -76,6 +76,38 @@ class HostServeConfig:
     cache_capacity: int = 256   # recovery-memo entries
     qos_slots: int = 4          # deadline = arrival + qos_slots (inclusive)
     batches_per_slot: int = 1   # host service rate per slot
+
+    def __post_init__(self):
+        """Reject configurations that would silently corrupt service.
+
+        ``batch_size > queue_capacity`` is the nasty one: ``edf_pop_batch``
+        takes ``order[:batch_size]`` over the capacity-long slot array, so
+        the batch clamps to ``queue_capacity`` rows and the configured
+        service rate is a lie — every slot quietly serves fewer payloads
+        than the config promises.  (An ingest lane wider than the capacity
+        is the call-time analogue: the lane can overflow every slot — see
+        :func:`host_serve_slot`.)"""
+        for field in ("channels", "k", "m", "t", "n_classes", "n_nodes",
+                      "batch_size", "queue_capacity", "cache_capacity"):
+            v = getattr(self, field)
+            if v < 1:
+                raise ValueError(
+                    f"HostServeConfig.{field} must be >= 1, got {v}")
+        # qos_slots=0 is serve-this-slot-or-miss; batches_per_slot=0 is the
+        # normalized compile-probe key (serve_trace_count) — both legal
+        for field in ("qos_slots", "batches_per_slot"):
+            v = getattr(self, field)
+            if v < 0:
+                raise ValueError(
+                    f"HostServeConfig.{field} must be >= 0, got {v}")
+        if self.batch_size > self.queue_capacity:
+            raise ValueError(
+                f"HostServeConfig.batch_size={self.batch_size} exceeds "
+                f"queue_capacity={self.queue_capacity}: edf_pop_batch can "
+                f"only assemble queue_capacity rows, so the extra "
+                f"{self.batch_size - self.queue_capacity} batch rows would "
+                f"silently never be filled — raise queue_capacity or lower "
+                f"batch_size")
 
 
 class HostPayload(NamedTuple):
@@ -175,6 +207,19 @@ def host_server_init(cfg: HostServeConfig) -> HostServerState:
         ensemble_votes=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.int32))
 
 
+def host_server_init_stacked(cfg: HostServeConfig,
+                             n_hosts: int) -> HostServerState:
+    """``n_hosts`` independent server states stacked on a leading axis —
+    the carry of :func:`repro.serving.edge_host.fleet_serve_step`'s
+    per-shard host mode (one host server per node shard, the ROADMAP
+    multi-host shape on one process)."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    one = host_server_init(cfg)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_hosts,) + a.shape).copy(), one)
+
+
 # ---------------------------------------------------------------------------
 # Batched recovery + inference (the host DNN path)
 # ---------------------------------------------------------------------------
@@ -233,6 +278,20 @@ def _entry_windows(p: HostPayload, gen_params: GeneratorParams,
                        jnp.where(has_sampling, 1, 0))
     return jax.lax.switch(branch, [cluster_windows, sampling_windows, mixed],
                           None)
+
+
+def _check_lane_width(cfg: HostServeConfig, width: int) -> None:
+    """An ingest lane wider than the ring would overflow EVERY slot — even
+    an empty queue cannot hold the arrivals, so the excess is guaranteed
+    drops by construction, not by load.  Rejected at the entry points
+    (static shape, so a python check; the config-level analogue lives in
+    :meth:`HostServeConfig.__post_init__`)."""
+    if width > cfg.queue_capacity:
+        raise ValueError(
+            f"ingest lane of {width} entries exceeds queue_capacity="
+            f"{cfg.queue_capacity}: even an empty queue would overflow on "
+            f"every slot — raise HostServeConfig.queue_capacity or narrow "
+            f"the lane")
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +420,7 @@ def host_serve_slot(state: HostServerState, entries: HostPayload,
     slot's arrivals up to a FIXED A and mask the padding; a varying A would
     recompile).  Returns ``(state', SlotOutput)``; feed ``state'`` back in —
     backlog, cache, clock and ensemble all carry over."""
+    _check_lane_width(cfg, entries.kind.shape[0])
     run = _build_serve_slot(cfg, donate)
     return run(state, entries, jnp.asarray(node_ids, jnp.int32),
                jnp.asarray(mask, bool), host_params, gen_params, base_key)
@@ -376,6 +436,7 @@ def host_serve_trace(state: HostServerState, entries: HostPayload,
     (entry leaves (S, A, ...), masks (S, A)) in ONE compiled program.
     Resumable exactly like the fleet engine: chaining two traces through the
     returned state equals one long trace."""
+    _check_lane_width(cfg, entries.kind.shape[1])
     run = _build_serve_trace(cfg, donate)
     return run(state, entries, jnp.asarray(node_ids, jnp.int32),
                jnp.asarray(masks, bool), host_params, gen_params, base_key)
@@ -384,11 +445,18 @@ def host_serve_trace(state: HostServerState, entries: HostPayload,
 def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
                          node_ids: jnp.ndarray, *, cfg: HostServeConfig,
                          host_params: dict, gen_params: GeneratorParams,
-                         base_key: jax.Array, donate: bool = False
+                         base_key: jax.Array,
+                         mask: jnp.ndarray | None = None,
+                         donate: bool = False
                          ) -> tuple[HostServerState, SlotOutput]:
     """Ingest one fleet round of gathered cluster payloads (what
     :func:`repro.serving.edge_host.fleet_serve_step` all_gathers) and serve
-    enough EDF microbatches to cover them at the configured batch size."""
+    enough EDF microbatches to cover them at the configured batch size.
+
+    ``mask`` is the round's alive mask (B,) — a churny fleet's dead nodes
+    produce no radio frame, so their lane rows never enqueue (the lane stays
+    at the FIXED fleet width; only the mask varies, which never re-traces).
+    """
     entries = cluster_entries(wire, cfg.m)
     b = entries.kind.shape[0]
     if b > cfg.queue_capacity:
@@ -397,8 +465,8 @@ def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
             f"{cfg.queue_capacity}; raise HostServeConfig.queue_capacity")
     n_batches = -(-b // cfg.batch_size)
     cfg = dataclasses.replace(cfg, batches_per_slot=n_batches)
-    return host_serve_slot(state, entries, node_ids,
-                           jnp.ones((b,), bool), cfg=cfg,
+    mask = jnp.ones((b,), bool) if mask is None else jnp.asarray(mask, bool)
+    return host_serve_slot(state, entries, node_ids, mask, cfg=cfg,
                            host_params=host_params, gen_params=gen_params,
                            base_key=base_key, donate=donate)
 

@@ -630,7 +630,9 @@ def edge_host_serve_step(windows: jnp.ndarray, *, signatures, qdnn_params,
 def fleet_serve_step(windows: jnp.ndarray, *, host_params,
                      har_cfg: HARConfig, mesh, k: int = 12,
                      key: jax.Array | None = None,
-                     host_state=None, serve_cfg=None, gen_params=None):
+                     host_state=None, serve_cfg=None, gen_params=None,
+                     alive: jnp.ndarray | None = None,
+                     per_shard_host: bool = False):
     """Sharded-fleet edge→host tier: gather ONLY coreset payloads to the host.
 
     The companion to :func:`repro.serving.fleet.seeker_fleet_simulate_sharded`
@@ -643,7 +645,7 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     communication asymmetry at the collective level.
 
     The host work is delegated to the host-tier subsystem (:mod:`repro.host`)
-    in one of two modes:
+    in one of three modes:
 
     * default — the gathered batch runs straight through
       :func:`repro.host.server.recover_infer_batch` (decode -> batched
@@ -654,6 +656,16 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
       returns the evolved ``host_state`` and the round's
       :class:`repro.host.server.SlotOutput` instead of raw logits, so a
       serving loop carries queue backlog / cache / ensemble across rounds.
+      ``alive`` (the round's churn mask) keeps dead nodes' payloads out of
+      the queue — a browned-out node produces no radio frame;
+    * ``per_shard_host=True`` (with ``host_state``/``serve_cfg``) — the
+      ROADMAP multi-host shape: NO gather at all.  Each shard runs its own
+      host server (queue/EDF/cache) over the payloads of its local node
+      tile; ``host_state`` must be the stacked per-shard carry from
+      :func:`repro.host.server.host_server_init_stacked` (one server per
+      shard, leading axis = the mesh quantum).  Only the QoS counters cross
+      shards, psum'd into the returned ``qos`` dict — exactly how fleet
+      aggregates cross shards in the simulator.
 
     Args:
         windows: (N, T, C) fleet sensor windows, one per node.  N that does
@@ -661,12 +673,17 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
             padding is sliced off before the host tier sees it.
         mesh: mesh whose FLEET_RULES node axes carry the fleet.
         host_state: optional :class:`repro.host.server.HostServerState` to
-            feed (requires ``serve_cfg`` and ``gen_params``).
+            feed (requires ``serve_cfg`` and ``gen_params``); stacked
+            per-shard when ``per_shard_host``.
+        alive: optional (N,) bool — this round's alive mask (queue modes
+            only): dead nodes' payloads never enqueue and transmit no wire
+            bytes.
 
-    Returns dict: ``wire_bytes`` — total quantized payload bytes gathered
-    across the mesh, ``raw_bytes`` — the raw-window equivalent (the
-    communication the gather avoided), plus either ``host_logits`` (N, L)
-    (default mode) or ``host_state``/``slot_output`` (queue mode).
+    Returns dict: ``wire_bytes`` — total quantized payload bytes the alive
+    fleet put on the wire, ``raw_bytes`` — the raw-window equivalent (the
+    communication avoided), plus ``host_logits`` (N, L) (default mode) or
+    ``host_state``/``slot_output`` (queue modes; per-shard mode adds the
+    psum'd ``qos`` counter dict).
     """
     from ..host.server import recover_infer_batch, serve_fleet_payloads
     from ..sharding import node_mesh_axes, shard_map_compat
@@ -680,6 +697,21 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     pad = (-n) % quantum
     if pad:
         windows = jnp.pad(windows, ((0, pad), (0, 0), (0, 0)))
+    if alive is not None:
+        alive = jnp.asarray(alive, bool)
+        if alive.shape != (n,):
+            raise ValueError(f"alive must be (N,)=({n},), got {alive.shape}")
+        if host_state is None:
+            raise ValueError("alive is a queue-mode argument: without a "
+                             "host_state there is no queue to keep dead "
+                             "nodes out of")
+
+    if per_shard_host:
+        return _fleet_serve_per_shard(
+            windows, n=n, t=t, c=c, k=k, mesh=mesh, axis_names=axis_names,
+            quantum=quantum, host_params=host_params,
+            host_state=host_state, serve_cfg=serve_cfg,
+            gen_params=gen_params, alive=alive, key=key)
 
     def tier(win, kk):
         # --- edge side: coresets + wire quantization for LOCAL nodes only --
@@ -706,8 +738,9 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     fn = shard_map_compat(tier, mesh, in_specs=(P(axis_names), P()),
                           out_specs=out_specs,
                           axis_names=frozenset(axis_names))
+    n_tx = n if alive is None else int(jnp.sum(alive))   # frames transmitted
     out = {
-        "wire_bytes": n * wire_payload_nbytes(k, c),
+        "wire_bytes": n_tx * wire_payload_nbytes(k, c),
         "raw_bytes": n * raw_payload_bytes(t) * c,
     }
     if host_state is None:
@@ -722,7 +755,92 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     payload = WirePayload(*(f[:n] for f in payload))   # drop inert pad nodes
     state, slot_out = serve_fleet_payloads(
         host_state, payload, jnp.arange(n, dtype=jnp.int32), cfg=serve_cfg,
-        host_params=host_params, gen_params=gen_params, base_key=key)
+        host_params=host_params, gen_params=gen_params, base_key=key,
+        mask=alive)
     out["host_state"] = state
     out["slot_output"] = slot_out
     return out
+
+
+def _fleet_serve_per_shard(windows, *, n, t, c, k, mesh, axis_names,
+                           quantum, host_params, host_state, serve_cfg,
+                           gen_params, alive, key):
+    """``fleet_serve_step``'s per-shard host mode (flag-gated).
+
+    Each shard is its own host: local coreset encode feeds the shard's OWN
+    queue/EDF/cache server — no payload gather, no replicated host work.
+    The payload path is shard-local end to end; only the scalar QoS
+    counters are psum'd (the multi-host QoS aggregation the ROADMAP names),
+    so the collective footprint of a serve round drops from
+    O(N · payload bytes) to O(1).
+    """
+    import dataclasses as _dc
+
+    from jax.sharding import PartitionSpec as P
+
+    from ..host.server import SlotOutput, _slot_body, cluster_entries
+    from ..sharding import shard_map_compat
+
+    if serve_cfg is None or gen_params is None or host_state is None:
+        raise ValueError("fleet_serve_step per_shard_host mode needs "
+                         "host_state (stacked: host_server_init_stacked), "
+                         "serve_cfg and gen_params")
+    lead = jax.tree_util.tree_leaves(host_state)[0].shape[0]
+    if lead != quantum:
+        raise ValueError(
+            f"per_shard_host needs one host server per shard: host_state "
+            f"is stacked for {lead} hosts, mesh quantum is {quantum} "
+            f"(use host_server_init_stacked(cfg, {quantum}))")
+    n_pad = windows.shape[0]
+    n_local = n_pad // quantum
+    if n_local > serve_cfg.queue_capacity:
+        raise ValueError(
+            f"per-shard ingest lane of {n_local} nodes exceeds "
+            f"queue_capacity={serve_cfg.queue_capacity}; raise "
+            f"HostServeConfig.queue_capacity")
+    # service rate: enough EDF microbatches to cover the LOCAL tile
+    cfg = _dc.replace(serve_cfg,
+                      batches_per_slot=-(-n_local // serve_cfg.batch_size))
+    # pad nodes (global index >= n) and dead nodes never enqueue
+    mask_full = jnp.arange(n_pad) < n
+    if alive is not None:
+        mask_full = mask_full & jnp.pad(alive, (0, n_pad - n))
+    node_ids = jnp.arange(n_pad, dtype=jnp.int32)
+
+    def tier(win, st_tile, nids, m, kk):
+        # local edge encode -> the shard's own host server; nothing but the
+        # psum'd QoS counters ever leaves the shard
+        payload = _edge_encode_coresets(win, k)
+        entries = cluster_entries(payload, cfg.m)
+        state = jax.tree_util.tree_map(lambda a: a[0], st_tile)
+        new_state, slot_out = _slot_body(
+            cfg, state, entries, nids, m, host_params, gen_params, kk)
+        qos = {
+            name: jax.lax.psum(getattr(new_state, name), axis_names)
+            for name in ("served", "deadline_misses")
+        }
+        qos["drops_overflow"] = jax.lax.psum(
+            new_state.queue.drops_overflow, axis_names)
+        return (jax.tree_util.tree_map(lambda a: a[None], new_state),
+                slot_out, qos)
+
+    nodes = P(axis_names)
+    state_specs = jax.tree_util.tree_map(lambda _: nodes, host_state)
+    fn = shard_map_compat(
+        tier, mesh,
+        in_specs=(nodes, state_specs, nodes, nodes, P()),
+        out_specs=(state_specs,
+                   SlotOutput(*([nodes] * len(SlotOutput._fields))),
+                   {"served": P(), "deadline_misses": P(),
+                    "drops_overflow": P()}),
+        axis_names=frozenset(axis_names))
+    new_state, slot_out, qos = fn(windows, host_state, node_ids, mask_full,
+                                  key)
+    n_tx = n if alive is None else int(jnp.sum(alive))
+    return {
+        "wire_bytes": n_tx * wire_payload_nbytes(k, c),
+        "raw_bytes": n * raw_payload_bytes(t) * c,
+        "host_state": new_state,
+        "slot_output": slot_out,
+        "qos": {k_: int(v) for k_, v in qos.items()},
+    }

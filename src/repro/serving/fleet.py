@@ -34,6 +34,22 @@ Harvest traces are per-node (shape (N, S)): heterogeneous energy income is
 the point of fleet simulation — per-node energy dynamics diverge (Gobieski et
 al., arXiv:1810.07751), and the Seeker companion evaluation (arXiv:2204.13106)
 runs exactly such heterogeneous wearable fleets.
+
+**Churn** (node dropout/rejoin): harvested fleets are intermittent — nodes
+brown out and rejoin mid-deployment.  Both engines accept an ``alive``
+(N, S) bool trace (:func:`repro.core.energy.fleet_alive_traces`): in a dead
+slot a node harvests nothing, holds its state *frozen* (supercapacitor
+charge, predictor history, AAC continuity AND its PRNG stream), and emits
+DEFER with a zero payload; on rejoin it continues exactly where it stopped —
+no re-padding, no re-tracing, no shape change.  Every fleet aggregate
+(bytes on wire, decision histogram, completion, accuracy) respects the
+time-varying alive mask, not just the static padding mask.  An all-True
+``alive`` is bitwise-identical to not passing one.
+
+**Streaming** (:func:`seeker_fleet_simulate_streamed`): window streams are
+fed to the scan in ``(chunk,)``-slot segments through the ``state0`` /
+``node_keys`` resume contract, so peak window memory is O(N·chunk·T·C)
+instead of O(N·S·T·C) while traces stay bitwise-equal to one long run.
 """
 from __future__ import annotations
 
@@ -54,7 +70,7 @@ from .edge_host import (SeekerNodeState, seeker_host_step,
                         seeker_sensor_step_given_corr)
 
 __all__ = ["fleet_node_init", "seeker_fleet_simulate",
-           "seeker_fleet_simulate_sharded"]
+           "seeker_fleet_simulate_sharded", "seeker_fleet_simulate_streamed"]
 
 N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the fleet histogram
 
@@ -115,7 +131,7 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
              aac_table):
         state, keys = carry
-        win_t, harv_t = inp
+        win_t, harv_t, alive_t = inp
         n = keys.shape[0]
         if shared_stream:
             win_t = jnp.broadcast_to(win_t[None], (n,) + win_t.shape)
@@ -148,6 +164,25 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                     lambda a: block_body(*a, signatures, qdnn_params,
                                          host_params, gen_params, aac_table),
                     (st_g, ks_g, w_g, h_g)))
+
+        # --- churn lane: a dead node harvests nothing, freezes its whole
+        # carry (charge, predictor, AAC continuity AND its PRNG stream — on
+        # rejoin it continues exactly where it browned out), and emits DEFER
+        # with zero payload.  With an all-True trace every select picks the
+        # freshly-computed value, so the churn-free run is bitwise unchanged.
+        def keep(new, old):
+            a = alive_t.reshape((n,) + (1,) * (new.ndim - 1))
+            return jnp.where(a, new, old)
+
+        new_state = jax.tree_util.tree_map(keep, new_state, state)
+        new_keys = keep(new_keys, keys)
+        trace = {
+            "decision": jnp.where(alive_t, trace["decision"], DEFER),
+            "payload": jnp.where(alive_t, trace["payload"], 0.0),
+            "stored": jnp.where(alive_t, trace["stored"], state.stored_uj),
+            "k": jnp.where(alive_t, trace["k"], 0),
+            "logits": jnp.where(alive_t[:, None], trace["logits"], 0.0),
+        }
         return (new_state, new_keys), trace
 
     return step
@@ -166,15 +201,15 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     re-tracing a fresh closure each call.
     """
 
-    def run(state0, keys0, xs_w, xs_h, signatures, qdnn_params, host_params,
-            gen_params, aac_table):
+    def run(state0, keys0, xs_w, xs_h, xs_alive, signatures, qdnn_params,
+            host_params, gen_params, aac_table):
         t = xs_w.shape[-2]
         step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
                                 corr_threshold, shared_stream, t, node_block)
         (state, keys), traces = jax.lax.scan(
             lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                               gen_params, aac_table),
-            (state0, keys0), (xs_w, xs_h))
+            (state0, keys0), (xs_w, xs_h, xs_alive))
         # the evolved keys are returned so a resumed run (state0=final_state,
         # node_keys=final_keys) continues each node's PRNG stream instead of
         # replaying segment 1's randomness
@@ -189,42 +224,56 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                              har_cfg: HARConfig, costs: EnergyCosts,
                              quant_bits: int, k_max: int, m_samples: int,
                              corr_threshold: float, shared_stream: bool,
+                             per_node_labels: bool,
                              node_block: int | None, donate: bool):
     """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
     ``shard_map`` manual region, each shard scanning its local node tile;
-    only the masked fleet aggregates are ``psum``-ed over ``axis_names``."""
+    only the masked fleet aggregates are ``psum``-ed over ``axis_names``.
+
+    ``per_node_labels`` switches the accuracy aggregate between one shared
+    (S,) label track (replicated) and per-node (S, N) tracks (sharded over
+    the node axes like every other per-node array)."""
     nodes = P(axis_names)                    # leading node dim over the mesh
     time_nodes = P(None, axis_names)         # (S, N, ...) time-major traces
     repl = P()                               # replicated (params, bank, mask)
 
-    def shard_body(state0, keys0, xs_w, xs_h, mask, labels, signatures,
-                   qdnn_params, host_params, gen_params, aac_table):
+    def shard_body(state0, keys0, xs_w, xs_h, xs_alive, mask, labels,
+                   signatures, qdnn_params, host_params, gen_params,
+                   aac_table):
         t = xs_w.shape[-2]
         step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
                                 corr_threshold, shared_stream, t, node_block)
         (state, keys), traces = jax.lax.scan(
             lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                               gen_params, aac_table),
-            (state0, keys0), (xs_w, xs_h))
+            (state0, keys0), (xs_w, xs_h, xs_alive))
 
         # --- fleet-level aggregates: the ONLY cross-shard traffic ----------
-        # inert padding nodes (mask False) contribute nothing
-        alive = mask[None, :]                               # (1, n_local)
-        sent = (traces["decision"] != DEFER) & alive
+        # the time-varying churn mask composes with the static padding mask:
+        # inert padding nodes AND dead slots contribute nothing — a browned-
+        # out node's forced DEFER is absence, not a scheduling decision
+        act = xs_alive & mask[None, :]                      # (S, n_local)
+        sent = (traces["decision"] != DEFER) & act
         bytes_on_wire = jax.lax.psum(
-            jnp.sum(jnp.where(alive, traces["payload"], 0.0)), axis_names)
+            jnp.sum(jnp.where(act, traces["payload"], 0.0)), axis_names)
         hist = jax.lax.psum(
             jnp.sum(jax.nn.one_hot(traces["decision"], N_DECISIONS,
                                    dtype=jnp.int32)
-                    * alive[..., None].astype(jnp.int32), axis=(0, 1)),
+                    * act[..., None].astype(jnp.int32), axis=(0, 1)),
             axis_names)                                     # (N_DECISIONS,)
         completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
+        alive_slots = jax.lax.psum(jnp.sum(act.astype(jnp.int32)),
+                                   axis_names)
         preds = jnp.argmax(traces["logits"], axis=-1)       # (S, n_local)
+        # per-node labels arrive as the shard's own (S, n_local) tile;
+        # a shared track is replicated and broadcast over the node axis
+        ok = (preds == labels) if per_node_labels else \
+            (preds == labels[:, None])
         correct = jax.lax.psum(
-            jnp.sum(((preds == labels[:, None]) & sent).astype(jnp.int32)),
-            axis_names)
+            jnp.sum((ok & sent).astype(jnp.int32)), axis_names)
         aggs = {"bytes_on_wire": bytes_on_wire, "decision_histogram": hist,
-                "completed": completed, "correct": correct}
+                "completed": completed, "alive_slots": alive_slots,
+                "correct": correct}
         return traces, state, keys, aggs
 
     fn = shard_map_compat(
@@ -232,8 +281,10 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
         in_specs=(nodes, nodes,                     # state0 (pytree), keys0
                   repl if shared_stream else time_nodes,   # xs_w
                   time_nodes,                       # xs_h (S, N)
+                  time_nodes,                       # xs_alive (S, N)
                   nodes,                            # mask (N,)
-                  repl, repl, repl, repl, repl, repl),
+                  time_nodes if per_node_labels else repl,  # labels
+                  repl, repl, repl, repl, repl),
         out_specs=(time_nodes, nodes, nodes, repl),
         axis_names=frozenset(axis_names))
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
@@ -257,6 +308,68 @@ def _stack_pad_state(state0: SeekerNodeState | None, n: int, pad: int,
         lambda a, b: jnp.concatenate([a, b], axis=0), state0, filler)
 
 
+def _resolve_labels(labels, s: int, n: int, shared_stream: bool
+                    ) -> tuple[jnp.ndarray | None, bool]:
+    """Validate the ``labels`` argument against the stream layout.
+
+    Returns ``(labels, per_node)``: a shared (S,) track (only meaningful
+    when every node sees the same stream) or per-node (S, N) tracks.  A
+    shared track with per-node streams is REJECTED — scoring N different
+    window streams against one label track is exactly the silent accuracy
+    bug this check exists to stop.
+    """
+    if labels is None:
+        return None, False
+    labels = jnp.asarray(labels)
+    if labels.shape == (s, n):
+        return labels.astype(jnp.int32), True
+    if labels.shape == (s,):
+        if not shared_stream and n != 1:
+            raise ValueError(
+                f"(S,)={labels.shape} labels with per-node (N, S, T, C) "
+                f"window streams is ambiguous: each node plays its own "
+                f"stream, so accuracy against one shared label track is "
+                f"meaningless.  Pass per-node (S, N)=({s}, {n}) labels "
+                f"(padded/sharded like harvest) or a shared (S, T, C) "
+                f"window stream.")
+        return labels.astype(jnp.int32), False
+    raise ValueError(
+        f"labels must be (S,)=({s},) for a shared stream or "
+        f"(S, N)=({s}, {n}) per-node tracks, got {labels.shape}")
+
+
+def _resolve_alive(alive, n: int, s: int) -> jnp.ndarray:
+    """(N, S) bool churn trace; ``None`` = the always-registered fleet."""
+    if alive is None:
+        return jnp.ones((n, s), bool)
+    alive = jnp.asarray(alive)
+    if alive.shape != (n, s):
+        raise ValueError(f"alive must be (N, S)=({n}, {s}) bool, "
+                         f"got {alive.shape}")
+    return alive.astype(bool)
+
+
+def _fleet_aggregates(traces: dict, act: jnp.ndarray,
+                      labels: jnp.ndarray | None, per_node: bool) -> dict:
+    """Masked fleet aggregates from (S, N) traces — the single-device
+    mirror of the sharded engine's psum'd quantities (int counters are
+    exactly equal across engines; tests cross-check them)."""
+    sent = (traces["decision"] != DEFER) & act
+    aggs = {
+        "bytes_on_wire": jnp.sum(jnp.where(act, traces["payload"], 0.0)),
+        "decision_histogram": jnp.sum(
+            jax.nn.one_hot(traces["decision"], N_DECISIONS, dtype=jnp.int32)
+            * act[..., None].astype(jnp.int32), axis=(0, 1)),
+        "completed": jnp.sum(sent.astype(jnp.int32)),
+        "alive_slots": jnp.sum(act.astype(jnp.int32)),
+    }
+    if labels is not None:
+        preds = jnp.argmax(traces["logits"], axis=-1)
+        ok = (preds == labels) if per_node else (preds == labels[:, None])
+        aggs["correct"] = jnp.sum((ok & sent).astype(jnp.int32))
+    return aggs
+
+
 def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           signatures, qdnn_params, host_params, gen_params,
                           har_cfg: HARConfig,
@@ -268,6 +381,8 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           predictor_window: int = 8, initial_uj: float = 50.0,
                           state0: SeekerNodeState | None = None,
                           node_keys: jax.Array | None = None,
+                          labels: jnp.ndarray | None = None,
+                          alive: jnp.ndarray | None = None,
                           node_block: int | None = None,
                           donate: bool = True):
     """Simulate N independent Seeker nodes over S time slots in one scan.
@@ -290,6 +405,15 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
             re-derives ``fold_in(key, i)`` and replays segment 1's random
             draws.  ``state0 + node_keys`` makes a chain of runs bitwise
             equal to one long run.
+        labels: optional ground truth for the ``fleet_accuracy`` aggregate:
+            (S,) for a shared stream, or per-node (S, N) tracks.  A shared
+            (S,) track with per-node window streams raises — see
+            :func:`_resolve_labels`.
+        alive: optional (N, S) bool churn trace
+            (:func:`repro.core.energy.fleet_alive_traces`) — dead slots
+            freeze the node (state AND PRNG stream), emit DEFER with zero
+            payload, and drop out of every aggregate.  An all-True trace is
+            bitwise-identical to ``None``.
         node_block: run per-slot fleet math in fixed-size node microbatches
             (see :func:`_make_fleet_step`) — results become bit-identical
             across fleet sizes and shard layouts that use the same block.
@@ -302,6 +426,9 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         ``decisions``/``payload_bytes``/``stored_uj``/``k_trace``: (S, N),
         ``logits``/``preds``: (S, N, L) / (S, N),
         ``bytes_on_wire``: () total payload bytes the fleet transmitted,
+        ``decision_histogram``: (N_DECISIONS,) int32 counts over alive slots,
+        ``completed``/``alive_slots``: () int32, ``completed_frac``: (),
+        ``fleet_accuracy``/``correct``: () when ``labels`` is given,
         ``raw_bytes_per_window``: () the uncompressed (T, C) baseline per
             window (all channels, the benchmarks' raw-equivalent convention),
         ``final_state``: stacked ``SeekerNodeState``.
@@ -318,6 +445,8 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         assert windows.shape[:2] == (n, s), (windows.shape, n, s)
         xs_windows = jnp.moveaxis(windows, 0, 1)              # (S, N, T, C)
     t = windows.shape[-2]
+    labels, per_node_labels = _resolve_labels(labels, s, n, shared_stream)
+    alive_t = _resolve_alive(alive, n, s).T                   # (S, N)
 
     state0 = _stack_pad_state(state0, n, 0, predictor_window, initial_uj)
     keys0 = (node_keys if node_keys is not None else
@@ -326,22 +455,33 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                               corr_threshold, shared_stream, node_block,
                               donate)
     traces, final_state, final_keys = run_fn(
-        state0, keys0, xs_windows, harvest.T, signatures, qdnn_params,
-        host_params, gen_params, aac_table)
+        state0, keys0, xs_windows, harvest.T, alive_t, signatures,
+        qdnn_params, host_params, gen_params, aac_table)
 
-    return {
+    aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels)
+    out = {
         "decisions": traces["decision"],                      # (S, N)
         "payload_bytes": traces["payload"],                   # (S, N)
         "stored_uj": traces["stored"],                        # (S, N)
         "k_trace": traces["k"],                               # (S, N)
         "logits": traces["logits"],                           # (S, N, L)
         "preds": jnp.argmax(traces["logits"], axis=-1),       # (S, N)
-        "bytes_on_wire": jnp.sum(traces["payload"]),
+        "bytes_on_wire": aggs["bytes_on_wire"],
+        "decision_histogram": aggs["decision_histogram"],
+        "completed": aggs["completed"],
+        "alive_slots": aggs["alive_slots"],
+        "completed_frac": aggs["completed"]
+            / jnp.maximum(aggs["alive_slots"], 1),
         "raw_bytes_per_window": jnp.asarray(
             float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
         "final_state": final_state,
         "final_keys": final_keys,
     }
+    if labels is not None:
+        out["correct"] = aggs["correct"]
+        out["fleet_accuracy"] = (aggs["correct"]
+                                 / jnp.maximum(aggs["completed"], 1))
+    return out
 
 
 def seeker_fleet_simulate_sharded(
@@ -356,6 +496,7 @@ def seeker_fleet_simulate_sharded(
         state0: SeekerNodeState | None = None,
         node_keys: jax.Array | None = None,
         labels: jnp.ndarray | None = None,
+        alive: jnp.ndarray | None = None,
         node_block: int | None = None, donate: bool = True):
     """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
 
@@ -378,13 +519,18 @@ def seeker_fleet_simulate_sharded(
     Args (beyond :func:`seeker_fleet_simulate`):
         mesh: a ``jax.sharding.Mesh``; default is a 1-D ("data",) mesh over
             every visible device.
-        labels: optional (S,) ground-truth labels for the shared stream;
-            enables the ``fleet_accuracy`` aggregate.
+        labels: optional ground truth enabling the ``fleet_accuracy``
+            aggregate: (S,) for a shared stream, or per-node (S, N) tracks
+            (sharded over the node axes, padded like harvest).  A shared
+            (S,) track with per-node window streams raises.
+        alive: optional (N, S) bool churn trace — sharded over the node
+            axes; padding nodes are permanently dead.
 
     Extra returns: ``decision_histogram`` (N_DECISIONS,) int32 fleet-wide
-    decision counts, ``completed_frac`` (), ``fleet_accuracy`` () when
-    ``labels`` is given, ``padded_nodes`` (python int), ``node_axes``
-    (python tuple of mesh axis names).
+    decision counts over alive slots, ``completed``/``alive_slots`` () int32,
+    ``completed_frac`` (), ``fleet_accuracy``/``correct`` () when ``labels``
+    is given, ``padded_nodes`` (python int), ``node_axes`` (python tuple of
+    mesh axis names).
     """
     costs = costs or EnergyCosts()
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -409,6 +555,7 @@ def seeker_fleet_simulate_sharded(
             xs_windows = jnp.pad(xs_windows,
                                  ((0, 0), (0, pad)) + ((0, 0),) * 2)
     t = windows.shape[-2]
+    labels, per_node_labels = _resolve_labels(labels, s, n, shared_stream)
 
     state_full = _stack_pad_state(state0, n, pad, predictor_window,
                                   initial_uj)
@@ -417,15 +564,22 @@ def seeker_fleet_simulate_sharded(
     if node_keys is not None:        # resume: real nodes continue their
         keys0 = keys0.at[:n].set(node_keys)     # streams, pad keys inert
     harvest_t = jnp.pad(harvest, ((0, pad), (0, 0))).T        # (S, N+pad)
+    # churn trace, padding nodes permanently dead (their ladder never runs)
+    alive_t = jnp.pad(_resolve_alive(alive, n, s),
+                      ((0, pad), (0, 0))).T                   # (S, N+pad)
     mask = jnp.arange(n + pad) < n
-    labels_arr = (labels if labels is not None
-                  else jnp.zeros((s,), jnp.int32))
+    if labels is None:
+        labels_arr = jnp.zeros((s,), jnp.int32)
+    elif per_node_labels:            # pad like harvest: inert nodes' track
+        labels_arr = jnp.pad(labels, ((0, 0), (0, pad)))      # (S, N+pad)
+    else:
+        labels_arr = labels
 
     run_fn = _build_fleet_run_sharded(
         mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
-        corr_threshold, shared_stream, node_block, donate)
+        corr_threshold, shared_stream, per_node_labels, node_block, donate)
     traces, final_state, final_keys, aggs = run_fn(
-        state_full, keys0, xs_windows, harvest_t, mask, labels_arr,
+        state_full, keys0, xs_windows, harvest_t, alive_t, mask, labels_arr,
         signatures, qdnn_params, host_params, gen_params, aac_table)
 
     out = {
@@ -437,7 +591,10 @@ def seeker_fleet_simulate_sharded(
         "preds": jnp.argmax(traces["logits"][:, :n], axis=-1),
         "bytes_on_wire": aggs["bytes_on_wire"],
         "decision_histogram": aggs["decision_histogram"],
-        "completed_frac": aggs["completed"] / float(n * s),
+        "completed": aggs["completed"],
+        "alive_slots": aggs["alive_slots"],
+        "completed_frac": aggs["completed"]
+            / jnp.maximum(aggs["alive_slots"], 1),
         "raw_bytes_per_window": jnp.asarray(
             float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
         "final_state": jax.tree_util.tree_map(lambda a: a[:n], final_state),
@@ -446,6 +603,119 @@ def seeker_fleet_simulate_sharded(
         "node_axes": axis_names,
     }
     if labels is not None:
+        out["correct"] = aggs["correct"]
         out["fleet_accuracy"] = (aggs["correct"]
                                  / jnp.maximum(aggs["completed"], 1))
+    return out
+
+
+def seeker_fleet_simulate_streamed(
+        windows, harvest: jnp.ndarray, *, chunk: int,
+        signatures, qdnn_params, host_params, gen_params,
+        har_cfg: HARConfig, mesh=None,
+        aac_table: AACTable | None = None,
+        costs: EnergyCosts | None = None,
+        key: jax.Array | None = None, quant_bits: int = 16,
+        k_max: int = 12, m_samples: int = 20, corr_threshold: float = 0.95,
+        predictor_window: int = 8, initial_uj: float = 50.0,
+        state0: SeekerNodeState | None = None,
+        node_keys: jax.Array | None = None,
+        labels: jnp.ndarray | None = None,
+        alive: jnp.ndarray | None = None,
+        node_block: int | None = None, donate: bool = True):
+    """Feed the fleet scan in ``chunk``-slot window segments instead of
+    materializing the whole (N, S, T, C) stream up front.
+
+    The driver around the resume contract: each segment runs through
+    :func:`seeker_fleet_simulate` (or the sharded engine when ``mesh`` is
+    given) with the previous segment's ``final_state``/``final_keys``, so
+    the chain is *bitwise* one long run — decisions, payload bytes, stored
+    µJ, logits and final keys are identical to a single S-slot call — while
+    peak window memory is O(N·chunk·T·C) instead of O(N·S·T·C).  Every
+    segment reuses the engines' compile cache (one compiled scan per
+    distinct segment length: ``S % chunk`` adds at most one more shape).
+
+    Args (beyond the engines'):
+        windows: the stream *source* — either a full array ((S, T, C) shared
+            or (N, S, T, C) per-node; the driver slices it) or a callable
+            ``windows(start, stop) -> (stop-start, T, C) | (N, stop-start,
+            T, C)`` producing each segment on demand.  The callable form is
+            the point of streaming: only one chunk of windows ever exists.
+        chunk: slots per segment (the last segment may be shorter).
+        mesh: run segments through :func:`seeker_fleet_simulate_sharded`.
+
+    Returns the engine dict with traces concatenated over time, counter
+    aggregates (``decision_histogram``, ``completed``, ``alive_slots``,
+    ``correct``) summed exactly, float aggregates (``bytes_on_wire``)
+    summed per segment, and ``completed_frac``/``fleet_accuracy``
+    recomputed from the summed counters; plus ``n_chunks``.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    n, s = harvest.shape
+    if callable(windows):
+        window_fn = windows
+    else:
+        arr = jnp.asarray(windows)
+        if arr.ndim == 3:
+            window_fn = lambda a, b: arr[a:b]                 # noqa: E731
+        else:
+            window_fn = lambda a, b: arr[:, a:b]              # noqa: E731
+    labels_full = None if labels is None else jnp.asarray(labels)
+    alive_full = None if alive is None else _resolve_alive(alive, n, s)
+
+    kw = dict(signatures=signatures, qdnn_params=qdnn_params,
+              host_params=host_params, gen_params=gen_params,
+              har_cfg=har_cfg, aac_table=aac_table, costs=costs, key=key,
+              quant_bits=quant_bits, k_max=k_max, m_samples=m_samples,
+              corr_threshold=corr_threshold,
+              predictor_window=predictor_window, initial_uj=initial_uj,
+              node_block=node_block, donate=donate)
+    if mesh is not None:
+        kw["mesh"] = mesh
+    engine = (seeker_fleet_simulate if mesh is None
+              else seeker_fleet_simulate_sharded)
+
+    state, keys = state0, node_keys
+    parts: list[dict] = []
+    counters: dict = {}
+    bytes_on_wire = jnp.zeros((), jnp.float32)
+    res = None
+    for start in range(0, s, chunk):
+        stop = min(start + chunk, s)
+        seg_kw = dict(kw)
+        if labels_full is not None:
+            seg_kw["labels"] = labels_full[start:stop]
+        if alive_full is not None:
+            seg_kw["alive"] = alive_full[:, start:stop]
+        res = engine(window_fn(start, stop), harvest[:, start:stop],
+                     state0=state, node_keys=keys, **seg_kw)
+        state, keys = res["final_state"], res["final_keys"]
+        parts.append({k: res[k] for k in
+                      ("decisions", "payload_bytes", "stored_uj", "k_trace",
+                       "logits", "preds")})
+        for k in ("decision_histogram", "completed", "alive_slots",
+                  "correct"):
+            if k in res:
+                counters[k] = counters.get(k, 0) + res[k]
+        bytes_on_wire = bytes_on_wire + res["bytes_on_wire"]
+
+    out = {k: jnp.concatenate([p[k] for p in parts], axis=0)
+           for k in parts[0]}
+    out.update(counters)
+    out.update({
+        "bytes_on_wire": bytes_on_wire,
+        "completed_frac": counters["completed"]
+            / jnp.maximum(counters["alive_slots"], 1),
+        "raw_bytes_per_window": res["raw_bytes_per_window"],
+        "final_state": state,
+        "final_keys": keys,
+        "n_chunks": -(-s // chunk),
+    })
+    if "correct" in counters:
+        out["fleet_accuracy"] = (counters["correct"]
+                                 / jnp.maximum(counters["completed"], 1))
+    if mesh is not None:
+        out["padded_nodes"] = res["padded_nodes"]
+        out["node_axes"] = res["node_axes"]
     return out

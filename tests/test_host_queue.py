@@ -182,6 +182,51 @@ def test_push_batch_bulk_path_matches_sequential(seed, cap):
         np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
 
 
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cap=st.integers(2, 12),
+       lane=st.integers(2, 12))
+def test_push_batch_overflow_path_matches_sequential(seed, cap, lane):
+    """The OVERFLOW path of queue_push_batch (the lax.cond fallback when the
+    masked lane does not fit the free slots) must be bitwise-equal — slots,
+    payloads, cursor AND drops_overflow — to N repeated queue_push calls
+    under random masks and deadlines that force eviction.  (The bulk==
+    sequential property above only ever exercises the no-overflow path.)"""
+    rng = np.random.RandomState(seed)
+    # pre-fill most of the ring so the incoming lane overflows it
+    pre = int(rng.randint(max(cap - 2, 1), cap + 1))
+    q0 = _push_all(_mini_queue(cap), rng.randint(0, 50, size=pre))
+    for _ in range(int(rng.randint(0, 2))):       # maybe move the cursor
+        q0, _, _ = edf_pop_batch(q0, 1)
+
+    pids = jnp.arange(100, 100 + lane, dtype=jnp.int32)
+    nids = jnp.arange(lane, dtype=jnp.int32)
+    arrs = jnp.zeros(lane, jnp.int32)
+    # mixed deadlines: some earlier than the residents (forcing eviction of
+    # a resident), some later (the incoming entry itself is dropped)
+    dls = jnp.asarray(rng.randint(0, 100, size=lane), jnp.int32)
+    mask = jnp.asarray(rng.rand(lane) < 0.8)
+
+    n_free = cap - int(np.asarray(queue_occupancy(q0)))
+    if int(np.asarray(mask).sum()) <= n_free:
+        mask = jnp.ones((lane,), bool)            # force the overflow branch
+    if int(np.asarray(mask).sum()) <= n_free:
+        return                                    # lane can't overflow cap
+
+    batch_q, n_drop = queue_push_batch(q0, {"pid": pids}, nids, arrs, dls,
+                                       mask)
+    seq_q = q0
+    drops = 0
+    for i in range(lane):
+        seq_q, dropped = queue_push(seq_q, {"pid": pids[i]}, nids[i],
+                                    arrs[i], dls[i], mask[i])
+        drops += int(dropped)
+    assert drops > 0, "property must exercise the eviction path"
+    assert int(n_drop) == drops
+    for leaf_a, leaf_b in zip(jax.tree_util.tree_leaves(batch_q),
+                              jax.tree_util.tree_leaves(seq_q)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+
+
 def test_queue_ops_are_jittable():
     """The whole push/pop cycle traces into one jitted fn (the serve slot
     relies on this)."""

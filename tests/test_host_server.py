@@ -190,19 +190,73 @@ def test_deadline_misses_counted_not_served(setup):
 
 
 def test_overflow_drops_counted(setup):
+    """A lane that FITS the ring can still overflow it across slots once a
+    backlog accumulates — those drops must be counted.  (A lane wider than
+    the ring is rejected outright: see test_ingest_lane_wider_than_capacity
+    _raises.)"""
     key, params, gen, wins, labels, wire = setup
     cfg = _cfg(batch_size=2, queue_capacity=4, qos_slots=8)
-    entries = cluster_entries(wire, cfg.m)
+    four = jax.tree_util.tree_map(lambda a: a[:4], cluster_entries(wire,
+                                                                   cfg.m))
+    nid = jnp.arange(4, dtype=jnp.int32)
+    mask = jnp.ones((4,), bool)
     kw = dict(cfg=cfg, host_params=params, gen_params=gen, base_key=key)
 
     state = host_server_init(cfg)
-    state, _ = host_serve_slot(state, entries,
-                               jnp.arange(8, dtype=jnp.int32),
-                               jnp.ones((8,), bool), **kw)
-    # 8 arrivals into a 4-slot ring: 4 dropped, 2 served, 2 backlogged
+    # slot 0: 4 arrivals fill the ring exactly; 2 served, 2 backlogged
+    state, _ = host_serve_slot(state, four, nid, mask, **kw)
+    # slot 1: 4 more arrivals meet 2 free slots -> 2 inserted, 2 dropped
+    state, _ = host_serve_slot(state, four, nid, mask, **kw)
     stats = host_server_stats(state)
-    assert stats["drops_overflow"] == 4
-    assert stats["served"] == 2 and stats["backlog"] == 2
+    assert stats["drops_overflow"] == 2
+    assert stats["served"] == 4 and stats["backlog"] == 2
+
+
+# ---------------------------------------------------------------------------
+# HostServeConfig validation (the silently-truncating configs now raise)
+# ---------------------------------------------------------------------------
+
+def test_config_batch_size_over_capacity_raises():
+    """batch_size > queue_capacity silently clamps edf_pop_batch to the
+    capacity (order[:batch_size] over a capacity-long array) — rejected."""
+    with pytest.raises(ValueError, match="batch_size=32 exceeds "
+                                         "queue_capacity=16"):
+        _cfg(batch_size=32, queue_capacity=16)
+
+
+@pytest.mark.parametrize("field", ["channels", "k", "m", "t", "n_classes",
+                                   "n_nodes", "batch_size", "queue_capacity",
+                                   "cache_capacity"])
+def test_config_nonpositive_dims_raise(field):
+    with pytest.raises(ValueError, match=f"{field} must be >= 1"):
+        _cfg(**{field: 0})
+
+
+@pytest.mark.parametrize("field", ["qos_slots", "batches_per_slot"])
+def test_config_negative_counts_raise(field):
+    with pytest.raises(ValueError, match=f"{field} must be >= 0"):
+        _cfg(**{field: -1})
+
+
+def test_config_zero_qos_and_probe_key_still_legal():
+    """qos_slots=0 (serve-now-or-miss) and batches_per_slot=0 (the
+    serve_trace_count normalization key) must stay constructible."""
+    _cfg(qos_slots=0)
+    dataclasses.replace(_cfg(), batches_per_slot=0)
+
+
+def test_ingest_lane_wider_than_capacity_raises(setup):
+    """An 8-wide lane into a 4-slot ring would overflow EVERY slot by
+    construction — rejected at the entry point, not silently dropped."""
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=2, queue_capacity=4)
+    entries = cluster_entries(wire, cfg.m)          # lane width 8
+    with pytest.raises(ValueError, match="ingest lane of 8 entries exceeds "
+                                         "queue_capacity=4"):
+        host_serve_slot(host_server_init(cfg), entries,
+                        jnp.arange(8, dtype=jnp.int32), jnp.ones((8,), bool),
+                        cfg=cfg, host_params=params, gen_params=gen,
+                        base_key=key)
 
 
 # ---------------------------------------------------------------------------
@@ -334,3 +388,47 @@ def test_fleet_serve_step_queue_mode_requires_cfg(setup):
         fleet_serve_step(wins[:4], host_params=params, har_cfg=HAR,
                          mesh=mesh, key=key,
                          host_state=host_server_init(cfg))
+
+
+def test_fleet_serve_step_alive_mask_keeps_dead_nodes_out(setup):
+    """Churn round: dead nodes' payloads never enqueue — not served, not
+    backlogged, not counted anywhere; wire bytes count only transmitters."""
+    from repro.serving import fleet_serve_step
+    from repro.sharding import make_mesh_compat
+
+    key, params, gen, wins, labels, wire = setup
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    cfg = _cfg(batch_size=4, n_nodes=6, queue_capacity=8)
+    alive = jnp.asarray([True, False, True, True, False, True])
+    out = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                           mesh=mesh, key=key,
+                           host_state=host_server_init(cfg), serve_cfg=cfg,
+                           gen_params=gen, alive=alive)
+    stats = host_server_stats(out["host_state"])
+    assert (stats["served"] + stats["deadline_misses"]
+            + stats["drops_overflow"] + stats["backlog"]) == 4
+    served = _by_node(out["slot_output"])
+    assert sorted(served) == [0, 2, 3, 5]          # alive nodes only
+    # the full fleet would have shipped 6 frames; only 4 transmitted
+    full = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                            mesh=mesh, key=key,
+                            host_state=host_server_init(cfg), serve_cfg=cfg,
+                            gen_params=gen)
+    assert out["wire_bytes"] == full["wire_bytes"] * 4 // 6
+    # alive nodes' answers are unaffected by who else was up (payload-
+    # deterministic recovery PRNG)
+    ref = _by_node(full["slot_output"])
+    for n in served:
+        np.testing.assert_array_equal(served[n], ref[n])
+
+
+def test_fleet_serve_step_alive_requires_queue_mode(setup):
+    from repro.serving import fleet_serve_step
+    from repro.sharding import make_mesh_compat
+
+    key, params, gen, wins, labels, wire = setup
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="queue-mode argument"):
+        fleet_serve_step(wins[:4], host_params=params, har_cfg=HAR,
+                         mesh=mesh, key=key,
+                         alive=jnp.ones((4,), bool))
