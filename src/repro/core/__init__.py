@@ -14,9 +14,10 @@ from .recovery import (  # noqa: F401
 )
 from .memo import pearson, signature_correlations, memo_decision, MemoResult  # noqa: F401
 from .energy import (  # noqa: F401
-    EnergyCosts, TABLE2_COSTS, harvest_trace, EH_SOURCES,
+    EnergyCosts, TABLE2_COSTS, D5_RAW, harvest_trace, EH_SOURCES,
     fleet_source_assignment, fleet_harvest_traces, supercap_step,
-    fleet_phase_offsets, fleet_alive_traces,
+    supercap_step_direct, SUPERCAP_CAP_UJ, SUPERCAP_CHARGE_EFF,
+    BrownoutConfig, fleet_phase_offsets, fleet_alive_traces,
     PredictorState, predictor_init, predictor_update, predictor_forecast,
 )
 from .aac import AACTable, make_aac_table, select_k  # noqa: F401

@@ -44,32 +44,43 @@ class DecisionOutcome(NamedTuple):
 
 
 def decision_energy(costs: EnergyCosts) -> jnp.ndarray:
-    """(6,) µJ cost vector indexed by decision code (DEFER costs only sensing)."""
-    return jnp.asarray([
-        costs.sense + costs.tx_result,
-        costs.dnn_full + costs.tx_result,
-        costs.dnn16 + costs.tx_result,
-        costs.sense + costs.coreset_cluster + costs.tx_coreset,
-        costs.sense + costs.coreset_sampling + costs.tx_coreset,
-        costs.sense,
-    ], dtype=jnp.float32)
+    """(6,) µJ cost vector indexed by decision code (DEFER costs only
+    sensing).  Derived from :meth:`EnergyCosts.decision_costs` — the same
+    table ``EnergyCosts.total`` reports, so the scheduler's gates and the
+    Table 2 ladder cannot drift apart again."""
+    return jnp.asarray(costs.decision_costs(), dtype=jnp.float32)
 
 
 def choose_decision(max_corr: jnp.ndarray, stored_uj: jnp.ndarray,
                     forecast_uj: jnp.ndarray, costs: EnergyCosts,
                     corr_threshold: float = 0.95,
-                    allow_full_dnn: bool = False) -> DecisionOutcome:
+                    allow_full_dnn: bool = False,
+                    harvested_uj: jnp.ndarray | None = None
+                    ) -> DecisionOutcome:
     """Fig. 8 walk: memo gate -> local DNN if affordable -> cluster coreset ->
     sampling coreset -> defer.
 
     ``allow_full_dnn`` mirrors the paper's deployment choice: the EH node
     normally runs only the quantized DNNs (D2); D1 exists for the fully
     powered baselines.
+
+    ``harvested_uj`` switches on STRICT energy accounting (store-and-execute,
+    paper §2): a decision must be payable from ``stored + harvested`` this
+    slot alone — the forecast still ranks options upstream (it drives AAC's
+    ``select_k``) but can no longer mint energy the node never harvested.
+    The memo gate is energy-gated too (a hit the node cannot transmit is not
+    a hit), and when not even DEFER's sensing cost is payable the spend
+    clamps to zero — the state the fleet engines' brown-out lane turns into
+    endogenous churn.  Without ``harvested_uj`` the legacy forecast-budget
+    walk is bitwise unchanged.
     """
-    budget = stored_uj + forecast_uj
+    strict = harvested_uj is not None
+    budget = stored_uj + (harvested_uj if strict else forecast_uj)
     cost = decision_energy(costs)
 
     memo_hit = max_corr >= corr_threshold
+    if strict:
+        memo_hit = jnp.logical_and(memo_hit, budget >= cost[D0_MEMO])
     can_full = budget >= cost[D1_DNN_FULL]
     can_quant = budget >= cost[D2_DNN_QUANT]
     can_cluster = budget >= cost[D3_CLUSTER]
@@ -86,4 +97,8 @@ def choose_decision(max_corr: jnp.ndarray, stored_uj: jnp.ndarray,
     local = jnp.where(can_dnn, dnn_choice, offload)
     decision = jnp.where(memo_hit, D0_MEMO, local).astype(jnp.int32)
     spend = cost[decision]
+    if strict:
+        # every non-DEFER choice is gated affordable above; this clamp only
+        # bites DEFER when the node cannot even pay for sensing
+        spend = jnp.where(budget >= spend, spend, jnp.zeros_like(spend))
     return DecisionOutcome(decision=decision, spend=spend)

@@ -30,12 +30,20 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "EnergyCosts", "TABLE2_COSTS", "harvest_trace", "EH_SOURCES",
+    "EnergyCosts", "TABLE2_COSTS", "D5_RAW", "harvest_trace", "EH_SOURCES",
     "fleet_source_assignment", "fleet_harvest_traces", "supercap_step",
-    "fleet_phase_offsets", "fleet_alive_traces",
+    "supercap_step_direct", "SUPERCAP_CAP_UJ", "SUPERCAP_CHARGE_EFF",
+    "BrownoutConfig", "fleet_phase_offsets", "fleet_alive_traces",
     "PredictorState", "predictor_init", "predictor_update",
     "predictor_forecast",
 ]
+
+
+# Table 2's sixth row is the raw-transmission BASELINE, not a scheduler
+# decision: ``EnergyCosts.total(D5_RAW)`` is the 70.16 µJ raw offload, while
+# decision *code* 5 is ``repro.core.decision.DEFER`` (sensing only).  The two
+# tables used to disagree silently; keep the indices distinct by name.
+D5_RAW = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,16 +69,33 @@ class EnergyCosts:
     tx_coreset: float = 15.97
     tx_raw: float = 70.16
 
-    def total(self, decision: int) -> float:
-        """Total µJ of paper Table 2 rows D0..D4 (+5 = raw offload)."""
-        return [
-            self.sense + self.tx_result,                      # D0 memoize
-            self.dnn_full + self.tx_result,                   # D1 full DNN
-            self.dnn16 + self.tx_result,                      # D2 quantized DNN
-            self.coreset_cluster + self.tx_coreset,           # D3 cluster coreset
-            self.coreset_sampling + self.tx_coreset,          # D4 sampling coreset
-            self.tx_raw,                                      # raw offload
-        ][decision]
+    def decision_costs(self) -> tuple[float, ...]:
+        """(6,) µJ per DECISION code D0..D4 + DEFER — the single cost table.
+
+        Both :meth:`total` (Table 2 row totals) and
+        :func:`repro.core.decision.decision_energy` derive from this tuple,
+        so the scheduler's affordability gates and the reported Table 2
+        ladder can no longer disagree (they used to: ``total`` dropped
+        ``sense`` from the D3/D4 rows).
+        """
+        return (
+            self.sense + self.tx_result,                        # D0 memoize
+            self.dnn_full + self.tx_result,                     # D1 full DNN
+            self.dnn16 + self.tx_result,                        # D2 quantized
+            self.sense + self.coreset_cluster + self.tx_coreset,   # D3
+            self.sense + self.coreset_sampling + self.tx_coreset,  # D4
+            self.sense,                                         # DEFER
+        )
+
+    def total(self, row: int) -> float:
+        """Total µJ of paper Table 2 rows: 0..4 = D0..D4 (identical to the
+        decision ladder), row :data:`D5_RAW` = raw offload.
+
+        Row 5 here is the raw-transmission baseline — NOT decision code 5
+        (``repro.core.decision.DEFER``); DEFER's sensing-only cost is
+        ``decision_costs()[DEFER]``.
+        """
+        return (self.decision_costs()[:5] + (self.tx_raw,))[row]
 
 
 TABLE2_COSTS = EnergyCosts()
@@ -209,11 +234,69 @@ def fleet_alive_traces(key: jax.Array, n_nodes: int, n_slots: int, *,
 # Supercap storage
 # ---------------------------------------------------------------------------
 
+SUPERCAP_CAP_UJ = 200.0       # hard storage capacity
+SUPERCAP_CHARGE_EFF = 0.8     # charging inefficiency on energy that is stored
+
+
 def supercap_step(stored_uj: jnp.ndarray, harvested_uj: jnp.ndarray,
-                  spent_uj: jnp.ndarray, cap_uj: float = 200.0,
-                  charge_eff: float = 0.8) -> jnp.ndarray:
-    """One storage update: lossy charging, hard capacity, floor at 0."""
+                  spent_uj: jnp.ndarray, cap_uj: float = SUPERCAP_CAP_UJ,
+                  charge_eff: float = SUPERCAP_CHARGE_EFF) -> jnp.ndarray:
+    """One storage update: lossy charging, hard capacity, floor at 0.
+
+    NOTE: the zero floor silently forgives debt — a caller that spends more
+    than ``stored + charge_eff * harvested`` executes on energy that never
+    existed.  The legacy decision ladder does exactly that (it budgets
+    against the *forecast*); :func:`supercap_step_direct` plus the strict
+    mode of :func:`repro.core.decision.choose_decision` is the debt-free
+    accounting the brown-out lane uses.
+    """
     return jnp.clip(stored_uj + charge_eff * harvested_uj - spent_uj, 0.0, cap_uj)
+
+
+def supercap_step_direct(stored_uj: jnp.ndarray, harvested_uj: jnp.ndarray,
+                         spent_uj: jnp.ndarray,
+                         cap_uj: float = SUPERCAP_CAP_UJ,
+                         charge_eff: float = SUPERCAP_CHARGE_EFF
+                         ) -> jnp.ndarray:
+    """Store-and-execute storage update (paper §2's ERR: harvested energy is
+    "used directly ... rather than stored").
+
+    Energy spent in the slot it was harvested bypasses the charging loss;
+    only the *surplus* pays ``charge_eff`` on its way into the supercap, and
+    any deficit draws on ``stored``.  Whenever the caller keeps
+    ``spent <= stored + harvested`` (the strict decision mode guarantees
+    it), the zero floor never engages — debt cannot be clip-forgiven.
+    """
+    direct = jnp.minimum(spent_uj, harvested_uj)
+    return jnp.clip(stored_uj + charge_eff * (harvested_uj - direct)
+                    - (spent_uj - direct), 0.0, cap_uj)
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutConfig:
+    """Supercapacitor brown-out hysteresis (µJ) — endogenous churn.
+
+    A node whose post-slot charge falls below ``off_uj`` browns out: its MCU
+    powers down, the whole node carry (predictor, AAC continuity, PRNG
+    stream) freezes, and it emits DEFER with a zero payload.  The harvester
+    keeps trickle-charging the supercap while the node is down; once the
+    charge recovers to at least ``restart_uj`` the node reboots into its
+    frozen state.  ``off_uj < restart_uj`` is the hysteresis band that stops
+    a node on the threshold from oscillating every slot (Gobieski et al.,
+    arXiv:1810.07751; Islam et al., arXiv:2503.06663).
+
+    Frozen + hashable so the fleet engines can key their compile caches on
+    it like the cost table.
+    """
+
+    off_uj: float = 5.0
+    restart_uj: float = 25.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.off_uj <= self.restart_uj:
+            raise ValueError(
+                f"BrownoutConfig needs 0 <= off_uj <= restart_uj, got "
+                f"off_uj={self.off_uj}, restart_uj={self.restart_uj}")
 
 
 # ---------------------------------------------------------------------------

@@ -10,5 +10,5 @@ from .edge_host import (  # noqa: F401
 )
 from .fleet import (  # noqa: F401
     fleet_node_init, seeker_fleet_simulate, seeker_fleet_simulate_sharded,
-    seeker_fleet_simulate_streamed,
+    seeker_fleet_simulate_streamed, wire_bytes_exact,
 )

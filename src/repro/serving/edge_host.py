@@ -34,8 +34,10 @@ from ..core.coreset import (channel_cluster_coresets, cluster_payload_bytes,
                             raw_payload_bytes, sampling_payload_bytes)
 from ..core.decision import (D0_MEMO, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING,
                              DEFER, choose_decision, decision_energy)
-from ..core.energy import (EnergyCosts, PredictorState, predictor_forecast,
-                           predictor_init, predictor_update, supercap_step)
+from ..core.energy import (BrownoutConfig, EnergyCosts, PredictorState,
+                           predictor_forecast, predictor_init,
+                           predictor_update, supercap_step,
+                           supercap_step_direct)
 from ..core.memo import signature_correlations
 from ..core.recovery import (GeneratorParams, recover_cluster_window,
                              recover_sampling_window)
@@ -104,20 +106,29 @@ def seeker_sensor_step_given_corr(
         harvested_uj: jnp.ndarray, corr: jnp.ndarray, *, qdnn_params: dict,
         har_cfg: HARConfig, aac_table: AACTable | None, costs: EnergyCosts,
         key: jax.Array, k_max: int = 12, m_samples: int = 20,
-        quant_bits: int = 16, corr_threshold: float = 0.95) -> SensorStepOut:
+        quant_bits: int = 16, corr_threshold: float = 0.95,
+        strict_energy: bool = False) -> SensorStepOut:
     """Sensor step with the signature correlations precomputed.
 
     The fleet engine computes ``corr`` for ALL nodes at once through the
     batched :func:`repro.kernels.signature_corr_op` hot path, then vmaps this
     function over nodes; the single-node path computes it per window.
+
+    ``strict_energy`` switches the ladder to store-and-execute accounting:
+    the decision must be payable from ``stored + harvested`` this slot (the
+    forecast still ranks AAC's k but cannot mint energy), and the storage
+    update uses :func:`repro.core.energy.supercap_step_direct` so debt is
+    never clip-forgiven.  ``False`` keeps the legacy path bitwise.
     """
     max_corr = jnp.max(corr)
     memo_label = jnp.argmax(corr).astype(jnp.int32)
 
     predictor = predictor_update(state.predictor, harvested_uj)
     forecast = predictor_forecast(predictor)
-    outcome = choose_decision(max_corr, state.stored_uj, forecast, costs,
-                              corr_threshold=corr_threshold)
+    outcome = choose_decision(
+        max_corr, state.stored_uj, forecast, costs,
+        corr_threshold=corr_threshold,
+        harvested_uj=harvested_uj if strict_energy else None)
     decision = outcome.decision
 
     # --- D2: quantized DNN on-node (executed unconditionally, masked out) ---
@@ -155,7 +166,11 @@ def seeker_sensor_step_given_corr(
     payload = jnp.where(decision == D3_CLUSTER, aac_bytes,
                         bytes_by_decision[decision])
 
-    stored = supercap_step(state.stored_uj, harvested_uj, outcome.spend)
+    if strict_energy:
+        stored = supercap_step_direct(state.stored_uj, harvested_uj,
+                                      outcome.spend)
+    else:
+        stored = supercap_step(state.stored_uj, harvested_uj, outcome.spend)
     label = jnp.where(decision == D0_MEMO, memo_label,
                       jnp.where(decision == D2_DNN_QUANT, dnn_label, -1))
     prev = jnp.where(label >= 0, label, state.prev_label)
@@ -202,7 +217,8 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
                     host_params, gen_params, har_cfg: HARConfig,
                     aac_table: AACTable | None = None,
                     costs: EnergyCosts | None = None, n_sensors: int = 3,
-                    key: jax.Array | None = None, quant_bits: int = 16):
+                    key: jax.Array | None = None, quant_bits: int = 16,
+                    brownout: BrownoutConfig | None = None):
     """Run the full Seeker system over a window stream.
 
     windows (S, T, C); harvest (S,) µJ per slot. The stream is replicated to
@@ -212,6 +228,12 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
     Thin wrapper over :func:`repro.serving.fleet.seeker_fleet_simulate` with
     N = ``n_sensors`` replicated nodes — one fully batched scan instead of the
     per-sensor Python loop of :func:`seeker_simulate_reference`.
+
+    ``brownout`` threads the fleet engine's endogenous brown-out lane
+    through the single-node path: strict store-and-execute affordability and
+    supercap-hysteresis churn (the returned dict gains per-slot ``alive`` /
+    ``brownout`` lanes for sensor 0 plus the ``brownout_slots`` /
+    ``brownout_events`` counters).  ``None`` is the legacy path, bitwise.
     """
     from .fleet import seeker_fleet_simulate
 
@@ -221,7 +243,8 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
         windows, jnp.broadcast_to(harvest[None], (n_sensors, s)),
         signatures=signatures, qdnn_params=qdnn_params,
         host_params=host_params, gen_params=gen_params, har_cfg=har_cfg,
-        aac_table=aac_table, costs=costs, key=key, quant_bits=quant_bits)
+        aac_table=aac_table, costs=costs, key=key, quant_bits=quant_bits,
+        brownout=brownout)
     # sensor ensemble (paper: host ensembles multiple sensors)
     ens_logits = jnp.mean(fleet["logits"], axis=1)           # (S, L)
     preds = jnp.argmax(ens_logits, axis=-1)
@@ -238,6 +261,10 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
         "raw_bytes": float(raw_payload_bytes(t)) * jnp.ones((s,)),
         "stored_uj": fleet["stored_uj"][:, 0],
         "k_trace": fleet["k_trace"][:, 0],
+        "alive": fleet["alive"][:, 0],
+        "brownout": fleet["brownout"][:, 0],
+        "brownout_slots": fleet["brownout_slots"],
+        "brownout_events": fleet["brownout_events"],
     }
 
 
@@ -632,6 +659,7 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
                      key: jax.Array | None = None,
                      host_state=None, serve_cfg=None, gen_params=None,
                      alive: jnp.ndarray | None = None,
+                     engine_alive: jnp.ndarray | None = None,
                      per_shard_host: bool = False):
     """Sharded-fleet edge→host tier: gather ONLY coreset payloads to the host.
 
@@ -675,9 +703,16 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
         host_state: optional :class:`repro.host.server.HostServerState` to
             feed (requires ``serve_cfg`` and ``gen_params``); stacked
             per-shard when ``per_shard_host``.
-        alive: optional (N,) bool — this round's alive mask (queue modes
-            only): dead nodes' payloads never enqueue and transmit no wire
-            bytes.
+        alive: optional (N,) bool — this round's *caller* churn mask (queue
+            modes only): dead nodes' payloads never enqueue and transmit no
+            wire bytes.
+        engine_alive: optional (N,) bool — one slot of the fleet engine's
+            EMITTED alive trace (``res["alive"][t]``), which already folds
+            endogenous brown-outs into the exogenous trace.  Composes with
+            ``alive`` by AND, so the host's per-round mask comes from the
+            simulated physics, not just the caller: a node the engine
+            browned out produces no radio frame either.  Queue modes only,
+            like ``alive``.
 
     Returns dict: ``wire_bytes`` — total quantized payload bytes the alive
     fleet put on the wire, ``raw_bytes`` — the raw-window equivalent (the
@@ -697,14 +732,21 @@ def fleet_serve_step(windows: jnp.ndarray, *, host_params,
     pad = (-n) % quantum
     if pad:
         windows = jnp.pad(windows, ((0, pad), (0, 0), (0, 0)))
+    if engine_alive is not None:
+        engine_alive = jnp.asarray(engine_alive, bool)
+        if engine_alive.shape != (n,):
+            raise ValueError(f"engine_alive must be (N,)=({n},), got "
+                             f"{engine_alive.shape}")
+        alive = engine_alive if alive is None else \
+            jnp.asarray(alive, bool) & engine_alive
     if alive is not None:
         alive = jnp.asarray(alive, bool)
         if alive.shape != (n,):
             raise ValueError(f"alive must be (N,)=({n},), got {alive.shape}")
         if host_state is None:
-            raise ValueError("alive is a queue-mode argument: without a "
-                             "host_state there is no queue to keep dead "
-                             "nodes out of")
+            raise ValueError("alive/engine_alive is a queue-mode argument: "
+                             "without a host_state there is no queue to "
+                             "keep dead nodes out of")
 
     if per_shard_host:
         return _fleet_serve_per_shard(

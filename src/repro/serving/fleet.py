@@ -46,6 +46,22 @@ no re-padding, no re-tracing, no shape change.  Every fleet aggregate
 time-varying alive mask, not just the static padding mask.  An all-True
 ``alive`` is bitwise-identical to not passing one.
 
+**Endogenous brown-out** (``brownout=BrownoutConfig(...)``): churn driven by
+the simulated physics instead of an input array.  The decision ladder
+switches to strict store-and-execute accounting — a decision must be
+payable from ``stored + harvested_this_slot`` alone (the forecast still
+ranks AAC's k but can no longer mint energy, and
+:func:`repro.core.energy.supercap_step_direct` never clip-forgives debt) —
+and the per-slot alive lane becomes ``exogenous_trace ∧ ¬browned_out``,
+where ``browned_out`` lives in the scan carry and flips via supercap
+hysteresis: below ``off_uj`` the node powers down (browned-out slots reuse
+the dead-slot lane above, except the harvester keeps trickle-charging the
+supercap), and at ``restart_uj`` it reboots into its frozen state.  The
+engines emit the resulting ``alive``/``brownout`` (S, N) lanes plus
+``brownout_slots``/``brownout_events`` counters (psum'd in the sharded
+engine; padding nodes are exogenously dead and never brown "in").
+``brownout=None`` keeps today's engines bitwise.
+
 **Streaming** (:func:`seeker_fleet_simulate_streamed`): window streams are
 fed to the scan in ``(chunk,)``-slot segments through the ``state0`` /
 ``node_keys`` resume contract, so peak window memory is O(N·chunk·T·C)
@@ -62,7 +78,8 @@ from jax.sharding import PartitionSpec as P
 from ..core.aac import AACTable
 from ..core.coreset import raw_payload_bytes
 from ..core.decision import DEFER
-from ..core.energy import EnergyCosts, predictor_init
+from ..core.energy import (BrownoutConfig, EnergyCosts, predictor_init,
+                           supercap_step)
 from ..kernels.ops import signature_corr_op
 from ..models.har import HARConfig
 from ..sharding import make_mesh_compat, node_mesh_axes, shard_map_compat
@@ -70,7 +87,8 @@ from .edge_host import (SeekerNodeState, seeker_host_step,
                         seeker_sensor_step_given_corr)
 
 __all__ = ["fleet_node_init", "seeker_fleet_simulate",
-           "seeker_fleet_simulate_sharded", "seeker_fleet_simulate_streamed"]
+           "seeker_fleet_simulate_sharded", "seeker_fleet_simulate_streamed",
+           "wire_bytes_exact"]
 
 N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the fleet histogram
 
@@ -86,7 +104,8 @@ def fleet_node_init(n_nodes: int, predictor_window: int = 8,
 
 def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
-                     shared_stream: bool, t: int, node_block: int | None):
+                     shared_stream: bool, t: int, node_block: int | None,
+                     brownout: BrownoutConfig | None):
     """One fleet time slot, shared VERBATIM by the single-device scan and the
     per-shard scan inside ``shard_map`` — the sharded engine sees exactly this
     computation on its local node tile.
@@ -116,7 +135,8 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                 w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
                 aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
                 m_samples=m_samples, quant_bits=quant_bits,
-                corr_threshold=corr_threshold)
+                corr_threshold=corr_threshold,
+                strict_energy=brownout is not None)
         )(win_t, state, harv_t, corr, ks[:, 1])
         host_logits = jax.vmap(
             lambda o, kk: seeker_host_step(
@@ -130,9 +150,13 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 
     def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
              aac_table):
-        state, keys = carry
+        state, keys, browned = carry
         win_t, harv_t, alive_t = inp
         n = keys.shape[0]
+        # the per-slot alive lane: the exogenous trace composed with the
+        # endogenous brown-out flag carried through the scan — a node runs
+        # only when its trace says so AND its supercap hysteresis allows
+        alive_eff = (alive_t & ~browned) if brownout is not None else alive_t
         if shared_stream:
             win_t = jnp.broadcast_to(win_t[None], (n,) + win_t.shape)
 
@@ -171,19 +195,39 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
         # with zero payload.  With an all-True trace every select picks the
         # freshly-computed value, so the churn-free run is bitwise unchanged.
         def keep(new, old):
-            a = alive_t.reshape((n,) + (1,) * (new.ndim - 1))
+            a = alive_eff.reshape((n,) + (1,) * (new.ndim - 1))
             return jnp.where(a, new, old)
 
         new_state = jax.tree_util.tree_map(keep, new_state, state)
         new_keys = keep(new_keys, keys)
+        if brownout is not None:
+            # --- endogenous brown-out: the MCU is down but the harvester
+            # keeps trickle-charging the supercap, so a browned-out (yet
+            # exogenously-present) node's charge still integrates income;
+            # an exogenously-dead node stays fully frozen (PR-4 lane).
+            trickle = supercap_step(state.stored_uj, harv_t, 0.0)
+            stored = jnp.where(alive_eff, new_state.stored_uj,
+                               jnp.where(alive_t, trickle, state.stored_uj))
+            new_state = new_state._replace(stored_uj=stored)
+            # hysteresis on the POST-slot charge: running nodes brown out
+            # below off_uj, browned-out nodes rejoin at restart_uj; the flag
+            # freezes (like everything else) through exogenously-dead slots
+            next_browned = jnp.where(browned, stored < brownout.restart_uj,
+                                     stored < brownout.off_uj)
+            next_browned = jnp.where(alive_t, next_browned, browned)
+        else:
+            next_browned = browned
         trace = {
-            "decision": jnp.where(alive_t, trace["decision"], DEFER),
-            "payload": jnp.where(alive_t, trace["payload"], 0.0),
-            "stored": jnp.where(alive_t, trace["stored"], state.stored_uj),
-            "k": jnp.where(alive_t, trace["k"], 0),
-            "logits": jnp.where(alive_t[:, None], trace["logits"], 0.0),
+            "decision": jnp.where(alive_eff, trace["decision"], DEFER),
+            "payload": jnp.where(alive_eff, trace["payload"], 0.0),
+            "stored": new_state.stored_uj,
+            "k": jnp.where(alive_eff, trace["k"], 0),
+            "logits": jnp.where(alive_eff[:, None], trace["logits"], 0.0),
+            "alive": alive_eff,          # exogenous ∧ ¬browned_out
+            "brownout": browned,         # the flag the slot was entered with
+            "bo_event": next_browned & ~browned,   # brown-out onsets
         }
-        return (new_state, new_keys), trace
+        return (new_state, new_keys, next_browned), trace
 
     return step
 
@@ -192,7 +236,7 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, node_block: int | None,
-                     donate: bool):
+                     brownout: BrownoutConfig | None, donate: bool):
     """Compile-cached fleet scan, keyed on the static configuration.
 
     All arrays (params, signatures, windows, state) are jit *arguments*, so
@@ -201,19 +245,21 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     re-tracing a fresh closure each call.
     """
 
-    def run(state0, keys0, xs_w, xs_h, xs_alive, signatures, qdnn_params,
-            host_params, gen_params, aac_table):
+    def run(state0, keys0, browned0, xs_w, xs_h, xs_alive, signatures,
+            qdnn_params, host_params, gen_params, aac_table):
         t = xs_w.shape[-2]
         step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
-                                corr_threshold, shared_stream, t, node_block)
-        (state, keys), traces = jax.lax.scan(
+                                corr_threshold, shared_stream, t, node_block,
+                                brownout)
+        (state, keys, browned), traces = jax.lax.scan(
             lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                               gen_params, aac_table),
-            (state0, keys0), (xs_w, xs_h, xs_alive))
-        # the evolved keys are returned so a resumed run (state0=final_state,
-        # node_keys=final_keys) continues each node's PRNG stream instead of
-        # replaying segment 1's randomness
-        return traces, state, keys
+            (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
+        # the evolved keys (and the brown-out flag) are returned so a resumed
+        # run (state0=final_state, node_keys=final_keys,
+        # brownout_state0=final_brownout) continues each node's PRNG stream
+        # and hysteresis state instead of replaying segment 1's
+        return traces, state, keys, browned
 
     # donate the stacked node state (it is returned, so XLA can alias it)
     return jax.jit(run, donate_argnums=(0,) if donate else ())
@@ -225,7 +271,8 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                              quant_bits: int, k_max: int, m_samples: int,
                              corr_threshold: float, shared_stream: bool,
                              per_node_labels: bool,
-                             node_block: int | None, donate: bool):
+                             node_block: int | None,
+                             brownout: BrownoutConfig | None, donate: bool):
     """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
     ``shard_map`` manual region, each shard scanning its local node tile;
     only the masked fleet aggregates are ``psum``-ed over ``axis_names``.
@@ -237,25 +284,29 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
     time_nodes = P(None, axis_names)         # (S, N, ...) time-major traces
     repl = P()                               # replicated (params, bank, mask)
 
-    def shard_body(state0, keys0, xs_w, xs_h, xs_alive, mask, labels,
-                   signatures, qdnn_params, host_params, gen_params,
+    def shard_body(state0, keys0, browned0, xs_w, xs_h, xs_alive, mask,
+                   labels, signatures, qdnn_params, host_params, gen_params,
                    aac_table):
         t = xs_w.shape[-2]
         step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
-                                corr_threshold, shared_stream, t, node_block)
-        (state, keys), traces = jax.lax.scan(
+                                corr_threshold, shared_stream, t, node_block,
+                                brownout)
+        (state, keys, browned), traces = jax.lax.scan(
             lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                               gen_params, aac_table),
-            (state0, keys0), (xs_w, xs_h, xs_alive))
+            (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
 
         # --- fleet-level aggregates: the ONLY cross-shard traffic ----------
-        # the time-varying churn mask composes with the static padding mask:
-        # inert padding nodes AND dead slots contribute nothing — a browned-
-        # out node's forced DEFER is absence, not a scheduling decision
-        act = xs_alive & mask[None, :]                      # (S, n_local)
+        # the engine's EMITTED alive lane (exogenous trace ∧ ¬browned_out)
+        # composes with the static padding mask: inert padding nodes, dead
+        # slots and browned-out slots contribute nothing — a node that could
+        # not run made no scheduling decision
+        act = traces["alive"] & mask[None, :]               # (S, n_local)
         sent = (traces["decision"] != DEFER) & act
         bytes_on_wire = jax.lax.psum(
             jnp.sum(jnp.where(act, traces["payload"], 0.0)), axis_names)
+        wire_pair = jax.lax.psum(
+            _wire_byte_pair(traces["payload"], act), axis_names)
         hist = jax.lax.psum(
             jnp.sum(jax.nn.one_hot(traces["decision"], N_DECISIONS,
                                    dtype=jnp.int32)
@@ -264,6 +315,16 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
         completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
         alive_slots = jax.lax.psum(jnp.sum(act.astype(jnp.int32)),
                                    axis_names)
+        # brown-out realism pair: slots suppressed by the hysteresis (the
+        # node was exogenously present but its supercap said no) and onset
+        # events — padding nodes are exogenously dead, so they never brown
+        # "in" and contribute to neither count
+        bo_slots = jax.lax.psum(jnp.sum(
+            (traces["brownout"] & xs_alive & mask[None, :]
+             ).astype(jnp.int32)), axis_names)
+        bo_events = jax.lax.psum(jnp.sum(
+            (traces["bo_event"] & mask[None, :]).astype(jnp.int32)),
+            axis_names)
         preds = jnp.argmax(traces["logits"], axis=-1)       # (S, n_local)
         # per-node labels arrive as the shard's own (S, n_local) tile;
         # a shared track is replicated and broadcast over the node axis
@@ -271,21 +332,23 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
             (preds == labels[:, None])
         correct = jax.lax.psum(
             jnp.sum((ok & sent).astype(jnp.int32)), axis_names)
-        aggs = {"bytes_on_wire": bytes_on_wire, "decision_histogram": hist,
+        aggs = {"bytes_on_wire": bytes_on_wire,
+                "bytes_on_wire_i32": wire_pair, "decision_histogram": hist,
                 "completed": completed, "alive_slots": alive_slots,
+                "brownout_slots": bo_slots, "brownout_events": bo_events,
                 "correct": correct}
-        return traces, state, keys, aggs
+        return traces, state, keys, browned, aggs
 
     fn = shard_map_compat(
         shard_body, mesh,
-        in_specs=(nodes, nodes,                     # state0 (pytree), keys0
+        in_specs=(nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
                   repl if shared_stream else time_nodes,   # xs_w
                   time_nodes,                       # xs_h (S, N)
                   time_nodes,                       # xs_alive (S, N)
                   nodes,                            # mask (N,)
                   time_nodes if per_node_labels else repl,  # labels
                   repl, repl, repl, repl, repl),
-        out_specs=(time_nodes, nodes, nodes, repl),
+        out_specs=(time_nodes, nodes, nodes, nodes, repl),
         axis_names=frozenset(axis_names))
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
@@ -349,19 +412,77 @@ def _resolve_alive(alive, n: int, s: int) -> jnp.ndarray:
     return alive.astype(bool)
 
 
-def _fleet_aggregates(traces: dict, act: jnp.ndarray,
+def _wire_byte_pair(payload: jnp.ndarray, act: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer bytes-on-wire as a (2,) int32 ``[hi, lo]`` pair with
+    value ``hi * 2**16 + lo``.
+
+    Payloads are integral whole-byte counts (``aac_bytes``,
+    ``sampling_payload_bytes``), but the legacy ``bytes_on_wire`` float32
+    sum loses exactness past 2**24 at fleet scale.  int64 is unavailable
+    with jax's default x64-off config, so the reduction goes hierarchical:
+    per-node slot totals stay exact in int32 (payload < 2**16 B per slot,
+    so any S < 2**31 / 2**16 ≈ 32k-slot-of-max-payload per node — in
+    practice S < ~3M slots at the 720-B raw bound), then the node reduction
+    splits each total into base-2**16 digits whose int32 sums (and psums)
+    stay exact to N < 32768 nodes.  The pair is not normalized (``lo`` may
+    exceed 2**16); combine with :func:`wire_bytes_exact`.
+    """
+    p = jnp.where(act, jnp.round(payload).astype(jnp.int32), 0)
+    per_node = jnp.sum(p, axis=0)                         # (N,) int32
+    return jnp.stack([jnp.sum(per_node >> 16),
+                      jnp.sum(per_node & 0xFFFF)]).astype(jnp.int32)
+
+
+def wire_bytes_exact(res: dict) -> int:
+    """Combine an engine result's ``bytes_on_wire_i32`` pair into the exact
+    total bytes the fleet put on the wire, as an arbitrary-precision Python
+    int (the float32 ``bytes_on_wire`` is kept for compatibility but is
+    only approximate past 2**24)."""
+    import numpy as np
+
+    hi, lo = (int(v) for v in np.asarray(res["bytes_on_wire_i32"]))
+    return (hi << 16) + lo
+
+
+def _resolve_brownout0(brownout_state0, state0: SeekerNodeState,
+                       brownout: BrownoutConfig | None, n: int
+                       ) -> jnp.ndarray:
+    """(N,) bool brown-out flag entering slot 0: an explicitly resumed flag
+    (a previous run's ``final_brownout``), else boot-time hysteresis (a node
+    whose initial charge is already under ``off_uj`` boots browned out),
+    else the inert all-False lane when brown-out is disabled."""
+    if brownout_state0 is not None:
+        browned0 = jnp.asarray(brownout_state0)
+        if browned0.shape != (n,):
+            raise ValueError(f"brownout_state0 must be (N,)=({n},) bool, "
+                             f"got {browned0.shape}")
+        return browned0.astype(bool)
+    if brownout is not None:
+        return state0.stored_uj[:n] < brownout.off_uj
+    return jnp.zeros((n,), bool)
+
+
+def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
                       labels: jnp.ndarray | None, per_node: bool) -> dict:
     """Masked fleet aggregates from (S, N) traces — the single-device
     mirror of the sharded engine's psum'd quantities (int counters are
-    exactly equal across engines; tests cross-check them)."""
+    exactly equal across engines; tests cross-check them).  The activity
+    mask is the engine's EMITTED alive lane (exogenous ∧ ¬browned_out);
+    ``exo_alive`` is the exogenous trace alone, needed to count the slots
+    the brown-out hysteresis suppressed."""
+    act = traces["alive"]
     sent = (traces["decision"] != DEFER) & act
     aggs = {
         "bytes_on_wire": jnp.sum(jnp.where(act, traces["payload"], 0.0)),
+        "bytes_on_wire_i32": _wire_byte_pair(traces["payload"], act),
         "decision_histogram": jnp.sum(
             jax.nn.one_hot(traces["decision"], N_DECISIONS, dtype=jnp.int32)
             * act[..., None].astype(jnp.int32), axis=(0, 1)),
         "completed": jnp.sum(sent.astype(jnp.int32)),
         "alive_slots": jnp.sum(act.astype(jnp.int32)),
+        "brownout_slots": jnp.sum(
+            (traces["brownout"] & exo_alive).astype(jnp.int32)),
+        "brownout_events": jnp.sum(traces["bo_event"].astype(jnp.int32)),
     }
     if labels is not None:
         preds = jnp.argmax(traces["logits"], axis=-1)
@@ -383,6 +504,8 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           node_keys: jax.Array | None = None,
                           labels: jnp.ndarray | None = None,
                           alive: jnp.ndarray | None = None,
+                          brownout: BrownoutConfig | None = None,
+                          brownout_state0: jnp.ndarray | None = None,
                           node_block: int | None = None,
                           donate: bool = True):
     """Simulate N independent Seeker nodes over S time slots in one scan.
@@ -414,6 +537,18 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
             freeze the node (state AND PRNG stream), emit DEFER with zero
             payload, and drop out of every aggregate.  An all-True trace is
             bitwise-identical to ``None``.
+        brownout: optional :class:`repro.core.energy.BrownoutConfig` —
+            ENDOGENOUS churn: the decision ladder switches to strict
+            store-and-execute affordability (spend ≤ stored + harvested this
+            slot; the forecast ranks but no longer mints energy), and the
+            per-slot alive lane becomes ``alive_trace ∧ ¬browned_out`` with
+            ``browned_out`` carried through the scan and flipped by the
+            supercap hysteresis (below ``off_uj`` the node powers down and
+            trickle-charges; at ``restart_uj`` it reboots into its frozen
+            state).  ``None`` keeps today's engine bitwise.
+        brownout_state0: optional (N,) bool — resume the brown-out flag from
+            a previous run's ``final_brownout`` (the streamed driver does);
+            default is boot-time hysteresis on the initial charge.
         node_block: run per-slot fleet math in fixed-size node microbatches
             (see :func:`_make_fleet_step`) — results become bit-identical
             across fleet sizes and shard layouts that use the same block.
@@ -425,9 +560,16 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
     Returns a dict of per-node traces, time-major:
         ``decisions``/``payload_bytes``/``stored_uj``/``k_trace``: (S, N),
         ``logits``/``preds``: (S, N, L) / (S, N),
-        ``bytes_on_wire``: () total payload bytes the fleet transmitted,
+        ``alive``/``brownout``: (S, N) bool — the EMITTED per-slot alive
+            lane (exogenous ∧ ¬browned_out) and the brown-out flag each
+            slot was entered with,
+        ``bytes_on_wire``: () total payload bytes the fleet transmitted
+            (float32; ``bytes_on_wire_i32`` is the exact (2,) int32
+            [hi, lo] pair — combine with :func:`wire_bytes_exact`),
         ``decision_histogram``: (N_DECISIONS,) int32 counts over alive slots,
         ``completed``/``alive_slots``: () int32, ``completed_frac``: (),
+        ``brownout_slots``/``brownout_events``: () int32 — slots suppressed
+            by the hysteresis and brown-out onsets,
         ``fleet_accuracy``/``correct``: () when ``labels`` is given,
         ``raw_bytes_per_window``: () the uncompressed (T, C) baseline per
             window (all channels, the benchmarks' raw-equivalent convention),
@@ -451,11 +593,12 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
     state0 = _stack_pad_state(state0, n, 0, predictor_window, initial_uj)
     keys0 = (node_keys if node_keys is not None else
              jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n)))
+    browned0 = _resolve_brownout0(brownout_state0, state0, brownout, n)
     run_fn = _build_fleet_run(har_cfg, costs, quant_bits, k_max, m_samples,
                               corr_threshold, shared_stream, node_block,
-                              donate)
-    traces, final_state, final_keys = run_fn(
-        state0, keys0, xs_windows, harvest.T, alive_t, signatures,
+                              brownout, donate)
+    traces, final_state, final_keys, final_brownout = run_fn(
+        state0, keys0, browned0, xs_windows, harvest.T, alive_t, signatures,
         qdnn_params, host_params, gen_params, aac_table)
 
     aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels)
@@ -466,16 +609,22 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         "k_trace": traces["k"],                               # (S, N)
         "logits": traces["logits"],                           # (S, N, L)
         "preds": jnp.argmax(traces["logits"], axis=-1),       # (S, N)
+        "alive": traces["alive"],                             # (S, N)
+        "brownout": traces["brownout"],                       # (S, N)
         "bytes_on_wire": aggs["bytes_on_wire"],
+        "bytes_on_wire_i32": aggs["bytes_on_wire_i32"],
         "decision_histogram": aggs["decision_histogram"],
         "completed": aggs["completed"],
         "alive_slots": aggs["alive_slots"],
+        "brownout_slots": aggs["brownout_slots"],
+        "brownout_events": aggs["brownout_events"],
         "completed_frac": aggs["completed"]
             / jnp.maximum(aggs["alive_slots"], 1),
         "raw_bytes_per_window": jnp.asarray(
             float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
         "final_state": final_state,
         "final_keys": final_keys,
+        "final_brownout": final_brownout,
     }
     if labels is not None:
         out["correct"] = aggs["correct"]
@@ -497,6 +646,8 @@ def seeker_fleet_simulate_sharded(
         node_keys: jax.Array | None = None,
         labels: jnp.ndarray | None = None,
         alive: jnp.ndarray | None = None,
+        brownout: BrownoutConfig | None = None,
+        brownout_state0: jnp.ndarray | None = None,
         node_block: int | None = None, donate: bool = True):
     """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
 
@@ -525,12 +676,20 @@ def seeker_fleet_simulate_sharded(
             (S,) track with per-node window streams raises.
         alive: optional (N, S) bool churn trace — sharded over the node
             axes; padding nodes are permanently dead.
+        brownout: optional :class:`repro.core.energy.BrownoutConfig` — the
+            endogenous brown-out lane (see :func:`seeker_fleet_simulate`).
+            The flag lives in each shard's local carry; ``brownout_slots``
+            and ``brownout_events`` join the psum'd aggregate set.  Padding
+            nodes are exogenously dead, so their flag stays frozen — they
+            never brown "in" and never count.
 
     Extra returns: ``decision_histogram`` (N_DECISIONS,) int32 fleet-wide
     decision counts over alive slots, ``completed``/``alive_slots`` () int32,
-    ``completed_frac`` (), ``fleet_accuracy``/``correct`` () when ``labels``
-    is given, ``padded_nodes`` (python int), ``node_axes`` (python tuple of
-    mesh axis names).
+    ``brownout_slots``/``brownout_events`` () int32 (psum'd, exactly equal
+    to the single-device engine's), ``bytes_on_wire_i32`` (2,) int32 exact
+    byte pair, ``completed_frac`` (), ``fleet_accuracy``/``correct`` () when
+    ``labels`` is given, ``padded_nodes`` (python int), ``node_axes``
+    (python tuple of mesh axis names).
     """
     costs = costs or EnergyCosts()
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -575,12 +734,19 @@ def seeker_fleet_simulate_sharded(
     else:
         labels_arr = labels
 
+    # brown-out flag, padding nodes forced awake: they are exogenously dead
+    # (frozen flag), so they can never brown "in" nor trickle back out
+    browned0 = jnp.pad(
+        _resolve_brownout0(brownout_state0, state_full, brownout, n),
+        (0, pad))
     run_fn = _build_fleet_run_sharded(
         mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
-        corr_threshold, shared_stream, per_node_labels, node_block, donate)
-    traces, final_state, final_keys, aggs = run_fn(
-        state_full, keys0, xs_windows, harvest_t, alive_t, mask, labels_arr,
-        signatures, qdnn_params, host_params, gen_params, aac_table)
+        corr_threshold, shared_stream, per_node_labels, node_block,
+        brownout, donate)
+    traces, final_state, final_keys, final_brownout, aggs = run_fn(
+        state_full, keys0, browned0, xs_windows, harvest_t, alive_t, mask,
+        labels_arr, signatures, qdnn_params, host_params, gen_params,
+        aac_table)
 
     out = {
         "decisions": traces["decision"][:, :n],               # (S, N)
@@ -589,16 +755,22 @@ def seeker_fleet_simulate_sharded(
         "k_trace": traces["k"][:, :n],                        # (S, N)
         "logits": traces["logits"][:, :n],                    # (S, N, L)
         "preds": jnp.argmax(traces["logits"][:, :n], axis=-1),
+        "alive": traces["alive"][:, :n],                      # (S, N)
+        "brownout": traces["brownout"][:, :n],                # (S, N)
         "bytes_on_wire": aggs["bytes_on_wire"],
+        "bytes_on_wire_i32": aggs["bytes_on_wire_i32"],
         "decision_histogram": aggs["decision_histogram"],
         "completed": aggs["completed"],
         "alive_slots": aggs["alive_slots"],
+        "brownout_slots": aggs["brownout_slots"],
+        "brownout_events": aggs["brownout_events"],
         "completed_frac": aggs["completed"]
             / jnp.maximum(aggs["alive_slots"], 1),
         "raw_bytes_per_window": jnp.asarray(
             float(raw_payload_bytes(t)) * windows.shape[-1], jnp.float32),
         "final_state": jax.tree_util.tree_map(lambda a: a[:n], final_state),
         "final_keys": final_keys[:n],
+        "final_brownout": final_brownout[:n],
         "padded_nodes": pad,
         "node_axes": axis_names,
     }
@@ -622,6 +794,8 @@ def seeker_fleet_simulate_streamed(
         node_keys: jax.Array | None = None,
         labels: jnp.ndarray | None = None,
         alive: jnp.ndarray | None = None,
+        brownout: BrownoutConfig | None = None,
+        brownout_state0: jnp.ndarray | None = None,
         node_block: int | None = None, donate: bool = True):
     """Feed the fleet scan in ``chunk``-slot window segments instead of
     materializing the whole (N, S, T, C) stream up front.
@@ -643,16 +817,25 @@ def seeker_fleet_simulate_streamed(
             the point of streaming: only one chunk of windows ever exists.
         chunk: slots per segment (the last segment may be shorter).
         mesh: run segments through :func:`seeker_fleet_simulate_sharded`.
+        brownout: endogenous brown-out config — the flag rides the
+            ``state0``/``node_keys`` resume contract bitwise: each segment
+            resumes from the previous segment's ``final_brownout``.
 
     Returns the engine dict with traces concatenated over time, counter
     aggregates (``decision_histogram``, ``completed``, ``alive_slots``,
-    ``correct``) summed exactly, float aggregates (``bytes_on_wire``)
-    summed per segment, and ``completed_frac``/``fleet_accuracy``
-    recomputed from the summed counters; plus ``n_chunks``.
+    ``brownout_slots``, ``brownout_events``, ``correct``, the
+    ``bytes_on_wire_i32`` exact pair) summed exactly, float aggregates
+    (``bytes_on_wire``) summed per segment, and
+    ``completed_frac``/``fleet_accuracy`` recomputed from the summed
+    counters; plus ``n_chunks``.
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     n, s = harvest.shape
+    if s < 1:
+        raise ValueError(
+            f"cannot stream an empty deployment: harvest is (N, S)="
+            f"({n}, {s}) — S must be >= 1 slot")
     if callable(windows):
         window_fn = windows
     else:
@@ -670,13 +853,13 @@ def seeker_fleet_simulate_streamed(
               quant_bits=quant_bits, k_max=k_max, m_samples=m_samples,
               corr_threshold=corr_threshold,
               predictor_window=predictor_window, initial_uj=initial_uj,
-              node_block=node_block, donate=donate)
+              brownout=brownout, node_block=node_block, donate=donate)
     if mesh is not None:
         kw["mesh"] = mesh
     engine = (seeker_fleet_simulate if mesh is None
               else seeker_fleet_simulate_sharded)
 
-    state, keys = state0, node_keys
+    state, keys, browned = state0, node_keys, brownout_state0
     parts: list[dict] = []
     counters: dict = {}
     bytes_on_wire = jnp.zeros((), jnp.float32)
@@ -689,15 +872,27 @@ def seeker_fleet_simulate_streamed(
         if alive_full is not None:
             seg_kw["alive"] = alive_full[:, start:stop]
         res = engine(window_fn(start, stop), harvest[:, start:stop],
-                     state0=state, node_keys=keys, **seg_kw)
+                     state0=state, node_keys=keys, brownout_state0=browned,
+                     **seg_kw)
         state, keys = res["final_state"], res["final_keys"]
+        browned = res["final_brownout"]
         parts.append({k: res[k] for k in
                       ("decisions", "payload_bytes", "stored_uj", "k_trace",
-                       "logits", "preds")})
+                       "logits", "preds", "alive", "brownout")})
         for k in ("decision_histogram", "completed", "alive_slots",
-                  "correct"):
+                  "brownout_slots", "brownout_events", "correct"):
             if k in res:
                 counters[k] = counters.get(k, 0) + res[k]
+        # the exact byte pair needs its carry propagated each segment: a
+        # segment's lo digit is < N * 2**16, so adding it to an ALREADY
+        # NORMALIZED lo (< 2**16) stays exact in int32 for N < 32768 — the
+        # same node bound as the pair itself — while an un-normalized
+        # running lo would overflow after ~2**15/N segments
+        pair = counters.get("bytes_on_wire_i32",
+                            jnp.zeros((2,), jnp.int32)) \
+            + res["bytes_on_wire_i32"]
+        counters["bytes_on_wire_i32"] = jnp.stack(
+            [pair[0] + (pair[1] >> 16), pair[1] & 0xFFFF])
         bytes_on_wire = bytes_on_wire + res["bytes_on_wire"]
 
     out = {k: jnp.concatenate([p[k] for p in parts], axis=0)
@@ -710,6 +905,7 @@ def seeker_fleet_simulate_streamed(
         "raw_bytes_per_window": res["raw_bytes_per_window"],
         "final_state": state,
         "final_keys": keys,
+        "final_brownout": browned,
         "n_chunks": -(-s // chunk),
     })
     if "correct" in counters:

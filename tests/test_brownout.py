@@ -1,0 +1,379 @@
+"""Endogenous brown-out churn + the energy-debt fix (ISSUE 5).
+
+The contracts pinned here (the sharded mirror lives in
+tests/test_fleet_sharded.py's ``_BROWNOUT_CODE`` subprocess snippet):
+
+* strict decision mode: under ANY (stored, harvested, forecast) the chosen
+  decision's spend never exceeds ``stored + harvested`` — the forecast can
+  rank but no longer mint energy;
+* :func:`supercap_step_direct` never clip-forgives debt: while the caller
+  keeps spend within the strict budget the update is exact arithmetic, the
+  zero floor never engages;
+* the engine-level debt invariant: with a ``BrownoutConfig``, no slot's
+  reconstructed spend exceeds the energy actually available that slot, and
+  the stored-µJ trace is the exact store-and-execute recurrence;
+* hysteresis: a node drains below ``off_uj`` → browns out (DEFER, zero
+  payload, frozen PRNG/predictor — bitwise the PR-4 frozen-node lanes),
+  trickle-charges while down, and rejoins at ``restart_uj``;
+* ``brownout=None`` keeps the engine bitwise (the all-lane equality against
+  a run of the unchanged legacy path);
+* the streamed driver carries the brown-out flag through the resume
+  contract bitwise, and rejects S == 0 streams with a clear error;
+* ``bytes_on_wire_i32`` is exact where the float32 ``bytes_on_wire``
+  already is not.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.configs.seeker_har import HAR
+from repro.core import (
+    DEFER, SUPERCAP_CAP_UJ, SUPERCAP_CHARGE_EFF, TABLE2_COSTS,
+    BrownoutConfig, choose_decision, decision_energy, fleet_harvest_traces,
+    supercap_step_direct,
+)
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import (seeker_fleet_simulate,
+                           seeker_fleet_simulate_streamed, wire_bytes_exact)
+from repro.serving.fleet import _wire_byte_pair
+
+S, N = 12, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    sigs = class_signatures()
+    wins, labels = har_stream(key, S)
+    harvest = fleet_harvest_traces(key, N, S)
+    kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+              gen_params=gen, har_cfg=HAR, key=key, donate=False)
+    return key, wins, labels, harvest, kw
+
+
+# ---------------------------------------------------------------------------
+# Decision core: the debt fix
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(stored=st.floats(0, 200), harvested=st.floats(0, 500),
+       forecast=st.floats(0, 500), corr=st.floats(-1, 1))
+def test_strict_spend_never_exceeds_available(stored, harvested, forecast,
+                                              corr):
+    """The acceptance property: in strict mode the spend is payable from
+    stored + harvested alone, for any forecast."""
+    out = choose_decision(jnp.asarray(corr), jnp.asarray(stored),
+                          jnp.asarray(forecast), TABLE2_COSTS,
+                          harvested_uj=jnp.asarray(harvested))
+    assert float(out.spend) <= stored + harvested + 1e-4
+    # spend is either the chosen row's table cost or the zero clamp
+    cost = decision_energy(TABLE2_COSTS)
+    assert float(out.spend) in (float(cost[int(out.decision)]), 0.0)
+
+
+def test_forecast_no_longer_mints_energy():
+    """The bug: an empty supercap plus a rosy forecast used to execute D2
+    on energy that never existed.  Strict mode defers instead."""
+    legacy = choose_decision(jnp.asarray(0.1), jnp.asarray(0.0),
+                             jnp.asarray(1000.0), TABLE2_COSTS)
+    assert int(legacy.decision) != DEFER          # the minting behaviour
+    strict = choose_decision(jnp.asarray(0.1), jnp.asarray(0.0),
+                             jnp.asarray(1000.0), TABLE2_COSTS,
+                             harvested_uj=jnp.asarray(0.0))
+    assert int(strict.decision) == DEFER
+    assert float(strict.spend) == 0.0             # can't even afford sensing
+    # a memo hit the node cannot transmit is not a hit either
+    memo = choose_decision(jnp.asarray(0.99), jnp.asarray(0.0),
+                           jnp.asarray(1000.0), TABLE2_COSTS,
+                           harvested_uj=jnp.asarray(0.0))
+    assert int(memo.decision) == DEFER and float(memo.spend) == 0.0
+
+
+def test_strict_defer_pays_sensing_when_it_can():
+    c = TABLE2_COSTS
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(c.sense + 0.1),
+                          jnp.asarray(0.0), TABLE2_COSTS,
+                          harvested_uj=jnp.asarray(0.0))
+    assert int(out.decision) == DEFER
+    assert float(out.spend) == pytest.approx(c.sense, abs=1e-6)
+
+
+def test_strict_harvest_in_hand_still_spends():
+    """This slot's actual income IS payable — store-and-execute, not
+    store-then-execute: zero stored + a big harvest runs the DNN."""
+    out = choose_decision(jnp.asarray(0.1), jnp.asarray(0.0),
+                          jnp.asarray(0.0), TABLE2_COSTS,
+                          harvested_uj=jnp.asarray(100.0))
+    assert int(out.decision) != DEFER
+
+
+@settings(max_examples=40, deadline=None)
+@given(stored=st.floats(0, 200), harvested=st.floats(0, 500),
+       frac=st.floats(0, 1))
+def test_supercap_direct_never_clips_debt(stored, harvested, frac):
+    """Within the strict budget the update is exact arithmetic — the zero
+    floor (the clip that used to forgive debt) never engages."""
+    spent = frac * (stored + harvested)
+    out = float(supercap_step_direct(jnp.asarray(stored),
+                                     jnp.asarray(harvested),
+                                     jnp.asarray(spent)))
+    direct = min(spent, harvested)
+    exact = (stored + SUPERCAP_CHARGE_EFF * (harvested - direct)
+             - (spent - direct))
+    assert exact >= -1e-3                       # debt impossible by algebra
+    assert out == pytest.approx(min(exact, SUPERCAP_CAP_UJ), abs=1e-3)
+
+
+def test_brownout_config_validates():
+    with pytest.raises(ValueError, match="off_uj"):
+        BrownoutConfig(off_uj=30.0, restart_uj=10.0)
+    with pytest.raises(ValueError, match="off_uj"):
+        BrownoutConfig(off_uj=-1.0, restart_uj=10.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: the endogenous alive lane
+# ---------------------------------------------------------------------------
+
+def test_brownout_none_is_bitwise_legacy(setup):
+    """Acceptance: brownout=None (and alive=None) leaves every output lane
+    bitwise — the emitted alive lane is all-True, the brown-out lane empty,
+    and the exact byte pair agrees with the float sum at this scale."""
+    key, wins, labels, harvest, kw = setup
+    res = seeker_fleet_simulate(wins, harvest, labels=labels, **kw)
+    assert bool(jnp.all(res["alive"]))
+    assert not bool(jnp.any(res["brownout"]))
+    assert int(res["brownout_slots"]) == 0
+    assert int(res["brownout_events"]) == 0
+    assert wire_bytes_exact(res) == int(float(res["bytes_on_wire"]))
+    # legacy keys and values are untouched (spot-check the invariants the
+    # churn suite pins in depth: this run IS the churn-free engine)
+    assert int(res["alive_slots"]) == S * N
+
+
+def _drain_recharge_fixture(setup, *, drought: int):
+    """Node 0 sees zero harvest for ``drought`` slots (drains, browns out),
+    then a fat recharge; other nodes keep their heterogeneous traces."""
+    key, wins, labels, harvest, kw = setup
+    h = np.asarray(harvest).copy()
+    h[0, :drought] = 0.0
+    h[0, drought:] = 60.0
+    return jnp.asarray(h)
+
+
+def test_hysteresis_roundtrip_drain_brownout_recharge_rejoin(setup):
+    """The full hysteresis round-trip on simulated charge: drain below
+    off_uj -> browned-out DEFER slots with trickle-charging -> rejoin past
+    restart_uj -> normal decisions again."""
+    key, wins, labels, harvest, kw = setup
+    cfg = BrownoutConfig(off_uj=10.0, restart_uj=30.0)
+    h = _drain_recharge_fixture(setup, drought=4)
+    res = seeker_fleet_simulate(wins, h, brownout=cfg, initial_uj=20.0, **kw)
+    alive = np.asarray(res["alive"])[:, 0]
+    browned = np.asarray(res["brownout"])[:, 0]
+    stored = np.asarray(res["stored_uj"])[:, 0]
+    dec = np.asarray(res["decisions"])[:, 0]
+
+    # the node actually browned out and actually rejoined
+    assert browned.any() and alive[0] and alive[-1], (browned, alive)
+    off = int(np.flatnonzero(browned)[0])
+    back = int(np.flatnonzero(alive[off:])[0]) + off
+    assert back < S, "fixture never rejoined; retune thresholds"
+    # composition rule: alive == exogenous (all-True here) ∧ ¬browned_out
+    np.testing.assert_array_equal(alive, ~browned)
+    # browned-out slots: DEFER, zero payload/logits, trickle-charged cap
+    assert (dec[off:back] == DEFER).all()
+    assert (np.asarray(res["payload_bytes"])[off:back, 0] == 0).all()
+    assert (np.asarray(res["logits"])[off:back, 0] == 0).all()
+    for t in range(off, back):
+        want = min(stored[t - 1] + SUPERCAP_CHARGE_EFF * float(h[0, t]),
+                   SUPERCAP_CAP_UJ)
+        assert stored[t] == pytest.approx(want, abs=1e-4), t
+    # it rejoined only once the charge cleared the restart threshold
+    assert stored[back - 1] >= cfg.restart_uj
+    # the onset is counted as one event
+    assert int(res["brownout_events"]) >= 1
+    assert int(res["alive_slots"]) + int(res["brownout_slots"]) == S * N
+
+
+def test_browned_out_node_is_bitwise_a_frozen_node(setup):
+    """The frozen lanes of a browned-out node are BITWISE those of an
+    exogenously-frozen node: feed the engine the brown-out run's emitted
+    alive lane as an exogenous trace and the PRNG keys and predictor
+    histories match exactly (only the supercap differs — it trickle-charges
+    while the exogenous freeze holds it)."""
+    key, wins, labels, harvest, kw = setup
+    cfg = BrownoutConfig(off_uj=10.0, restart_uj=30.0)
+    h = _drain_recharge_fixture(setup, drought=4)
+    res = seeker_fleet_simulate(wins, h, brownout=cfg, initial_uj=20.0, **kw)
+    assert bool(jnp.any(res["brownout"])), "fixture must brown out"
+    frozen = seeker_fleet_simulate(
+        wins, h, alive=jnp.asarray(res["alive"]).T, **kw)
+    np.testing.assert_array_equal(np.asarray(res["final_keys"]),
+                                  np.asarray(frozen["final_keys"]))
+    np.testing.assert_array_equal(
+        np.asarray(res["final_state"].predictor.history),
+        np.asarray(frozen["final_state"].predictor.history))
+    np.testing.assert_array_equal(
+        np.asarray(res["final_state"].predictor.pos),
+        np.asarray(frozen["final_state"].predictor.pos))
+
+
+def test_engine_debt_invariant(setup):
+    """Reconstruct every slot's spend from the decision trace: it never
+    exceeds the energy actually available (stored + harvested), and the
+    stored trace is the exact store-and-execute recurrence — no hidden
+    clip ever forgave a debt."""
+    key, wins, labels, harvest, kw = setup
+    cfg = BrownoutConfig(off_uj=5.0, restart_uj=25.0)
+    res = seeker_fleet_simulate(wins, harvest, brownout=cfg, initial_uj=8.0,
+                                **kw)
+    cost = np.asarray(decision_energy(TABLE2_COSTS), np.float64)
+    stored = np.asarray(res["stored_uj"], np.float64)
+    alive = np.asarray(res["alive"])
+    dec = np.asarray(res["decisions"])
+    h = np.asarray(harvest, np.float64).T                    # (S, N)
+    eff, cap = SUPERCAP_CHARGE_EFF, SUPERCAP_CAP_UJ
+    prev = np.full((N,), 8.0)
+    for t in range(S):
+        for i in range(N):
+            avail = prev[i] + h[t, i]
+            if alive[t, i]:
+                spend = cost[dec[t, i]]
+                if dec[t, i] == DEFER and avail < cost[DEFER]:
+                    spend = 0.0
+                assert spend <= avail + 1e-4, (t, i, spend, avail)
+                direct = min(spend, h[t, i])
+                want = prev[i] + eff * (h[t, i] - direct) - (spend - direct)
+                assert want >= -1e-4, (t, i)                 # no debt, ever
+                want = min(want, cap)
+            else:                                            # trickle charge
+                want = min(prev[i] + eff * h[t, i], cap)
+            assert stored[t, i] == pytest.approx(want, abs=1e-3), (t, i)
+            prev[i] = stored[t, i]
+
+
+def test_brownout_composes_with_exogenous_churn(setup):
+    """alive = exogenous ∧ ¬browned_out: an exogenously-dead slot stays
+    fully frozen (no trickle, no flag movement), and the aggregates split
+    exactly along the composition."""
+    key, wins, labels, harvest, kw = setup
+    from repro.core import fleet_alive_traces
+    cfg = BrownoutConfig(off_uj=5.0, restart_uj=25.0)
+    exo = fleet_alive_traces(key, N, S, duty=0.6, period=4)
+    res = seeker_fleet_simulate(wins, harvest, alive=exo, brownout=cfg,
+                                initial_uj=8.0, **kw)
+    a = np.asarray(res["alive"])
+    b = np.asarray(res["brownout"])
+    e = np.asarray(exo).T
+    np.testing.assert_array_equal(a, e & ~b)
+    assert int(res["alive_slots"]) == a.sum()
+    assert int(res["brownout_slots"]) == (b & e).sum()
+    stored = np.asarray(res["stored_uj"])
+    h = np.asarray(harvest).T
+    prev = np.full((N,), 8.0)
+    for t in range(S):
+        frozen = ~e[t]
+        np.testing.assert_array_equal(stored[t][frozen], prev[frozen])
+        prev = stored[t]
+
+
+def test_streamed_brownout_rides_resume_contract(setup):
+    """Acceptance: chunked segments resume the brown-out flag bitwise —
+    traces, counters (brownout_slots exactly), final flag."""
+    key, wins, labels, harvest, kw = setup
+    cfg = BrownoutConfig(off_uj=10.0, restart_uj=30.0)
+    full = seeker_fleet_simulate(wins, harvest, labels=labels, brownout=cfg,
+                                 initial_uj=12.0, **kw)
+    assert bool(jnp.any(full["brownout"])), "fixture must brown out"
+    for chunk in (3, 5, S):
+        stream = seeker_fleet_simulate_streamed(
+            wins, harvest, chunk=chunk, labels=labels, brownout=cfg,
+            initial_uj=12.0, **kw)
+        for k in ("decisions", "payload_bytes", "stored_uj", "logits",
+                  "alive", "brownout"):
+            np.testing.assert_array_equal(
+                np.asarray(stream[k]), np.asarray(full[k]),
+                err_msg=f"{k} (chunk={chunk})")
+        for k in ("brownout_slots", "brownout_events", "completed",
+                  "alive_slots", "correct"):
+            assert int(stream[k]) == int(full[k]), (k, chunk)
+        np.testing.assert_array_equal(np.asarray(stream["final_brownout"]),
+                                      np.asarray(full["final_brownout"]))
+        np.testing.assert_array_equal(np.asarray(stream["final_keys"]),
+                                      np.asarray(full["final_keys"]))
+        assert wire_bytes_exact(stream) == wire_bytes_exact(full)
+
+
+def test_streamed_empty_stream_raises(setup):
+    """S == 0 used to die with ``IndexError: parts[0]``; now it refuses
+    up front like the chunk < 1 check."""
+    key, wins, labels, harvest, kw = setup
+    with pytest.raises(ValueError, match="S must be >= 1"):
+        seeker_fleet_simulate_streamed(wins[:0], harvest[:, :0], chunk=4,
+                                       **kw)
+
+
+def test_brownout_state0_wrong_shape_raises(setup):
+    key, wins, labels, harvest, kw = setup
+    with pytest.raises(ValueError, match="brownout_state0"):
+        seeker_fleet_simulate(wins, harvest,
+                              brownout=BrownoutConfig(),
+                              brownout_state0=jnp.ones((N + 1,), bool), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Exact byte accounting
+# ---------------------------------------------------------------------------
+
+def test_wire_byte_pair_exact_where_float32_is_not():
+    """The satellite bug: float32 loses whole bytes once the running sum
+    passes 2**24 (XLA's pairwise reduction keeps *uniform* payloads exact,
+    so the fixture mixes sizes like a real fleet does: 2**17 slots of
+    300..700-B payloads, ~65.5 MB total)."""
+    import numpy as np
+    vals = 300 + np.arange(1 << 17) % 401
+    payload = jnp.asarray(vals.reshape(-1, 1), jnp.float32)
+    act = jnp.ones(payload.shape, bool)
+    pair = _wire_byte_pair(payload, act)
+    exact = (int(pair[0]) << 16) + int(pair[1])
+    assert exact == int(vals.sum())
+    f32 = float(jnp.sum(payload))
+    assert f32 != exact, "float32 sum unexpectedly exact; grow the fixture"
+
+
+def test_wire_byte_pair_respects_mask():
+    payload = jnp.asarray([[10.0, 3.0], [5.0, 7.0]])
+    act = jnp.asarray([[True, False], [False, True]])
+    pair = _wire_byte_pair(payload, act)
+    assert (int(pair[0]) << 16) + int(pair[1]) == 17
+
+
+def test_streamed_byte_pair_stays_normalized(setup):
+    """The streamed driver propagates the pair's carry each segment (lo
+    stays < 2**16), so long many-segment streams cannot overflow the lo
+    digit the way naive component-wise int32 accumulation would."""
+    key, wins, labels, harvest, kw = setup
+    stream = seeker_fleet_simulate_streamed(wins, harvest, chunk=3, **kw)
+    full = seeker_fleet_simulate(wins, harvest, **kw)
+    hi, lo = (int(v) for v in np.asarray(stream["bytes_on_wire_i32"]))
+    assert 0 <= lo < (1 << 16)
+    assert wire_bytes_exact(stream) == wire_bytes_exact(full)
+
+
+def test_engine_byte_pair_matches_trace(setup):
+    """The engine's pair == the exact integer sum of its own masked payload
+    trace (and the float32 aggregate at this small scale)."""
+    key, wins, labels, harvest, kw = setup
+    from repro.core import fleet_alive_traces
+    alive = fleet_alive_traces(key, N, S, duty=0.7, period=4)
+    res = seeker_fleet_simulate(wins, harvest, alive=alive, **kw)
+    a = np.asarray(res["alive"])
+    want = int(np.asarray(res["payload_bytes"], np.int64)[a].sum())
+    assert wire_bytes_exact(res) == want == int(float(res["bytes_on_wire"]))

@@ -255,6 +255,78 @@ print("OK")
 """
 
 
+_BROWNOUT_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core import BrownoutConfig, fleet_alive_traces, \\
+    fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import (seeker_fleet_simulate,
+                           seeker_fleet_simulate_sharded,
+                           seeker_fleet_simulate_streamed, wire_bytes_exact)
+from repro.sharding import make_mesh_compat
+
+assert jax.device_count() == 8, jax.device_count()
+S, N, BLOCK = 8, 13, 4
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+gen = init_generator(key, HAR.window, HAR.channels)
+sigs = class_signatures()
+wins, labels = har_stream(key, S)
+harvest = fleet_harvest_traces(key, N, S)
+exo = fleet_alive_traces(key, N, S, duty=0.8, period=4)
+cfg = BrownoutConfig(off_uj=8.0, restart_uj=28.0)
+mesh = make_mesh_compat((8,), ("data",))
+kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+          gen_params=gen, har_cfg=HAR, node_block=BLOCK, donate=False,
+          brownout=cfg, initial_uj=10.0, labels=labels, alive=exo)
+
+# --- endogenous brown-out: sharded == single-device bitwise, N=13 pads ----
+ref = seeker_fleet_simulate(wins, harvest, **kw)
+assert bool(jnp.any(ref["brownout"])), "fixture must brown out"
+sh = seeker_fleet_simulate_sharded(wins, harvest, mesh=mesh, **kw)
+assert sh["padded_nodes"] == 3
+for k in ("decisions", "payload_bytes", "stored_uj", "k_trace", "logits",
+          "alive", "brownout"):
+    np.testing.assert_array_equal(np.asarray(sh[k]), np.asarray(ref[k]),
+                                  err_msg=k)
+np.testing.assert_array_equal(np.asarray(sh["final_brownout"]),
+                              np.asarray(ref["final_brownout"]))
+np.testing.assert_array_equal(np.asarray(sh["final_keys"]),
+                              np.asarray(ref["final_keys"]))
+# psum'd realism counters == single-device ints EXACTLY (acceptance), and
+# the padding nodes never browned in (their slots are outside every count)
+for k in ("brownout_slots", "brownout_events", "completed", "alive_slots",
+          "correct"):
+    assert int(sh[k]) == int(ref[k]), (k, int(sh[k]), int(ref[k]))
+a = np.asarray(ref["alive"]); b = np.asarray(ref["brownout"])
+e = np.asarray(exo).T
+np.testing.assert_array_equal(a, e & ~b)          # composition rule
+assert int(sh["alive_slots"]) + int(sh["brownout_slots"]) == e.sum()
+# exact int byte pair: psum'd == single-device == int64 recomputation
+want = int(np.asarray(ref["payload_bytes"], np.int64)[a].sum())
+assert wire_bytes_exact(sh) == wire_bytes_exact(ref) == want
+print("sharded brown-out OK")
+
+# --- streamed sharded: the flag rides the resume contract ------------------
+stream = seeker_fleet_simulate_streamed(wins, harvest, chunk=3, mesh=mesh,
+                                        **kw)
+for k in ("decisions", "stored_uj", "logits", "alive", "brownout"):
+    np.testing.assert_array_equal(np.asarray(stream[k]), np.asarray(sh[k]),
+                                  err_msg="streamed " + k)
+for k in ("brownout_slots", "brownout_events", "completed", "alive_slots"):
+    assert int(stream[k]) == int(sh[k]), k
+np.testing.assert_array_equal(np.asarray(stream["final_brownout"]),
+                              np.asarray(sh["final_brownout"]))
+assert wire_bytes_exact(stream) == wire_bytes_exact(sh)
+print("streamed sharded brown-out OK")
+print("OK")
+"""
+
+
 _PER_SHARD_HOST_CODE = """
 import numpy as np
 import jax, jax.numpy as jnp
@@ -335,6 +407,17 @@ def test_sharded_churn_labels_streaming_8dev():
     label accuracy (psum'd ints exactly equal), the shared-track refusal,
     and streamed == one long sharded run."""
     assert "OK" in _run(_CHURN_CODE, devices=8)
+
+
+@pytest.mark.slow
+def test_sharded_brownout_parity_8dev():
+    """ISSUE 5 acceptance on the mesh: endogenous brown-out churn is bitwise
+    identical single-device vs sharded vs streamed — alive/brownout lanes,
+    the psum'd ``brownout_slots``/``brownout_events`` pair (exact ints), the
+    exogenous∧endogenous composition rule, the padding-never-browns-in
+    guarantee (N=13 on 8 devices), and the exact int32-pair byte counter
+    against an int64 recomputation."""
+    assert "OK" in _run(_BROWNOUT_CODE, devices=8)
 
 
 @pytest.mark.slow

@@ -432,3 +432,37 @@ def test_fleet_serve_step_alive_requires_queue_mode(setup):
         fleet_serve_step(wins[:4], host_params=params, har_cfg=HAR,
                          mesh=mesh, key=key,
                          alive=jnp.ones((4,), bool))
+    with pytest.raises(ValueError, match="queue-mode argument"):
+        fleet_serve_step(wins[:4], host_params=params, har_cfg=HAR,
+                         mesh=mesh, key=key,
+                         engine_alive=jnp.ones((4,), bool))
+
+
+def test_fleet_serve_step_engine_alive_composes(setup):
+    """ISSUE 5: the host's per-round mask comes from the engine's emitted
+    alive trace, not just the caller's — a browned-out node (engine lane)
+    transmits no frame, exactly like an exogenously-dead one, and the two
+    masks compose by AND."""
+    from repro.serving import fleet_serve_step
+    from repro.sharding import make_mesh_compat
+
+    key, params, gen, wins, labels, wire = setup
+    mesh = make_mesh_compat((jax.device_count(),), ("data",))
+    cfg = _cfg(batch_size=4, n_nodes=6, queue_capacity=8)
+    caller = jnp.asarray([True, False, True, True, True, True])
+    engine = jnp.asarray([True, True, True, False, True, True])   # browned
+    out = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                           mesh=mesh, key=key,
+                           host_state=host_server_init(cfg), serve_cfg=cfg,
+                           gen_params=gen, alive=caller,
+                           engine_alive=engine)
+    assert sorted(_by_node(out["slot_output"])) == [0, 2, 4, 5]
+    # identical to handing the composed mask in as `alive`
+    both = fleet_serve_step(wins[:6], host_params=params, har_cfg=HAR,
+                            mesh=mesh, key=key,
+                            host_state=host_server_init(cfg), serve_cfg=cfg,
+                            gen_params=gen, alive=caller & engine)
+    assert out["wire_bytes"] == both["wire_bytes"]
+    a, b = _by_node(out["slot_output"]), _by_node(both["slot_output"])
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n])

@@ -7,8 +7,8 @@ import pytest
 from _prop import given, settings, st
 
 from repro.core import (
-    D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING, DEFER,
-    EnergyCosts, TABLE2_COSTS, choose_decision, decision_energy,
+    D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING, D5_RAW,
+    DEFER, EnergyCosts, TABLE2_COSTS, choose_decision, decision_energy,
     harvest_trace, memo_decision, pearson, predictor_forecast, predictor_init,
     predictor_update, signature_correlations, supercap_step,
 )
@@ -49,6 +49,34 @@ def test_table2_energy_ladder():
     assert e[0] < e[4] < e[3] < e[2] < e[1] < e[5]
     assert e[1] == pytest.approx(37.5, abs=0.01)     # paper row D1
     assert e[5] == pytest.approx(70.16, abs=0.01)    # raw
+
+
+def test_cost_table_single_source_of_truth():
+    """The accounting-disagreement regression (ISSUE 5): ``EnergyCosts.total``
+    and ``decision_energy`` used to differ — ``total`` dropped ``sense`` on
+    the D3/D4 rows, and its index 5 was raw offload while decision code 5 is
+    DEFER.  Both now derive from ``decision_costs()``, with the raw row
+    named ``D5_RAW``."""
+    c = TABLE2_COSTS
+    e = decision_energy(c)
+    # Table-2 rows 0..4 ARE the decision ladder's costs, bit for bit
+    for d in (D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING):
+        assert c.total(d) == pytest.approx(float(e[d]), abs=1e-6), d
+    # the index-5 distinction: DEFER senses only; D5_RAW is the 70.16 µJ
+    # raw-transmission baseline (not a scheduler decision)
+    assert float(e[DEFER]) == pytest.approx(c.sense, abs=1e-6)
+    assert c.total(D5_RAW) == pytest.approx(70.16, abs=0.01)
+    assert D5_RAW == DEFER, "indices collide BY NAME only — keep both names"
+    # the full ladder through the decision vector too (not just total):
+    # DEFER < D0 < D4 < D3 < D2 < D1 < raw
+    assert (float(e[DEFER]) < float(e[D0_MEMO]) < float(e[D4_SAMPLING])
+            < float(e[D3_CLUSTER]) < float(e[D2_DNN_QUANT])
+            < float(e[D1_DNN_FULL]) < c.total(D5_RAW))
+    # D3/D4 include the shared sensing cost (the dropped term)
+    assert c.total(D3_CLUSTER) == pytest.approx(
+        c.sense + c.coreset_cluster + c.tx_coreset, abs=1e-6)
+    assert c.total(D4_SAMPLING) == pytest.approx(
+        c.sense + c.coreset_sampling + c.tx_coreset, abs=1e-6)
 
 
 @settings(max_examples=25, deadline=None)
