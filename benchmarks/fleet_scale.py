@@ -36,11 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.seeker_har import HAR
-from repro.core import (DEFER, EH_SOURCES, BrownoutConfig,
-                        fleet_harvest_traces, fleet_source_assignment)
+from repro.core import (DEFER, EH_SOURCES, BrownoutConfig, D6_PARTIAL,
+                        IntermittentConfig, fleet_harvest_traces,
+                        fleet_source_assignment)
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_stream
-from repro.models.har import har_init
+from repro.models.har import har_aux_init, har_init
 from repro.serving import (seeker_fleet_simulate,
                            seeker_fleet_simulate_sharded,
                            seeker_fleet_simulate_streamed)
@@ -63,6 +64,14 @@ BROWNOUT_SLOTS, QUICK_BROWNOUT_SLOTS = 32, 4
 # 12 µJ, power down under 6 µJ, reboot at 30 µJ
 BROWNOUT_CFG = BrownoutConfig(off_uj=6.0, restart_uj=30.0)
 BROWNOUT_INITIAL_UJ = 12.0
+
+INTERMITTENT_N, QUICK_INTERMITTENT_N = 3000, 300
+INTERMITTENT_SLOTS, QUICK_INTERMITTENT_SLOTS = 32, 8
+# scarce-harvest regime: income scaled so a typical slot affords one or two
+# inference STAGES but almost never a whole ladder decision — the setting
+# where freeze-and-lose DEFER throws work away and staged progress pays
+INTERMITTENT_SCARCITY = 0.04
+INTERMITTENT_CFG = IntermittentConfig(min_exit_stage=1, exit_threshold=0.0)
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -117,6 +126,7 @@ def run(quick: bool = False) -> list[dict]:
             rows.append(row)
     rows.extend(_streaming_rows(key, params, gen, sigs, quick))
     rows.extend(_brownout_rows(key, params, gen, sigs, quick))
+    rows.extend(_intermittent_rows(key, params, gen, sigs, quick))
     return rows
 
 
@@ -236,9 +246,79 @@ def _brownout_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
     return rows
 
 
+def _intermittent_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
+    """Intermittent inference vs freeze-and-lose under scarce harvest.
+
+    Both runs share the same scarce harvest traces, brown-out physics and
+    windows; the baseline is the PR 5 strict ladder alone (a slot that
+    cannot afford a whole decision DEFERs and the work is lost), the
+    treatment adds the staged-inference lane (DEFER slots accumulate
+    stages across slots and brown-outs, completing at full depth or via a
+    confidence-tagged early exit).  The acceptance metric is the
+    completed-inference fraction — completions / scheduled windows, where
+    the lane's D6 suspensions do NOT count as completions — which must be
+    STRICTLY above the baseline, with the accuracy breakdown
+    (ladder / early-exit / full-depth) alongside.
+    """
+    n = QUICK_INTERMITTENT_N if quick else INTERMITTENT_N
+    s = QUICK_INTERMITTENT_SLOTS if quick else INTERMITTENT_SLOTS
+    wins, labels = har_stream(key, s)
+    harvest = fleet_harvest_traces(key, n, s) * INTERMITTENT_SCARCITY
+    aux = har_aux_init(jax.random.fold_in(key, 7), HAR)
+    kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+              gen_params=gen, har_cfg=HAR, labels=labels,
+              brownout=BROWNOUT_CFG, initial_uj=BROWNOUT_INITIAL_UJ)
+
+    rows = []
+    results = {}
+    for name, extra in (("baseline", {}),
+                        ("staged", dict(intermittent=INTERMITTENT_CFG,
+                                        aux_params=aux))):
+        t0 = time.perf_counter()
+        res = seeker_fleet_simulate(wins, harvest, **kw, **extra)
+        jax.block_until_ready(res["decisions"])
+        wall = time.perf_counter() - t0
+        results[name] = res
+        row = {
+            "name": f"fleet_scale/intermittent_n{n}_{name}",
+            "us_per_call": wall * 1e6,
+            "windows_per_s": n * s / wall,
+            "completed_frac": float(res["completed"]) / (n * s),
+            "fleet_accuracy": float(res["fleet_accuracy"]),
+            "bytes_on_wire": float(res["bytes_on_wire"]),
+            "slots": s,
+            "scarcity": INTERMITTENT_SCARCITY,
+        }
+        if extra:
+            row.update({
+                "it_full": int(res["it_full"]),
+                "it_early": int(res["it_early"]),
+                "suspended_slots": int(jnp.sum(
+                    (res["decisions"] == D6_PARTIAL) & res["alive"])),
+                "correct_ladder": int(res["correct_ladder"]),
+                "it_correct_full": int(res["it_correct_full"]),
+                "it_correct_early": int(res["it_correct_early"]),
+                "exit_threshold": INTERMITTENT_CFG.exit_threshold,
+            })
+        rows.append(row)
+    base, staged = (rows[0]["completed_frac"], rows[1]["completed_frac"])
+    rows[-1]["baseline_completed_frac"] = base
+    rows[-1]["completed_gain_x"] = staged / max(base, 1e-9)
+    assert staged > base, \
+        f"intermittent lane must STRICTLY beat freeze-and-lose under " \
+        f"scarce harvest: staged {staged:.4f} <= baseline {base:.4f}"
+    return rows
+
+
 if __name__ == "__main__":
     for row in run():
-        if "bytes_on_wire" in row:
+        if "scarcity" in row:
+            extra = (f"  ({row['it_full']} full + {row['it_early']} early "
+                     f"lane completions)" if "it_full" in row else "")
+            print(f"{row['name']:>34s}  "
+                  f"{100 * row['completed_frac']:>5.1f}% completed  "
+                  f"acc {row['fleet_accuracy']:.3f}{extra}")
+        elif "reduction_x" in row:
             print(f"{row['name']:>26s}  {row['windows_per_s']:>10.0f} win/s  "
                   f"{row['bytes_on_wire']:>12.0f} B on wire  "
                   f"({row['reduction_x']:.1f}x under raw, "

@@ -6,6 +6,8 @@
         python examples/edge_host_serving.py --fleet 64 --sharded
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 64 \
         --churn 0.3 --chunk 32
+    PYTHONPATH=src python examples/edge_host_serving.py --fleet 64 \
+        --intermittent
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 24 \
         --host-queue
 
@@ -20,6 +22,11 @@ per-modality completion and fleet-level wire volume.  ``--churn FRAC``
 makes the fleet intermittent (duty-cycled per-node alive traces: nodes
 brown out, freeze, rejoin); ``--chunk SLOTS`` streams the window stream in
 segments through the resume contract instead of one long scan.
+``--intermittent`` scales the harvest down to scarcity, turns on the
+supercap brown-out hysteresis, and runs the staged intermittent-inference
+lane (docs/ENERGY_MODEL.md): DEFER slots become staged progress that
+suspends across brown-outs and emits D7 early exits / D8 full-depth
+results slots later.
 
 ``--host-queue`` streams a *churny* fleet trace — nodes dropping in and out
 slot to slot, periodically re-transmitting identical payloads — through the
@@ -35,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.seeker_har import HAR
-from repro.core import (DEFER, EH_SOURCES, fleet_harvest_traces,
+from repro.core import (D6_PARTIAL, DEFER, EH_SOURCES, fleet_harvest_traces,
                         fleet_source_assignment, harvest_trace)
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_dataset, har_stream
@@ -66,20 +73,26 @@ def train_classifier(key):
 
 
 def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
-               sharded: bool = False, churn: float = 0.0, chunk: int = 0):
+               sharded: bool = False, churn: float = 0.0, chunk: int = 0,
+               intermittent: bool = False):
     """N heterogeneous nodes in one batched scan: the fleet engine.
 
     ``sharded`` splits the node axis over every visible device (run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to get a CPU
     mesh) — same traces, fleet aggregates psum-ed across shards.
-    ``churn`` > 0 runs the intermittent fleet: each node follows a
+    ``churn`` > 0 runs the churny fleet: each node follows a
     duty-cycled alive trace (duty = 1 - churn) and browns out/rejoins
     mid-deployment.  ``chunk`` > 0 streams the windows in chunk-slot
     segments instead of one long scan (bitwise-identical results).
+    ``intermittent`` scales the harvest down to scarcity, enables the
+    supercap brown-out hysteresis, and runs the staged inference lane
+    (D6 suspend / D7 early exit / D8 full depth).
     """
     import time
 
-    from repro.core import fleet_alive_traces
+    from repro.core import (BrownoutConfig, IntermittentConfig,
+                            fleet_alive_traces)
+    from repro.models.har import har_aux_init
     from repro.serving import seeker_fleet_simulate_streamed
 
     s = wins.shape[0]
@@ -90,6 +103,11 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
     kw = dict(signatures=class_signatures(), qdnn_params=params,
               host_params=params, gen_params=gen, har_cfg=HAR,
               labels=labels, alive=alive)
+    if intermittent:
+        harvest = harvest * 0.15          # scarcity: make DEFER the norm
+        kw.update(brownout=BrownoutConfig(),
+                  intermittent=IntermittentConfig(),
+                  aux_params=har_aux_init(jax.random.fold_in(key, 7), HAR))
     if sharded:
         kw["mesh"] = make_mesh_compat((jax.device_count(),), ("data",))
     t0 = time.time()
@@ -104,9 +122,10 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
     dt = time.time() - t0
 
     decisions = np.asarray(res["decisions"])              # (S, N)
-    completed = decisions != DEFER
+    # a D6 suspension put nothing on the wire yet: not completed
+    completed = (decisions != DEFER) & (decisions != D6_PARTIAL)
     correct = (np.asarray(res["preds"]) == np.asarray(labels)[:, None]) \
-        & completed
+        & completed & (decisions <= 5)
     print(f"\nfleet of {n_nodes} nodes x {s} slots in {dt:.2f}s "
           f"({n_nodes * s / dt:.0f} windows/sec incl. compile)")
     if chunk > 0:
@@ -125,15 +144,27 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
           f" (alive slots only), fleet accuracy "
           f"{100 * float(res['fleet_accuracy']):.1f}%, completed "
           f"{100 * float(res['completed_frac']):.1f}%")
+    if intermittent:
+        it_final = res["final_intermittent"]
+        print(f"intermittent lane (scarce harvest x0.15, brown-out "
+              f"hysteresis on): {int(res['it_full'])} staged full-depth "
+              f"(D8), {int(res['it_early'])} early exits (D7), "
+              f"{int(np.asarray(it_final.active).sum())} inferences still "
+              f"suspended in the carry at end of run; "
+              f"{int(res['brownout_slots'])} browned-out slots survived "
+              f"with progress frozen in place")
     print("per-modality stats (nodes cycle rf/wifi/piezo/solar):")
     node_src = fleet_source_assignment(n_nodes)
+    ladder_comp = completed & (decisions <= 5)
+    suffix = " (ladder path)" if intermittent else ""
     for si, src in enumerate(EH_SOURCES):
         sel = node_src == si
         if sel.any():
-            n_comp = completed[:, sel].sum()
+            n_comp = ladder_comp[:, sel].sum()
             acc = correct[:, sel].sum() / max(n_comp, 1)
             print(f"  {src:6s} {100 * completed[:, sel].mean():5.1f}% "
-                  f"completed, {100 * acc:5.1f}% accurate when completed")
+                  f"completed, {100 * acc:5.1f}% accurate when "
+                  f"completed{suffix}")
     wire = float(res["bytes_on_wire"])
     raw = completed.sum() * float(res["raw_bytes_per_window"])
     print(f"bytes on wire: {wire:.0f} vs {raw:.0f} raw-equivalent "
@@ -248,6 +279,13 @@ def main():
                     help="with --fleet: intermittent fleet — each node "
                          "follows a duty-cycled alive trace with duty "
                          "1-FRAC, browning out and rejoining mid-run")
+    ap.add_argument("--intermittent", action="store_true",
+                    help="with --fleet: scarce harvest + brown-out "
+                         "hysteresis + the staged intermittent-inference "
+                         "lane — DEFER slots advance a staged quantized "
+                         "DNN that suspends across brown-outs and emits "
+                         "D7 early exits / D8 full-depth results "
+                         "(docs/ENERGY_MODEL.md)")
     ap.add_argument("--chunk", type=int, default=0, metavar="SLOTS",
                     help="with --fleet: stream windows in SLOTS-slot "
                          "segments through the resume contract instead of "
@@ -275,7 +313,8 @@ def main():
 
     if args.fleet:
         fleet_demo(key, params, gen, wins, labels, args.fleet,
-                   sharded=args.sharded, churn=args.churn, chunk=args.chunk)
+                   sharded=args.sharded, churn=args.churn, chunk=args.chunk,
+                   intermittent=args.intermittent)
         return
 
     harvest = harvest_trace(key, args.windows, args.source)
@@ -287,8 +326,11 @@ def main():
                           host_params=params, gen_params=gen, har_cfg=HAR)
 
     dec = collections.Counter(np.asarray(res["decisions"]).tolist())
+    # NB code 5 is DEFER (sense only); Table 2's D5_RAW is a cost ROW,
+    # not a reachable decision — see docs/ENERGY_MODEL.md
     names = {0: "D0 memo", 1: "D1 fullDNN", 2: "D2 qDNN", 3: "D3 cluster",
-             4: "D4 sampling", 5: "DEFER"}
+             4: "D4 sampling", 5: "DEFER", 6: "D6 suspend",
+             7: "D7 earlyexit", 8: "D8 stagedfull"}
     print("\ndecision mix:")
     for d, n in sorted(dec.items()):
         print(f"  {names[d]:12s} {n:4d}  ({100*n/args.windows:.1f}%)")

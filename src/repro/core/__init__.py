@@ -23,7 +23,8 @@ from .energy import (  # noqa: F401
 from .aac import AACTable, make_aac_table, select_k  # noqa: F401
 from .decision import (  # noqa: F401
     D0_MEMO, D1_DNN_FULL, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING, DEFER,
-    DecisionOutcome, choose_decision, decision_energy,
+    D6_PARTIAL, D7_EARLY_EXIT, D8_STAGED_FULL, N_INTERMITTENT_DECISIONS,
+    IntermittentConfig, DecisionOutcome, choose_decision, decision_energy,
 )
 from .compression import (  # noqa: F401
     CompressionConfig, topk_compress, topk_decompress, kmeans1d,

@@ -11,7 +11,16 @@ code  action                                                      paper
 3     D3 — clustering coreset, offload; host recovers + infers    §3.2.2
 4     D4 — sampling coreset, offload; host GAN-recovers + infers  §3.2.2/A.1
 5     DEFER — not even D4 affordable: store-and-execute later     §2 (ERR)
+6     D6 — intermittent: inference suspended mid-stage            2503.06663
+7     D7 — intermittent: early exit from the auxiliary head       2503.06663
+8     D8 — intermittent: staged inference completed, full depth   1810.07751
 ====  =========================================================== ============
+
+Codes 6-8 are emitted by the *intermittent lane*
+(:func:`repro.serving.edge_host.intermittent_lane_step`), never by
+:func:`choose_decision` itself: the ladder walk is unchanged, and the lane
+engages only on slots the ladder would DEFER (or while a staged inference is
+already in flight).  See docs/ENERGY_MODEL.md.
 
 The selector is a pure jnp function of (correlation, stored energy, forecast
 income, costs) so it can run inside ``lax.scan`` over a trace; the *executor*
@@ -20,6 +29,7 @@ static shape.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -28,7 +38,9 @@ import jax.numpy as jnp
 from .energy import EnergyCosts
 
 __all__ = ["D0_MEMO", "D1_DNN_FULL", "D2_DNN_QUANT", "D3_CLUSTER", "D4_SAMPLING",
-           "DEFER", "DecisionOutcome", "choose_decision", "decision_energy"]
+           "DEFER", "D6_PARTIAL", "D7_EARLY_EXIT", "D8_STAGED_FULL",
+           "N_INTERMITTENT_DECISIONS", "IntermittentConfig",
+           "DecisionOutcome", "choose_decision", "decision_energy"]
 
 D0_MEMO = 0
 D1_DNN_FULL = 1
@@ -36,6 +48,45 @@ D2_DNN_QUANT = 2
 D3_CLUSTER = 3
 D4_SAMPLING = 4
 DEFER = 5
+D6_PARTIAL = 6        # staged inference advanced/suspended, nothing on the wire
+D7_EARLY_EXIT = 7     # confidence-tagged result from the auxiliary head
+D8_STAGED_FULL = 8    # staged inference reached full depth and transmitted
+
+N_INTERMITTENT_DECISIONS = D8_STAGED_FULL + 1   # histogram bins, lane enabled
+
+
+@dataclasses.dataclass(frozen=True)
+class IntermittentConfig:
+    """Energy-adaptive intermittent-inference lane (Islam et al.,
+    arXiv:2503.06663; Gobieski et al., arXiv:1810.07751).
+
+    The lane engages on slots the ladder DEFERs (or while an inference is in
+    flight), executes as many quantized-DNN stages as this slot's
+    ``stored + harvested`` budget strictly affords, and suspends the staged
+    activations in the scan carry across slots — and across brown-outs.
+
+    ``min_exit_stage``: earliest completed stage (1 or 2) whose auxiliary
+    head may emit an early-exit result when the remaining stages are
+    unaffordable.
+    ``exit_threshold``: minimum auxiliary-head confidence (max softmax) for
+    an early exit; 0.0 exits whenever affordable, any value > 1.0 disables
+    early exit entirely (the lane then only ever completes at full depth).
+
+    Frozen + hashable so the fleet engines can key their compile caches on
+    it like the cost table and :class:`repro.core.energy.BrownoutConfig`.
+    """
+
+    min_exit_stage: int = 1
+    exit_threshold: float = 0.0
+
+    def __post_init__(self):
+        if self.min_exit_stage not in (1, 2):
+            raise ValueError(
+                f"min_exit_stage must be 1 or 2 (the stages with an "
+                f"auxiliary head), got {self.min_exit_stage}")
+        if not self.exit_threshold >= 0.0:
+            raise ValueError(
+                f"exit_threshold must be >= 0.0, got {self.exit_threshold}")
 
 
 class DecisionOutcome(NamedTuple):
@@ -44,10 +95,12 @@ class DecisionOutcome(NamedTuple):
 
 
 def decision_energy(costs: EnergyCosts) -> jnp.ndarray:
-    """(6,) µJ cost vector indexed by decision code (DEFER costs only
-    sensing).  Derived from :meth:`EnergyCosts.decision_costs` — the same
-    table ``EnergyCosts.total`` reports, so the scheduler's gates and the
-    Table 2 ladder cannot drift apart again."""
+    """(9,) µJ cost vector indexed by decision code (DEFER costs only
+    sensing; rows 6-8 are the intermittent lane's FIXED per-slot parts —
+    executed stages add :meth:`EnergyCosts.stage_costs` on top).  Derived
+    from :meth:`EnergyCosts.decision_costs` — the same table
+    ``EnergyCosts.total`` reports, so the scheduler's gates and the Table 2
+    ladder cannot drift apart again."""
     return jnp.asarray(costs.decision_costs(), dtype=jnp.float32)
 
 

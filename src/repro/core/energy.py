@@ -57,6 +57,15 @@ class EnergyCosts:
     ``tx_result``   : transmit a classification result (8.27 µJ).
     ``tx_coreset``  : transmit a coreset payload (15.97 µJ).
     ``tx_raw``      : transmit the raw 240 B window (70.16 µJ).
+    ``aux_head``    : the intermittent lane's early-exit auxiliary head — a
+                      single (pooled-activation x n_classes) matmul, priced
+                      at its MAC share of the quantized DNN.
+    ``stage_split`` : fraction of the quantized-DNN energy spent by each of
+                      the three inference stages (conv1→pool, conv2→pool,
+                      dense+head), from the MAC counts of the default
+                      :class:`repro.models.har.HARConfig` (28 800 / 307 200 /
+                      124 416 MACs); :meth:`stage_costs` normalizes, so the
+                      tuple only has to be *proportional*.
     """
 
     sense: float = 0.54
@@ -68,15 +77,29 @@ class EnergyCosts:
     tx_result: float = 8.27
     tx_coreset: float = 15.97
     tx_raw: float = 70.16
+    aux_head: float = 0.41
+    stage_split: tuple[float, float, float] = (0.0626, 0.6672, 0.2702)
+
+    def __post_init__(self):
+        if len(self.stage_split) != 3 or min(self.stage_split) <= 0.0:
+            raise ValueError(
+                f"stage_split must be 3 positive per-stage fractions, got "
+                f"{self.stage_split}")
 
     def decision_costs(self) -> tuple[float, ...]:
-        """(6,) µJ per DECISION code D0..D4 + DEFER — the single cost table.
+        """(9,) µJ per DECISION code D0..D4 + DEFER + the intermittent lane's
+        D6/D7/D8 — the single cost table.
 
         Both :meth:`total` (Table 2 row totals) and
         :func:`repro.core.decision.decision_energy` derive from this tuple,
         so the scheduler's affordability gates and the reported Table 2
         ladder can no longer disagree (they used to: ``total`` dropped
         ``sense`` from the D3/D4 rows).
+
+        Rows 6-8 are the FIXED per-slot part of the intermittent decisions
+        (see docs/ENERGY_MODEL.md): the stages actually executed in the slot
+        add :meth:`stage_costs` entries on top, so unlike D0-D5 these rows
+        are a floor, not the whole spend.
         """
         return (
             self.sense + self.tx_result,                        # D0 memoize
@@ -85,7 +108,19 @@ class EnergyCosts:
             self.sense + self.coreset_cluster + self.tx_coreset,   # D3
             self.sense + self.coreset_sampling + self.tx_coreset,  # D4
             self.sense,                                         # DEFER
+            self.sense,                                         # D6 partial
+            self.sense + self.aux_head + self.tx_result,        # D7 early exit
+            self.sense + self.tx_result,                        # D8 staged full
         )
+
+    def stage_costs(self, quant_bits: int = 16) -> tuple[float, float, float]:
+        """(3,) µJ per inference stage of the intermittent lane, summing to
+        the quantized-DNN energy at ``quant_bits`` (``dnn16``/``dnn12``):
+        running all three stages — in one slot or across brown-outs — costs
+        exactly one on-node quantized inference (D2's compute part)."""
+        base = {16: self.dnn16, 12: self.dnn12}.get(quant_bits, self.dnn16)
+        tot = sum(self.stage_split)
+        return tuple(base * f / tot for f in self.stage_split)
 
     def total(self, row: int) -> float:
         """Total µJ of paper Table 2 rows: 0..4 = D0..D4 (identical to the

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 from ..kernels.ops import fake_quant_op
 
 __all__ = ["HARConfig", "har_init", "har_apply", "har_apply_quantized",
-           "quantize_params"]
+           "quantize_params", "har_stage_sizes", "har_act_buffer",
+           "har_apply_stage", "har_apply_staged", "har_aux_init",
+           "har_apply_aux"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,3 +100,117 @@ def har_apply_quantized(params: dict, x: jnp.ndarray, bits: int) -> jnp.ndarray:
     h = h.reshape(h.shape[0], -1)
     h = jax.nn.relu(h @ qp["dense_w"] + qp["dense_b"])
     return h @ qp["head_w"] + qp["head_b"]
+
+
+# ---------------------------------------------------------------------------
+# Staged (intermittent) quantized inference — the same computation as
+# har_apply_quantized, cut at the two pooling boundaries so an EH node can
+# execute it piecewise across slots and brown-outs (Islam et al.,
+# arXiv:2503.06663; Gobieski et al., arXiv:1810.07751).  Stage boundaries:
+#
+#   stage 0: fq(window) -> conv1 -> relu -> maxpool2 -> fq   ((T/2)·conv1)
+#   stage 1:             conv2 -> relu -> maxpool2 -> fq     ((T/4)·conv2)
+#   stage 2:             flatten -> dense -> relu -> head    (n_classes,)
+#
+# Each stage maps a flat activation buffer to the next (zero-padded to the
+# common :func:`har_act_buffer` width so the buffer can ride a scan carry
+# with one static shape), and running all three reproduces
+# :func:`har_apply_quantized` BITWISE — the op order, fake-quant points and
+# reshapes are mirrored exactly (pinned by tests/test_intermittent.py).
+# ---------------------------------------------------------------------------
+
+
+def har_stage_sizes(cfg: HARConfig) -> tuple[int, int, int, int]:
+    """Flat float counts entering stages 0..2 plus the final logits width:
+    (T·C, (T/2)·conv1, (T/4)·conv2, n_classes)."""
+    return (cfg.window * cfg.channels,
+            (cfg.window // 2) * cfg.conv1,
+            (cfg.window // 4) * cfg.conv2,
+            cfg.n_classes)
+
+
+def har_act_buffer(cfg: HARConfig) -> int:
+    """Width of the staged-activation carry buffer: every stage input/output
+    (window, pooled conv maps, logits) zero-padded to one static size."""
+    return max(har_stage_sizes(cfg))
+
+
+def _pad_flat(v: jnp.ndarray, width: int) -> jnp.ndarray:
+    return jnp.concatenate([v, jnp.zeros((width - v.shape[0],), v.dtype)])
+
+
+def har_apply_stage(qp: dict, buf: jnp.ndarray, stage: int, cfg: HARConfig,
+                    bits: int) -> jnp.ndarray:
+    """Run ONE inference stage on a flat (A,) activation buffer, returning
+    the next (A,) buffer.  ``qp`` is the pre-quantized params
+    (:func:`quantize_params`); ``stage`` is static (0, 1 or 2).  The batch
+    dim is kept at 1 internally so the conv/matmul shapes match the engine's
+    per-node ``har_apply_quantized(window[None])`` call exactly."""
+    a = buf.shape[0]
+    s_in, s1, s2, n_cls = har_stage_sizes(cfg)
+    if stage == 0:
+        x = buf[:s_in].reshape(cfg.window, cfg.channels)
+        h = jax.nn.relu(_conv1d(fake_quant_op(x[None], bits),
+                                qp["conv1_w"], qp["conv1_b"]))
+        h = fake_quant_op(_maxpool2(h), bits)
+        return _pad_flat(h[0].reshape(-1), a)
+    if stage == 1:
+        h = buf[:s1].reshape(1, cfg.window // 2, cfg.conv1)
+        h = jax.nn.relu(_conv1d(h, qp["conv2_w"], qp["conv2_b"]))
+        h = fake_quant_op(_maxpool2(h), bits)
+        return _pad_flat(h[0].reshape(-1), a)
+    if stage == 2:
+        h = buf[:s2][None]                       # (1, flat) like .reshape(B,-1)
+        h = jax.nn.relu(h @ qp["dense_w"] + qp["dense_b"])
+        logits = h @ qp["head_w"] + qp["head_b"]
+        return _pad_flat(logits[0], a)
+    raise ValueError(f"stage must be 0, 1 or 2, got {stage}")
+
+
+def har_apply_staged(params: dict, x: jnp.ndarray, bits: int,
+                     cfg: HARConfig) -> jnp.ndarray:
+    """Chain all three stages over a (T, C) window -> (n_classes,) logits.
+
+    The reference composition the intermittent lane's per-slot execution
+    must agree with; bitwise-equal to ``har_apply_quantized(params, x[None],
+    bits)[0]`` (tests pin it)."""
+    qp = quantize_params(params, bits)
+    buf = _pad_flat(x.reshape(-1), har_act_buffer(cfg))
+    for stage in range(3):
+        buf = har_apply_stage(qp, buf, stage, cfg, bits)
+    return buf[:cfg.n_classes]
+
+
+def har_aux_init(key: jax.Array, cfg: HARConfig) -> dict:
+    """Early-exit auxiliary heads: one linear head per intermediate stage
+    output (post-stage-0 and post-stage-1 pooled activations -> class
+    logits).  A SEPARATE key from :func:`har_init` — the backbone's
+    4-way key split is pinned by every bitwise-parity test and must not
+    change."""
+    k1, k2 = jax.random.split(key)
+    _, s1, s2, n_cls = har_stage_sizes(cfg)
+
+    def norm(k, shape, fan_in):
+        return jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+
+    return {
+        "aux1_w": norm(k1, (s1, n_cls), s1),
+        "aux1_b": jnp.zeros((n_cls,)),
+        "aux2_w": norm(k2, (s2, n_cls), s2),
+        "aux2_b": jnp.zeros((n_cls,)),
+    }
+
+
+def har_apply_aux(aux_params: dict, buf: jnp.ndarray, prog: jnp.ndarray,
+                  cfg: HARConfig, bits: int) -> jnp.ndarray:
+    """Auxiliary-head logits from a flat staged-activation buffer holding
+    the output of ``prog`` completed stages (traced; 1 or 2).  Both heads
+    run (static shapes) and ``prog`` selects — the buffer is already
+    fake-quantized by its producing stage; the head weights quantize at the
+    same ``bits`` as the backbone crossbars."""
+    _, s1, s2, n_cls = har_stage_sizes(cfg)
+    a1 = (buf[:s1][None] @ fake_quant_op(aux_params["aux1_w"], bits)
+          + aux_params["aux1_b"])[0]
+    a2 = (buf[:s2][None] @ fake_quant_op(aux_params["aux2_w"], bits)
+          + aux_params["aux2_b"])[0]
+    return jnp.where(prog == 1, a1, a2)

@@ -6,7 +6,8 @@ from .edge_host import (  # noqa: F401
     WirePayload, encode_wire_coresets, decode_wire_coresets,
     wire_payload_nbytes, wire_payload_to_bytes, wire_payload_from_bytes,
     WireSamplePayload, encode_wire_samples, decode_wire_samples,
-    wire_sample_nbytes,
+    wire_sample_nbytes, IntermittentState, intermittent_node_init,
+    intermittent_fleet_init, IntermittentLaneOut, intermittent_lane_step,
 )
 from .fleet import (  # noqa: F401
     fleet_node_init, seeker_fleet_simulate, seeker_fleet_simulate_sharded,

@@ -33,7 +33,9 @@ from ..core.coreset import (channel_cluster_coresets, cluster_payload_bytes,
                             kmeans_coreset, points_from_window,
                             raw_payload_bytes, sampling_payload_bytes)
 from ..core.decision import (D0_MEMO, D2_DNN_QUANT, D3_CLUSTER, D4_SAMPLING,
-                             DEFER, choose_decision, decision_energy)
+                             DEFER, D6_PARTIAL, D7_EARLY_EXIT, D8_STAGED_FULL,
+                             IntermittentConfig, choose_decision,
+                             decision_energy)
 from ..core.energy import (BrownoutConfig, EnergyCosts, PredictorState,
                            predictor_forecast, predictor_init,
                            predictor_update, supercap_step,
@@ -42,7 +44,9 @@ from ..core.memo import signature_correlations
 from ..core.recovery import (GeneratorParams, recover_cluster_window,
                              recover_sampling_window)
 from ..core.coreset import importance_coreset
-from ..models.har import HARConfig, har_apply, har_apply_quantized
+from ..models.har import (HARConfig, har_act_buffer, har_apply,
+                          har_apply_aux, har_apply_quantized,
+                          har_apply_stage)
 
 __all__ = ["SeekerNodeState", "seeker_node_init", "seeker_sensor_step",
            "seeker_sensor_step_given_corr", "seeker_host_step",
@@ -52,7 +56,9 @@ __all__ = ["SeekerNodeState", "seeker_node_init", "seeker_sensor_step",
            "wire_payload_nbytes", "wire_payload_to_bytes",
            "wire_payload_from_bytes", "WireSamplePayload",
            "encode_wire_samples", "decode_wire_samples",
-           "wire_sample_nbytes"]
+           "wire_sample_nbytes", "IntermittentState",
+           "intermittent_node_init", "intermittent_fleet_init",
+           "IntermittentLaneOut", "intermittent_lane_step"]
 
 
 class SeekerNodeState(NamedTuple):
@@ -212,13 +218,190 @@ def seeker_host_step(out: SensorStepOut, *, host_params: dict,
                                          onehot)))
 
 
+# ---------------------------------------------------------------------------
+# Intermittent-inference lane (decision codes D6/D7/D8)
+# ---------------------------------------------------------------------------
+
+
+class IntermittentState(NamedTuple):
+    """Per-node staged-inference progress — the intermittent lane's slice of
+    the fleet scan carry (see docs/RESUME_CONTRACT.md for the rules a carry
+    lane must follow).
+
+    ``active``: a staged inference is in flight (suspended or advancing).
+    ``stage``: completed stages (1..3; 3 = logits ready, transmit pending).
+    ``acts``: (A,) flat activation buffer holding the last completed stage's
+    output (A = :func:`repro.models.har.har_act_buffer`).
+    ``src_slot``: the GLOBAL slot index whose window is in flight — emissions
+    are scored against this slot's label, not the emission slot's.
+    """
+
+    active: jnp.ndarray     # () / (N,) bool
+    stage: jnp.ndarray      # () / (N,) int32
+    acts: jnp.ndarray       # (A,) / (N, A) float32
+    src_slot: jnp.ndarray   # () / (N,) int32
+
+
+def intermittent_node_init(har_cfg: HARConfig) -> IntermittentState:
+    """Idle single-node lane state (nothing in flight)."""
+    return IntermittentState(
+        active=jnp.zeros((), bool),
+        stage=jnp.zeros((), jnp.int32),
+        acts=jnp.zeros((har_act_buffer(har_cfg),), jnp.float32),
+        src_slot=jnp.zeros((), jnp.int32))
+
+
+def intermittent_fleet_init(n_nodes: int,
+                            har_cfg: HARConfig) -> IntermittentState:
+    """Stacked idle lane state for ``n_nodes`` (leading node axis)."""
+    return IntermittentState(
+        active=jnp.zeros((n_nodes,), bool),
+        stage=jnp.zeros((n_nodes,), jnp.int32),
+        acts=jnp.zeros((n_nodes, har_act_buffer(har_cfg)), jnp.float32),
+        src_slot=jnp.zeros((n_nodes,), jnp.int32))
+
+
+class IntermittentLaneOut(NamedTuple):
+    engaged: jnp.ndarray       # () bool — the lane overrode this slot
+    decision: jnp.ndarray      # () int32: D6/D7/D8 or DEFER
+    spend: jnp.ndarray         # () float µJ actually consumed
+    payload_bytes: jnp.ndarray # () float: 3 B early exit, 2 B full, else 0
+    stored_uj: jnp.ndarray     # () post-slot supercap charge
+    prev_label: jnp.ndarray    # () int32 AAC continuity after the slot
+    emit: jnp.ndarray          # () int32: 0 none, 1 early exit, 2 full depth
+    emit_label: jnp.ndarray    # () int32 (valid when emit > 0)
+    emit_conf: jnp.ndarray     # () float aux-head max-softmax (early exits)
+    emit_src: jnp.ndarray      # () int32 source slot of the emitted window
+    emit_stage: jnp.ndarray    # () int32 depth at emission (1/2 early, 3 full)
+    state: IntermittentState
+
+
+def intermittent_lane_step(window: jnp.ndarray, state: SeekerNodeState,
+                           harvested_uj: jnp.ndarray,
+                           ladder_decision: jnp.ndarray,
+                           it: IntermittentState, slot: jnp.ndarray, *,
+                           qp: dict, aux_params: dict, har_cfg: HARConfig,
+                           costs: EnergyCosts, quant_bits: int,
+                           cfg: IntermittentConfig,
+                           reserve_uj: float = 0.0) -> IntermittentLaneOut:
+    """One slot of the energy-adaptive partial-inference lane (paper-adjacent
+    intermittent computing: Islam et al. 2503.06663, Gobieski et al.
+    1810.07751), for ONE node — the fleet engines vmap this after the ladder
+    step.
+
+    Engages when an inference is in flight (resume before starting new work)
+    or when the ladder chose DEFER (the freeze-and-lose slot this lane
+    converts into progress).  Under STRICT store-and-execute accounting —
+    every µJ spent is gated on ``stored + harvested`` this slot, PR 5
+    semantics, the forecast mints nothing — it:
+
+    1. pays the sensing cost (zero-clamped exactly like strict DEFER),
+    2. executes as many remaining stages as the budget affords
+       (:meth:`repro.core.energy.EnergyCosts.stage_costs`), resuming from
+       the suspended activation buffer,
+    3. on full depth + an affordable ``tx_result``: emits D8,
+    4. stalled with ``>= min_exit_stage`` stages done, an affordable
+       ``aux_head + tx_result``, and aux confidence ``>= exit_threshold``:
+       emits a confidence-tagged early exit, D7,
+    5. otherwise suspends (D6 with progress in the carry; plain DEFER when
+       nothing was started).
+
+    ``qp`` is the PRE-quantized backbone (:func:`quantize_params` at
+    ``quant_bits``) so the vmapped fleet quantizes once per slot, not per
+    node.
+
+    ``reserve_uj`` is the brown-out reserve: stage execution and emissions
+    are additionally gated on leaving at least this much charge behind
+    (the fleet engines pass ``BrownoutConfig.off_uj``).  Without it the
+    lane spends every DEFER slot down to zero, tripping the power-down
+    hysteresis and losing whole recharge cycles — threshold-aware
+    budgeting is what makes staged progress a net win over freeze-and-
+    lose (the benchmark's acceptance metric).  Sensing stays mandatory,
+    exactly like strict DEFER.
+    """
+    sense = costs.sense
+    tx = costs.tx_result
+    aux_c = costs.aux_head
+    stage_cost = costs.stage_costs(quant_bits)
+
+    engaged = it.active | (ladder_decision == DEFER)
+    budget = state.stored_uj + harvested_uj
+    sense_ok = budget >= sense
+    can_run = engaged & sense_ok
+    spend = jnp.where(can_run, sense, 0.0)
+    rem = budget - spend
+
+    # resume-before-start: an in-flight inference owns the slot; otherwise
+    # capture THIS slot's window as stage-0 input
+    fresh = can_run & ~it.active
+    a = it.acts.shape[0]
+    win_flat = jnp.concatenate([
+        window.reshape(-1),
+        jnp.zeros((a - window.size,), jnp.float32)])
+    buf = jnp.where(fresh, win_flat, it.acts)
+    prog = jnp.where(fresh, 0, it.stage)
+    src = jnp.where(fresh, slot, it.src_slot)
+
+    # unrolled masked stage walk: each stage runs only if it is the next one
+    # AND strictly affordable from what remains — no stage ever executes on
+    # energy that does not exist
+    for si in range(3):
+        out_i = har_apply_stage(qp, buf, si, har_cfg, quant_bits)
+        run_i = can_run & (prog == si) & (rem >= stage_cost[si] + reserve_uj)
+        buf = jnp.where(run_i, out_i, buf)
+        prog = jnp.where(run_i, prog + 1, prog)
+        rem = jnp.where(run_i, rem - stage_cost[si], rem)
+        spend = jnp.where(run_i, spend + stage_cost[si], spend)
+
+    logits_full = buf[:har_cfg.n_classes]
+    done = can_run & (prog == 3)
+    emit_full = done & (rem >= tx + reserve_uj)
+
+    aux_logits = har_apply_aux(aux_params, buf, prog, har_cfg, quant_bits)
+    conf = jnp.max(jax.nn.softmax(aux_logits))
+    emit_early = (can_run & ~done & (prog >= cfg.min_exit_stage)
+                  & (rem >= aux_c + tx + reserve_uj)
+                  & (conf >= cfg.exit_threshold))
+
+    spend = spend + jnp.where(emit_full, tx, 0.0) \
+        + jnp.where(emit_early, aux_c + tx, 0.0)
+    emitted = emit_full | emit_early
+    label = jnp.where(emit_full, jnp.argmax(logits_full),
+                      jnp.argmax(aux_logits)).astype(jnp.int32)
+
+    decision = jnp.where(
+        emit_full, D8_STAGED_FULL,
+        jnp.where(emit_early, D7_EARLY_EXIT,
+                  jnp.where(can_run & (prog > 0), D6_PARTIAL,
+                            DEFER))).astype(jnp.int32)
+    # D7: 2-B result + 1-B confidence tag; D8: 2-B result
+    payload = jnp.where(emit_full, 2.0, jnp.where(emit_early, 3.0, 0.0))
+    stored = supercap_step_direct(state.stored_uj, harvested_uj, spend)
+    prev_label = jnp.where(emitted, label, state.prev_label)
+
+    new_it = IntermittentState(
+        active=jnp.where(can_run, ~emitted & (prog > 0), it.active),
+        stage=jnp.where(can_run, prog, it.stage),
+        acts=buf,
+        src_slot=src)
+    return IntermittentLaneOut(
+        engaged=engaged, decision=decision, spend=spend,
+        payload_bytes=payload, stored_uj=stored, prev_label=prev_label,
+        emit=jnp.where(emit_full, 2, jnp.where(emit_early, 1, 0)
+                       ).astype(jnp.int32),
+        emit_label=label, emit_conf=conf, emit_src=src,
+        emit_stage=prog, state=new_it)
+
+
 def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
                     harvest: jnp.ndarray, *, signatures, qdnn_params,
                     host_params, gen_params, har_cfg: HARConfig,
                     aac_table: AACTable | None = None,
                     costs: EnergyCosts | None = None, n_sensors: int = 3,
                     key: jax.Array | None = None, quant_bits: int = 16,
-                    brownout: BrownoutConfig | None = None):
+                    brownout: BrownoutConfig | None = None,
+                    intermittent: IntermittentConfig | None = None,
+                    aux_params: dict | None = None):
     """Run the full Seeker system over a window stream.
 
     windows (S, T, C); harvest (S,) µJ per slot. The stream is replicated to
@@ -234,22 +417,32 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
     supercap-hysteresis churn (the returned dict gains per-slot ``alive`` /
     ``brownout`` lanes for sensor 0 plus the ``brownout_slots`` /
     ``brownout_events`` counters).  ``None`` is the legacy path, bitwise.
+
+    ``intermittent`` (with ``aux_params``) threads the staged intermittent-
+    inference lane the same way (see :func:`intermittent_lane_step`):
+    DEFER slots become staged progress, and ``completed`` then counts
+    everything but DEFER *and* D6 suspensions — a suspended inference put
+    nothing on the wire yet.
     """
     from .fleet import seeker_fleet_simulate
 
     key = key if key is not None else jax.random.PRNGKey(0)
     s, t, c = windows.shape
+    extra = ({} if intermittent is None else
+             dict(intermittent=intermittent, aux_params=aux_params))
     fleet = seeker_fleet_simulate(
         windows, jnp.broadcast_to(harvest[None], (n_sensors, s)),
         signatures=signatures, qdnn_params=qdnn_params,
         host_params=host_params, gen_params=gen_params, har_cfg=har_cfg,
         aac_table=aac_table, costs=costs, key=key, quant_bits=quant_bits,
-        brownout=brownout)
+        brownout=brownout, **extra)
     # sensor ensemble (paper: host ensembles multiple sensors)
     ens_logits = jnp.mean(fleet["logits"], axis=1)           # (S, L)
     preds = jnp.argmax(ens_logits, axis=-1)
     completed = fleet["decisions"][:, 0] != DEFER
-    return {
+    if intermittent is not None:
+        completed = completed & (fleet["decisions"][:, 0] != D6_PARTIAL)
+    out = {
         "preds": preds,
         "labels": labels,
         "accuracy_completed": jnp.sum((preds == labels) & completed)
@@ -266,6 +459,14 @@ def seeker_simulate(windows: jnp.ndarray, labels: jnp.ndarray,
         "brownout_slots": fleet["brownout_slots"],
         "brownout_events": fleet["brownout_events"],
     }
+    if intermittent is not None:
+        out.update({
+            "it_emit": fleet["it_emit"][:, 0],
+            "it_stage": fleet["it_stage"][:, 0],
+            "it_full": fleet["it_full"],
+            "it_early": fleet["it_early"],
+        })
+    return out
 
 
 def seeker_simulate_reference(windows: jnp.ndarray, labels: jnp.ndarray,

@@ -64,8 +64,24 @@ engine; padding nodes are exogenously dead and never brown "in").
 
 **Streaming** (:func:`seeker_fleet_simulate_streamed`): window streams are
 fed to the scan in ``(chunk,)``-slot segments through the ``state0`` /
-``node_keys`` resume contract, so peak window memory is O(N·chunk·T·C)
-instead of O(N·S·T·C) while traces stay bitwise-equal to one long run.
+``node_keys`` resume contract (documented in docs/RESUME_CONTRACT.md), so
+peak window memory is O(N·chunk·T·C) instead of O(N·S·T·C) while traces
+stay bitwise-equal to one long run.
+
+**Intermittent inference** (``intermittent=IntermittentConfig(...)``): the
+partial-inference lane.  Slots the strict ladder would DEFER instead run as
+many energy-quantized stages of the on-node quantized DNN as ``stored +
+harvested`` affords (:meth:`repro.core.energy.EnergyCosts.stage_costs`),
+suspending the staged activations *in the scan carry*
+(:class:`repro.serving.edge_host.IntermittentState` — a fourth carry lane
+riding the ``state0``/``node_keys`` resume contract bitwise through brown-
+outs and streamed segment boundaries).  An in-flight inference resumes
+before new work starts; completion transmits at full depth (D8), and when
+the remaining stages are unaffordable a confidence-tagged early-exit result
+from the auxiliary head (D7) replaces the freeze-and-lose DEFER.  The lane
+requires ``aux_params`` (:func:`repro.models.har.har_aux_init`) and
+switches the ladder to strict store-and-execute accounting like
+``brownout`` does.  ``intermittent=None`` keeps all three engines bitwise.
 """
 from __future__ import annotations
 
@@ -77,14 +93,16 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.aac import AACTable
 from ..core.coreset import raw_payload_bytes
-from ..core.decision import DEFER
+from ..core.decision import (D4_SAMPLING, D6_PARTIAL, DEFER,
+                             N_INTERMITTENT_DECISIONS, IntermittentConfig)
 from ..core.energy import (BrownoutConfig, EnergyCosts, predictor_init,
                            supercap_step)
 from ..kernels.ops import signature_corr_op
-from ..models.har import HARConfig
+from ..models.har import HARConfig, quantize_params
 from ..sharding import make_mesh_compat, node_mesh_axes, shard_map_compat
-from .edge_host import (SeekerNodeState, seeker_host_step,
-                        seeker_sensor_step_given_corr)
+from .edge_host import (IntermittentState, SeekerNodeState,
+                        intermittent_fleet_init, intermittent_lane_step,
+                        seeker_host_step, seeker_sensor_step_given_corr)
 
 __all__ = ["fleet_node_init", "seeker_fleet_simulate",
            "seeker_fleet_simulate_sharded", "seeker_fleet_simulate_streamed",
@@ -105,7 +123,8 @@ def fleet_node_init(n_nodes: int, predictor_window: int = 8,
 def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, t: int, node_block: int | None,
-                     brownout: BrownoutConfig | None):
+                     brownout: BrownoutConfig | None,
+                     intermittent: IntermittentConfig | None = None):
     """One fleet time slot, shared VERBATIM by the single-device scan and the
     per-shard scan inside ``shard_map`` — the sharded engine sees exactly this
     computation on its local node tile.
@@ -117,10 +136,21 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     mapped body is compiled ONCE at a batch shape independent of fleet size
     or shard layout, so sharded and unsharded runs are bit-identical.
     ``None`` keeps the one-shot full-batch vmap (fastest; bitwise only for
-    integer/energy traces across layouts)."""
+    integer/energy traces across layouts).
 
-    def block_body(state, keys, win_t, harv_t, signatures, qdnn_params,
-                   host_params, gen_params, aac_table):
+    ``intermittent``: the partial-inference lane.  When set, the scan carry
+    gains a stacked :class:`repro.serving.edge_host.IntermittentState` and
+    the per-slot inputs gain the global slot index; the lane runs INSIDE
+    ``block_body`` so its conv/matmul stages see the same microbatch shapes
+    as the ladder (bitwise across shard layouts under a common
+    ``node_block``).  The lane's state obeys the same ``keep()`` freeze as
+    the rest of the carry — a browned-out or dead node's suspended
+    activations survive untouched until it rejoins, which is exactly the
+    suspend-across-brown-out semantics."""
+
+    def block_body(state, keys, it, win_t, harv_t, slot, signatures,
+                   qdnn_params, host_params, gen_params, aac_table,
+                   aux_params):
         # same split discipline as the single-node scan:
         # carry, sensor, host
         ks = jax.vmap(lambda kk: jax.random.split(kk, 3))(keys)  # (B,3,2)
@@ -136,8 +166,42 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                 aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
                 m_samples=m_samples, quant_bits=quant_bits,
                 corr_threshold=corr_threshold,
-                strict_energy=brownout is not None)
+                strict_energy=(brownout is not None
+                               or intermittent is not None))
         )(win_t, state, harv_t, corr, ks[:, 1])
+        if intermittent is not None:
+            # the lane overrides engaged slots AFTER the ladder: in-flight
+            # inferences resume before new work, DEFER slots become staged
+            # progress / early exits.  Quantize the backbone once per slot.
+            qp = quantize_params(qdnn_params, quant_bits)
+            lane = jax.vmap(
+                lambda w, st, h, dec, itn: intermittent_lane_step(
+                    w, st, h, dec, itn, slot, qp=qp, aux_params=aux_params,
+                    har_cfg=har_cfg, costs=costs, quant_bits=quant_bits,
+                    cfg=intermittent,
+                    reserve_uj=(brownout.off_uj if brownout is not None
+                                else 0.0))
+            )(win_t, state, harv_t, out.decision, it)
+            eng = lane.engaged
+            lane_state = SeekerNodeState(
+                stored_uj=jnp.where(eng, lane.stored_uj,
+                                    out.state.stored_uj),
+                predictor=out.state.predictor,
+                prev_label=jnp.where(eng, lane.prev_label,
+                                     out.state.prev_label))
+            # label_or_neg = -1 on engaged slots: the host's one_hot(-1)
+            # contributes zeros, so D6/D7/D8 slots put nothing into the
+            # slot-aligned ensemble (the emitted result belongs to the
+            # SOURCE slot; it is scored through the it_* traces instead)
+            out = out._replace(
+                decision=jnp.where(eng, lane.decision, out.decision),
+                payload_bytes=jnp.where(eng, lane.payload_bytes,
+                                        out.payload_bytes),
+                label_or_neg=jnp.where(eng, -1, out.label_or_neg),
+                state=lane_state)
+            new_it = lane.state
+        else:
+            new_it = None
         host_logits = jax.vmap(
             lambda o, kk: seeker_host_step(
                 o, host_params=host_params, gen_params=gen_params,
@@ -146,12 +210,21 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
         trace = {"decision": out.decision, "payload": out.payload_bytes,
                  "stored": out.state.stored_uj, "k": out.coreset_k,
                  "logits": host_logits}
-        return out.state, ks[:, 0], trace
+        if intermittent is not None:
+            trace.update({"it_emit": lane.emit, "it_label": lane.emit_label,
+                          "it_conf": lane.emit_conf, "it_src": lane.emit_src,
+                          "it_stage": lane.emit_stage})
+        return out.state, ks[:, 0], new_it, trace
 
     def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
-             aac_table):
-        state, keys, browned = carry
-        win_t, harv_t, alive_t = inp
+             aac_table, aux_params=None):
+        if intermittent is None:
+            state, keys, browned = carry
+            win_t, harv_t, alive_t = inp
+            it = slot = None
+        else:
+            state, keys, browned, it = carry
+            win_t, harv_t, alive_t, slot = inp
         n = keys.shape[0]
         # the per-slot alive lane: the exogenous trace composed with the
         # endogenous brown-out flag carried through the scan — a node runs
@@ -161,9 +234,9 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             win_t = jnp.broadcast_to(win_t[None], (n,) + win_t.shape)
 
         if node_block is None or node_block == n:
-            new_state, new_keys, trace = block_body(
-                state, keys, win_t, harv_t, signatures, qdnn_params,
-                host_params, gen_params, aac_table)
+            new_state, new_keys, new_it, trace = block_body(
+                state, keys, it, win_t, harv_t, slot, signatures,
+                qdnn_params, host_params, gen_params, aac_table, aux_params)
         else:
             # fixed-shape microbatches: pad the node axis to the block
             # quantum (rows are independent, padding is sliced off) and map
@@ -180,14 +253,16 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             def ungroup(x):
                 return x.reshape((grp * node_block,) + x.shape[2:])[:n]
 
-            st_g, ks_g, w_g, h_g = jax.tree_util.tree_map(
-                regroup, (state, keys, win_t, harv_t))
-            new_state, new_keys, trace = jax.tree_util.tree_map(
+            st_g, ks_g, it_g, w_g, h_g = jax.tree_util.tree_map(
+                regroup, (state, keys, it, win_t, harv_t))
+            new_state, new_keys, new_it, trace = jax.tree_util.tree_map(
                 ungroup,
                 jax.lax.map(
-                    lambda a: block_body(*a, signatures, qdnn_params,
-                                         host_params, gen_params, aac_table),
-                    (st_g, ks_g, w_g, h_g)))
+                    lambda a: block_body(a[0], a[1], a[2], a[3], a[4], slot,
+                                         signatures, qdnn_params,
+                                         host_params, gen_params, aac_table,
+                                         aux_params),
+                    (st_g, ks_g, it_g, w_g, h_g)))
 
         # --- churn lane: a dead node harvests nothing, freezes its whole
         # carry (charge, predictor, AAC continuity AND its PRNG stream — on
@@ -200,6 +275,11 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 
         new_state = jax.tree_util.tree_map(keep, new_state, state)
         new_keys = keep(new_keys, keys)
+        if intermittent is not None:
+            # suspended staged activations freeze through dead AND browned-
+            # out slots like every other carry lane — suspend-across-
+            # brown-out falls out of the same select
+            new_it = jax.tree_util.tree_map(keep, new_it, it)
         if brownout is not None:
             # --- endogenous brown-out: the MCU is down but the harvester
             # keeps trickle-charging the supercap, so a browned-out (yet
@@ -217,7 +297,7 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             next_browned = jnp.where(alive_t, next_browned, browned)
         else:
             next_browned = browned
-        trace = {
+        out_trace = {
             "decision": jnp.where(alive_eff, trace["decision"], DEFER),
             "payload": jnp.where(alive_eff, trace["payload"], 0.0),
             "stored": new_state.stored_uj,
@@ -227,7 +307,19 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             "brownout": browned,         # the flag the slot was entered with
             "bo_event": next_browned & ~browned,   # brown-out onsets
         }
-        return (new_state, new_keys, next_browned), trace
+        if intermittent is None:
+            return (new_state, new_keys, next_browned), out_trace
+        # a dead/browned-out node ran no lane this slot: its emission lane
+        # is masked like the decision lane (the label/conf/src fields are
+        # only meaningful where it_emit > 0)
+        out_trace.update({
+            "it_emit": jnp.where(alive_eff, trace["it_emit"], 0),
+            "it_label": trace["it_label"],
+            "it_conf": trace["it_conf"],
+            "it_src": trace["it_src"],
+            "it_stage": trace["it_stage"],
+        })
+        return (new_state, new_keys, next_browned, new_it), out_trace
 
     return step
 
@@ -236,30 +328,52 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, node_block: int | None,
-                     brownout: BrownoutConfig | None, donate: bool):
+                     brownout: BrownoutConfig | None, donate: bool,
+                     intermittent: IntermittentConfig | None = None):
     """Compile-cached fleet scan, keyed on the static configuration.
 
     All arrays (params, signatures, windows, state) are jit *arguments*, so
     repeated simulations with the same config — the benchmark's timed
     iterations, a serving loop — reuse the compiled executable instead of
-    re-tracing a fresh closure each call.
+    re-tracing a fresh closure each call.  With ``intermittent`` the run
+    signature gains the stacked lane state, the global slot indices and the
+    auxiliary-head params; without it the legacy signature (and computation)
+    is unchanged.
     """
 
-    def run(state0, keys0, browned0, xs_w, xs_h, xs_alive, signatures,
-            qdnn_params, host_params, gen_params, aac_table):
-        t = xs_w.shape[-2]
-        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
-                                corr_threshold, shared_stream, t, node_block,
-                                brownout)
-        (state, keys, browned), traces = jax.lax.scan(
-            lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                              gen_params, aac_table),
-            (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
-        # the evolved keys (and the brown-out flag) are returned so a resumed
-        # run (state0=final_state, node_keys=final_keys,
-        # brownout_state0=final_brownout) continues each node's PRNG stream
-        # and hysteresis state instead of replaying segment 1's
-        return traces, state, keys, browned
+    if intermittent is None:
+        def run(state0, keys0, browned0, xs_w, xs_h, xs_alive, signatures,
+                qdnn_params, host_params, gen_params, aac_table):
+            t = xs_w.shape[-2]
+            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                    m_samples, corr_threshold, shared_stream,
+                                    t, node_block, brownout)
+            (state, keys, browned), traces = jax.lax.scan(
+                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                                  gen_params, aac_table),
+                (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
+            # the evolved keys (and the brown-out flag) are returned so a
+            # resumed run (state0=final_state, node_keys=final_keys,
+            # brownout_state0=final_brownout) continues each node's PRNG
+            # stream and hysteresis state instead of replaying segment 1's
+            return traces, state, keys, browned
+    else:
+        def run(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive, xs_slots,
+                signatures, qdnn_params, host_params, gen_params, aac_table,
+                aux_params):
+            t = xs_w.shape[-2]
+            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                    m_samples, corr_threshold, shared_stream,
+                                    t, node_block, brownout, intermittent)
+            (state, keys, browned, it), traces = jax.lax.scan(
+                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                                  gen_params, aac_table, aux_params),
+                (state0, keys0, browned0, it0),
+                (xs_w, xs_h, xs_alive, xs_slots))
+            # final_intermittent joins the resume contract: a resumed run
+            # (intermittent_state0=final_intermittent, slot0=slots run so
+            # far) continues suspended inferences instead of dropping them
+            return traces, state, keys, browned, it
 
     # donate the stacked node state (it is returned, so XLA can alias it)
     return jax.jit(run, donate_argnums=(0,) if donate else ())
@@ -272,46 +386,46 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                              corr_threshold: float, shared_stream: bool,
                              per_node_labels: bool,
                              node_block: int | None,
-                             brownout: BrownoutConfig | None, donate: bool):
+                             brownout: BrownoutConfig | None, donate: bool,
+                             intermittent: IntermittentConfig | None = None):
     """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
     ``shard_map`` manual region, each shard scanning its local node tile;
     only the masked fleet aggregates are ``psum``-ed over ``axis_names``.
 
     ``per_node_labels`` switches the accuracy aggregate between one shared
     (S,) label track (replicated) and per-node (S, N) tracks (sharded over
-    the node axes like every other per-node array)."""
+    the node axes like every other per-node array).  With ``intermittent``
+    the body gains the sharded lane state, the replicated slot indices and
+    the replicated aux params, and the psum'd aggregate set grows the
+    emission counters; without it the legacy body is unchanged."""
     nodes = P(axis_names)                    # leading node dim over the mesh
     time_nodes = P(None, axis_names)         # (S, N, ...) time-major traces
     repl = P()                               # replicated (params, bank, mask)
 
-    def shard_body(state0, keys0, browned0, xs_w, xs_h, xs_alive, mask,
-                   labels, signatures, qdnn_params, host_params, gen_params,
-                   aac_table):
-        t = xs_w.shape[-2]
-        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max, m_samples,
-                                corr_threshold, shared_stream, t, node_block,
-                                brownout)
-        (state, keys, browned), traces = jax.lax.scan(
-            lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                              gen_params, aac_table),
-            (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
-
+    def _aggregates(traces, xs_alive, mask, labels, slot0):
         # --- fleet-level aggregates: the ONLY cross-shard traffic ----------
         # the engine's EMITTED alive lane (exogenous trace ∧ ¬browned_out)
         # composes with the static padding mask: inert padding nodes, dead
         # slots and browned-out slots contribute nothing — a node that could
         # not run made no scheduling decision
         act = traces["alive"] & mask[None, :]               # (S, n_local)
-        sent = (traces["decision"] != DEFER) & act
+        if intermittent is None:
+            sent = (traces["decision"] != DEFER) & act
+            n_bins = N_DECISIONS
+        else:
+            # D6 suspends with nothing on the wire; D7/D8 are completions
+            sent = ((traces["decision"] != DEFER)
+                    & (traces["decision"] != D6_PARTIAL) & act)
+            n_bins = N_INTERMITTENT_DECISIONS
         bytes_on_wire = jax.lax.psum(
             jnp.sum(jnp.where(act, traces["payload"], 0.0)), axis_names)
         wire_pair = jax.lax.psum(
             _wire_byte_pair(traces["payload"], act), axis_names)
         hist = jax.lax.psum(
-            jnp.sum(jax.nn.one_hot(traces["decision"], N_DECISIONS,
+            jnp.sum(jax.nn.one_hot(traces["decision"], n_bins,
                                    dtype=jnp.int32)
                     * act[..., None].astype(jnp.int32), axis=(0, 1)),
-            axis_names)                                     # (N_DECISIONS,)
+            axis_names)                                     # (n_bins,)
         completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
         alive_slots = jax.lax.psum(jnp.sum(act.astype(jnp.int32)),
                                    axis_names)
@@ -325,30 +439,111 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
         bo_events = jax.lax.psum(jnp.sum(
             (traces["bo_event"] & mask[None, :]).astype(jnp.int32)),
             axis_names)
+        aggs = {"bytes_on_wire": bytes_on_wire,
+                "bytes_on_wire_i32": wire_pair, "decision_histogram": hist,
+                "completed": completed, "alive_slots": alive_slots,
+                "brownout_slots": bo_slots, "brownout_events": bo_events}
+        if intermittent is not None:
+            emit = traces["it_emit"]
+            aggs["it_full"] = jax.lax.psum(
+                jnp.sum(((emit == 2) & act).astype(jnp.int32)), axis_names)
+            aggs["it_early"] = jax.lax.psum(
+                jnp.sum(((emit == 1) & act).astype(jnp.int32)), axis_names)
+        if labels is None:
+            return aggs
         preds = jnp.argmax(traces["logits"], axis=-1)       # (S, n_local)
         # per-node labels arrive as the shard's own (S, n_local) tile;
         # a shared track is replicated and broadcast over the node axis
         ok = (preds == labels) if per_node_labels else \
             (preds == labels[:, None])
-        correct = jax.lax.psum(
-            jnp.sum((ok & sent).astype(jnp.int32)), axis_names)
-        aggs = {"bytes_on_wire": bytes_on_wire,
-                "bytes_on_wire_i32": wire_pair, "decision_histogram": hist,
-                "completed": completed, "alive_slots": alive_slots,
-                "brownout_slots": bo_slots, "brownout_events": bo_events,
-                "correct": correct}
-        return traces, state, keys, browned, aggs
+        if intermittent is None:
+            aggs["correct"] = jax.lax.psum(
+                jnp.sum((ok & sent).astype(jnp.int32)), axis_names)
+            return aggs
+        # ladder accuracy scores the slot-aligned host logits; emissions
+        # score against the label of their SOURCE slot (gathered through
+        # it_src — the staged window's capture slot).  Sources before this
+        # run's slot0 (a resumed segment finishing a previous segment's
+        # inference) cannot see their labels here and are masked out; the
+        # streamed driver rescores them from the concatenated traces.
+        ladder_sent = sent & (traces["decision"] <= D4_SAMPLING)
+        correct_ladder = jax.lax.psum(
+            jnp.sum((ok & ladder_sent).astype(jnp.int32)), axis_names)
+        s = traces["decision"].shape[0]
+        rel = traces["it_src"] - slot0
+        valid = (traces["it_emit"] > 0) & act & (rel >= 0)
+        rel_c = jnp.clip(rel, 0, s - 1)
+        lab = (jnp.take_along_axis(labels, rel_c, axis=0) if per_node_labels
+               else labels[rel_c])
+        it_ok = (traces["it_label"] == lab) & valid
+        it_correct_full = jax.lax.psum(
+            jnp.sum((it_ok & (traces["it_emit"] == 2)).astype(jnp.int32)),
+            axis_names)
+        it_correct_early = jax.lax.psum(
+            jnp.sum((it_ok & (traces["it_emit"] == 1)).astype(jnp.int32)),
+            axis_names)
+        aggs.update({
+            "correct_ladder": correct_ladder,
+            "it_correct_full": it_correct_full,
+            "it_correct_early": it_correct_early,
+            "correct": correct_ladder + it_correct_full + it_correct_early,
+        })
+        return aggs
+
+    if intermittent is None:
+        def shard_body(state0, keys0, browned0, xs_w, xs_h, xs_alive, mask,
+                       labels, signatures, qdnn_params, host_params,
+                       gen_params, aac_table):
+            t = xs_w.shape[-2]
+            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                    m_samples, corr_threshold, shared_stream,
+                                    t, node_block, brownout)
+            (state, keys, browned), traces = jax.lax.scan(
+                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                                  gen_params, aac_table),
+                (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
+            aggs = _aggregates(traces, xs_alive, mask, labels, None)
+            return traces, state, keys, browned, aggs
+
+        in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
+                    repl if shared_stream else time_nodes,   # xs_w
+                    time_nodes,                       # xs_h (S, N)
+                    time_nodes,                       # xs_alive (S, N)
+                    nodes,                            # mask (N,)
+                    time_nodes if per_node_labels else repl,  # labels
+                    repl, repl, repl, repl, repl)
+        out_specs = (time_nodes, nodes, nodes, nodes, repl)
+    else:
+        it_nodes = IntermittentState(nodes, nodes, nodes, nodes)
+
+        def shard_body(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive,
+                       xs_slots, mask, labels, signatures, qdnn_params,
+                       host_params, gen_params, aac_table, aux_params):
+            t = xs_w.shape[-2]
+            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                    m_samples, corr_threshold, shared_stream,
+                                    t, node_block, brownout, intermittent)
+            (state, keys, browned, it), traces = jax.lax.scan(
+                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
+                                  gen_params, aac_table, aux_params),
+                (state0, keys0, browned0, it0),
+                (xs_w, xs_h, xs_alive, xs_slots))
+            aggs = _aggregates(traces, xs_alive, mask, labels, xs_slots[0])
+            return traces, state, keys, browned, it, aggs
+
+        in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
+                    it_nodes,                         # it0 (lane state)
+                    repl if shared_stream else time_nodes,   # xs_w
+                    time_nodes,                       # xs_h (S, N)
+                    time_nodes,                       # xs_alive (S, N)
+                    repl,                             # xs_slots (S,)
+                    nodes,                            # mask (N,)
+                    time_nodes if per_node_labels else repl,  # labels
+                    repl, repl, repl, repl, repl, repl)
+        out_specs = (time_nodes, nodes, nodes, nodes, it_nodes, repl)
 
     fn = shard_map_compat(
-        shard_body, mesh,
-        in_specs=(nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
-                  repl if shared_stream else time_nodes,   # xs_w
-                  time_nodes,                       # xs_h (S, N)
-                  time_nodes,                       # xs_alive (S, N)
-                  nodes,                            # mask (N,)
-                  time_nodes if per_node_labels else repl,  # labels
-                  repl, repl, repl, repl, repl),
-        out_specs=(time_nodes, nodes, nodes, nodes, repl),
+        shard_body, mesh, in_specs=in_specs, out_specs=out_specs,
         axis_names=frozenset(axis_names))
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
@@ -462,21 +657,61 @@ def _resolve_brownout0(brownout_state0, state0: SeekerNodeState,
     return jnp.zeros((n,), bool)
 
 
+def _validate_intermittent_args(intermittent, intermittent_state0,
+                                aux_params, n: int) -> None:
+    """Reject half-configured intermittent runs before tracing: the lane
+    needs its auxiliary heads, and a resumed lane state without the lane
+    enabled would silently be ignored."""
+    if intermittent is None:
+        if intermittent_state0 is not None:
+            raise ValueError(
+                "intermittent_state0 was passed but intermittent is None — "
+                "a resumed lane state without the lane enabled would be "
+                "silently dropped; pass the IntermittentConfig too")
+        return
+    if aux_params is None:
+        raise ValueError(
+            "intermittent inference needs the early-exit auxiliary heads: "
+            "pass aux_params=har_aux_init(key, har_cfg)")
+    if intermittent_state0 is not None:
+        lead = intermittent_state0.stage.shape[0]
+        if lead != n:
+            raise ValueError(
+                f"intermittent_state0 is stacked for {lead} nodes, "
+                f"fleet has {n}")
+
+
 def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
-                      labels: jnp.ndarray | None, per_node: bool) -> dict:
+                      labels: jnp.ndarray | None, per_node: bool,
+                      intermittent: IntermittentConfig | None = None,
+                      slot0: int = 0) -> dict:
     """Masked fleet aggregates from (S, N) traces — the single-device
     mirror of the sharded engine's psum'd quantities (int counters are
     exactly equal across engines; tests cross-check them).  The activity
     mask is the engine's EMITTED alive lane (exogenous ∧ ¬browned_out);
     ``exo_alive`` is the exogenous trace alone, needed to count the slots
-    the brown-out hysteresis suppressed."""
+    the brown-out hysteresis suppressed.
+
+    With ``intermittent`` the completion aggregate excludes D6 (a suspended
+    inference put nothing on the wire), the histogram grows to the 9-code
+    ladder, and emission counters + source-slot-scored accuracy splits are
+    added; ``slot0`` is the absolute slot index of this run's first slot —
+    emissions whose ``it_src`` predates it (a resumed segment finishing an
+    earlier segment's inference) are masked out of the accuracy counters
+    here and rescored by the streamed driver over the concatenated traces."""
     act = traces["alive"]
-    sent = (traces["decision"] != DEFER) & act
+    if intermittent is None:
+        sent = (traces["decision"] != DEFER) & act
+        n_bins = N_DECISIONS
+    else:
+        sent = ((traces["decision"] != DEFER)
+                & (traces["decision"] != D6_PARTIAL) & act)
+        n_bins = N_INTERMITTENT_DECISIONS
     aggs = {
         "bytes_on_wire": jnp.sum(jnp.where(act, traces["payload"], 0.0)),
         "bytes_on_wire_i32": _wire_byte_pair(traces["payload"], act),
         "decision_histogram": jnp.sum(
-            jax.nn.one_hot(traces["decision"], N_DECISIONS, dtype=jnp.int32)
+            jax.nn.one_hot(traces["decision"], n_bins, dtype=jnp.int32)
             * act[..., None].astype(jnp.int32), axis=(0, 1)),
         "completed": jnp.sum(sent.astype(jnp.int32)),
         "alive_slots": jnp.sum(act.astype(jnp.int32)),
@@ -484,10 +719,35 @@ def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
             (traces["brownout"] & exo_alive).astype(jnp.int32)),
         "brownout_events": jnp.sum(traces["bo_event"].astype(jnp.int32)),
     }
-    if labels is not None:
-        preds = jnp.argmax(traces["logits"], axis=-1)
-        ok = (preds == labels) if per_node else (preds == labels[:, None])
+    if intermittent is not None:
+        emit = traces["it_emit"]
+        aggs["it_full"] = jnp.sum(((emit == 2) & act).astype(jnp.int32))
+        aggs["it_early"] = jnp.sum(((emit == 1) & act).astype(jnp.int32))
+    if labels is None:
+        return aggs
+    preds = jnp.argmax(traces["logits"], axis=-1)
+    ok = (preds == labels) if per_node else (preds == labels[:, None])
+    if intermittent is None:
         aggs["correct"] = jnp.sum((ok & sent).astype(jnp.int32))
+        return aggs
+    # ladder accuracy scores the slot-aligned host logits; lane emissions
+    # score against the label of their SOURCE slot (the staged window's
+    # capture slot, gathered through it_src)
+    ladder_sent = sent & (traces["decision"] <= D4_SAMPLING)
+    s = traces["decision"].shape[0]
+    rel = traces["it_src"] - slot0
+    valid = (traces["it_emit"] > 0) & act & (rel >= 0)
+    rel_c = jnp.clip(rel, 0, s - 1)
+    lab = (jnp.take_along_axis(labels, rel_c, axis=0) if per_node
+           else labels[rel_c])
+    it_ok = (traces["it_label"] == lab) & valid
+    aggs["correct_ladder"] = jnp.sum((ok & ladder_sent).astype(jnp.int32))
+    aggs["it_correct_full"] = jnp.sum(
+        (it_ok & (traces["it_emit"] == 2)).astype(jnp.int32))
+    aggs["it_correct_early"] = jnp.sum(
+        (it_ok & (traces["it_emit"] == 1)).astype(jnp.int32))
+    aggs["correct"] = (aggs["correct_ladder"] + aggs["it_correct_full"]
+                       + aggs["it_correct_early"])
     return aggs
 
 
@@ -507,7 +767,11 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           brownout: BrownoutConfig | None = None,
                           brownout_state0: jnp.ndarray | None = None,
                           node_block: int | None = None,
-                          donate: bool = True):
+                          donate: bool = True,
+                          intermittent: IntermittentConfig | None = None,
+                          intermittent_state0: IntermittentState | None = None,
+                          aux_params: dict | None = None,
+                          slot0: int = 0):
     """Simulate N independent Seeker nodes over S time slots in one scan.
 
     Args:
@@ -556,6 +820,23 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         donate: donate the stacked node state to the jitted run so XLA can
             alias its buffers into the returned final state (the key array
             has no matching output and is never donated).
+        intermittent: optional :class:`repro.core.decision.IntermittentConfig`
+            — enables the staged intermittent-inference lane: slots the
+            ladder would DEFER instead advance a staged quantized inference
+            as far as this slot's strict ``stored + harvested`` budget
+            affords, suspending the activations in the scan carry across
+            slots and brown-outs (see docs/ENERGY_MODEL.md).  Requires
+            ``aux_params`` (:func:`repro.models.har.har_aux_init`).  ``None``
+            keeps the engine bitwise-identical to the legacy path.
+        intermittent_state0: optional stacked
+            :class:`repro.serving.edge_host.IntermittentState` to resume a
+            suspended fleet from (a previous run's ``final_intermittent``).
+        aux_params: early-exit auxiliary head params (required with
+            ``intermittent``).
+        slot0: absolute slot index of this run's first slot — the streamed
+            driver passes its segment offset so ``it_src`` emission sources
+            stay globally indexed and segment chains stay bitwise equal to
+            one long run.
 
     Returns a dict of per-node traces, time-major:
         ``decisions``/``payload_bytes``/``stored_uj``/``k_trace``: (S, N),
@@ -574,6 +855,15 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         ``raw_bytes_per_window``: () the uncompressed (T, C) baseline per
             window (all channels, the benchmarks' raw-equivalent convention),
         ``final_state``: stacked ``SeekerNodeState``.
+
+    With ``intermittent`` the dict additionally carries the lane traces
+    ``it_emit`` (S, N) int32 (0 none / 1 early exit / 2 full depth),
+    ``it_label``/``it_src``/``it_stage``/``it_conf`` (S, N), the counters
+    ``it_full``/``it_early`` (and, with labels, ``correct_ladder``/
+    ``it_correct_full``/``it_correct_early``), and ``final_intermittent``
+    (stacked :class:`~repro.serving.edge_host.IntermittentState`) for
+    resuming; ``correct`` then sums ladder + lane completions, each scored
+    against its source slot's label.
     """
     costs = costs or EnergyCosts()
     key = key if key is not None else jax.random.PRNGKey(0)
@@ -594,14 +884,28 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
     keys0 = (node_keys if node_keys is not None else
              jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n)))
     browned0 = _resolve_brownout0(brownout_state0, state0, brownout, n)
+    _validate_intermittent_args(intermittent, intermittent_state0,
+                                aux_params, n)
     run_fn = _build_fleet_run(har_cfg, costs, quant_bits, k_max, m_samples,
                               corr_threshold, shared_stream, node_block,
-                              brownout, donate)
-    traces, final_state, final_keys, final_brownout = run_fn(
-        state0, keys0, browned0, xs_windows, harvest.T, alive_t, signatures,
-        qdnn_params, host_params, gen_params, aac_table)
+                              brownout, donate, intermittent)
+    final_intermittent = None
+    if intermittent is None:
+        traces, final_state, final_keys, final_brownout = run_fn(
+            state0, keys0, browned0, xs_windows, harvest.T, alive_t,
+            signatures, qdnn_params, host_params, gen_params, aac_table)
+    else:
+        it0 = (intermittent_state0 if intermittent_state0 is not None
+               else intermittent_fleet_init(n, har_cfg))
+        xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
+        (traces, final_state, final_keys, final_brownout,
+         final_intermittent) = run_fn(
+            state0, keys0, browned0, it0, xs_windows, harvest.T, alive_t,
+            xs_slots, signatures, qdnn_params, host_params, gen_params,
+            aac_table, aux_params)
 
-    aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels)
+    aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels,
+                             intermittent, slot0)
     out = {
         "decisions": traces["decision"],                      # (S, N)
         "payload_bytes": traces["payload"],                   # (S, N)
@@ -626,10 +930,25 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         "final_keys": final_keys,
         "final_brownout": final_brownout,
     }
+    if intermittent is not None:
+        out.update({
+            "it_emit": traces["it_emit"],                     # (S, N)
+            "it_label": traces["it_label"],                   # (S, N)
+            "it_conf": traces["it_conf"],                     # (S, N)
+            "it_src": traces["it_src"],                       # (S, N)
+            "it_stage": traces["it_stage"],                   # (S, N)
+            "it_full": aggs["it_full"],
+            "it_early": aggs["it_early"],
+            "final_intermittent": final_intermittent,
+        })
     if labels is not None:
         out["correct"] = aggs["correct"]
         out["fleet_accuracy"] = (aggs["correct"]
                                  / jnp.maximum(aggs["completed"], 1))
+        if intermittent is not None:
+            out["correct_ladder"] = aggs["correct_ladder"]
+            out["it_correct_full"] = aggs["it_correct_full"]
+            out["it_correct_early"] = aggs["it_correct_early"]
     return out
 
 
@@ -648,7 +967,11 @@ def seeker_fleet_simulate_sharded(
         alive: jnp.ndarray | None = None,
         brownout: BrownoutConfig | None = None,
         brownout_state0: jnp.ndarray | None = None,
-        node_block: int | None = None, donate: bool = True):
+        node_block: int | None = None, donate: bool = True,
+        intermittent: IntermittentConfig | None = None,
+        intermittent_state0: IntermittentState | None = None,
+        aux_params: dict | None = None,
+        slot0: int = 0):
     """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
 
     The fleet's node dim is split over the mesh axes the ``"nodes"`` logical
@@ -682,6 +1005,13 @@ def seeker_fleet_simulate_sharded(
             and ``brownout_events`` join the psum'd aggregate set.  Padding
             nodes are exogenously dead, so their flag stays frozen — they
             never brown "in" and never count.
+        intermittent: optional staged-inference lane (see
+            :func:`seeker_fleet_simulate`) — the lane state is sharded over
+            the node axes like every other per-node carry; padding nodes
+            start (and stay) inert.  Lane emission counters and the
+            source-slot-scored accuracy splits join the psum'd set.  A
+            common ``node_block`` in both engines makes lane traces
+            bit-identical across shard layouts, same as the host logits.
 
     Extra returns: ``decision_histogram`` (N_DECISIONS,) int32 fleet-wide
     decision counts over alive slots, ``completed``/``alive_slots`` () int32,
@@ -739,14 +1069,31 @@ def seeker_fleet_simulate_sharded(
     browned0 = jnp.pad(
         _resolve_brownout0(brownout_state0, state_full, brownout, n),
         (0, pad))
+    _validate_intermittent_args(intermittent, intermittent_state0,
+                                aux_params, n)
     run_fn = _build_fleet_run_sharded(
         mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
         corr_threshold, shared_stream, per_node_labels, node_block,
-        brownout, donate)
-    traces, final_state, final_keys, final_brownout, aggs = run_fn(
-        state_full, keys0, browned0, xs_windows, harvest_t, alive_t, mask,
-        labels_arr, signatures, qdnn_params, host_params, gen_params,
-        aac_table)
+        brownout, donate, intermittent)
+    final_intermittent = None
+    if intermittent is None:
+        traces, final_state, final_keys, final_brownout, aggs = run_fn(
+            state_full, keys0, browned0, xs_windows, harvest_t, alive_t,
+            mask, labels_arr, signatures, qdnn_params, host_params,
+            gen_params, aac_table)
+    else:
+        it0 = (intermittent_state0 if intermittent_state0 is not None
+               else intermittent_fleet_init(n, har_cfg))
+        if pad:   # inert lane rows for padding nodes (never engage: dead)
+            filler = intermittent_fleet_init(pad, har_cfg)
+            it0 = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), it0, filler)
+        xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
+        (traces, final_state, final_keys, final_brownout, final_intermittent,
+         aggs) = run_fn(
+            state_full, keys0, browned0, it0, xs_windows, harvest_t, alive_t,
+            xs_slots, mask, labels_arr, signatures, qdnn_params, host_params,
+            gen_params, aac_table, aux_params)
 
     out = {
         "decisions": traces["decision"][:, :n],               # (S, N)
@@ -774,10 +1121,26 @@ def seeker_fleet_simulate_sharded(
         "padded_nodes": pad,
         "node_axes": axis_names,
     }
+    if intermittent is not None:
+        out.update({
+            "it_emit": traces["it_emit"][:, :n],              # (S, N)
+            "it_label": traces["it_label"][:, :n],            # (S, N)
+            "it_conf": traces["it_conf"][:, :n],              # (S, N)
+            "it_src": traces["it_src"][:, :n],                # (S, N)
+            "it_stage": traces["it_stage"][:, :n],            # (S, N)
+            "it_full": aggs["it_full"],
+            "it_early": aggs["it_early"],
+            "final_intermittent": jax.tree_util.tree_map(
+                lambda a: a[:n], final_intermittent),
+        })
     if labels is not None:
         out["correct"] = aggs["correct"]
         out["fleet_accuracy"] = (aggs["correct"]
                                  / jnp.maximum(aggs["completed"], 1))
+        if intermittent is not None:
+            out["correct_ladder"] = aggs["correct_ladder"]
+            out["it_correct_full"] = aggs["it_correct_full"]
+            out["it_correct_early"] = aggs["it_correct_early"]
     return out
 
 
@@ -796,7 +1159,10 @@ def seeker_fleet_simulate_streamed(
         alive: jnp.ndarray | None = None,
         brownout: BrownoutConfig | None = None,
         brownout_state0: jnp.ndarray | None = None,
-        node_block: int | None = None, donate: bool = True):
+        node_block: int | None = None, donate: bool = True,
+        intermittent: IntermittentConfig | None = None,
+        intermittent_state0: IntermittentState | None = None,
+        aux_params: dict | None = None):
     """Feed the fleet scan in ``chunk``-slot window segments instead of
     materializing the whole (N, S, T, C) stream up front.
 
@@ -820,6 +1186,15 @@ def seeker_fleet_simulate_streamed(
         brownout: endogenous brown-out config — the flag rides the
             ``state0``/``node_keys`` resume contract bitwise: each segment
             resumes from the previous segment's ``final_brownout``.
+        intermittent: staged intermittent-inference lane — the suspended
+            activations ride the resume contract too: each segment resumes
+            from the previous segment's ``final_intermittent``, and each
+            segment is launched at its absolute ``slot0`` offset so a staged
+            inference suspended in one segment and emitted in the next keeps
+            its globally indexed source slot.  Accuracy for lane emissions is
+            rescored over the CONCATENATED traces (a segment cannot see the
+            labels of windows captured before its first slot), so
+            ``correct``/``fleet_accuracy`` again exactly match one long run.
 
     Returns the engine dict with traces concatenated over time, counter
     aggregates (``decision_histogram``, ``completed``, ``alive_slots``,
@@ -853,13 +1228,24 @@ def seeker_fleet_simulate_streamed(
               quant_bits=quant_bits, k_max=k_max, m_samples=m_samples,
               corr_threshold=corr_threshold,
               predictor_window=predictor_window, initial_uj=initial_uj,
-              brownout=brownout, node_block=node_block, donate=donate)
+              brownout=brownout, node_block=node_block, donate=donate,
+              intermittent=intermittent, aux_params=aux_params)
     if mesh is not None:
         kw["mesh"] = mesh
     engine = (seeker_fleet_simulate if mesh is None
               else seeker_fleet_simulate_sharded)
 
+    trace_keys = ["decisions", "payload_bytes", "stored_uj", "k_trace",
+                  "logits", "preds", "alive", "brownout"]
+    counter_keys = ["decision_histogram", "completed", "alive_slots",
+                    "brownout_slots", "brownout_events", "correct"]
+    if intermittent is not None:
+        trace_keys += ["it_emit", "it_label", "it_conf", "it_src",
+                       "it_stage"]
+        counter_keys += ["it_full", "it_early", "correct_ladder"]
+
     state, keys, browned = state0, node_keys, brownout_state0
+    it_state = intermittent_state0
     parts: list[dict] = []
     counters: dict = {}
     bytes_on_wire = jnp.zeros((), jnp.float32)
@@ -871,16 +1257,18 @@ def seeker_fleet_simulate_streamed(
             seg_kw["labels"] = labels_full[start:stop]
         if alive_full is not None:
             seg_kw["alive"] = alive_full[:, start:stop]
+        if intermittent is not None:
+            seg_kw["intermittent_state0"] = it_state
+            seg_kw["slot0"] = start
         res = engine(window_fn(start, stop), harvest[:, start:stop],
                      state0=state, node_keys=keys, brownout_state0=browned,
                      **seg_kw)
         state, keys = res["final_state"], res["final_keys"]
         browned = res["final_brownout"]
-        parts.append({k: res[k] for k in
-                      ("decisions", "payload_bytes", "stored_uj", "k_trace",
-                       "logits", "preds", "alive", "brownout")})
-        for k in ("decision_histogram", "completed", "alive_slots",
-                  "brownout_slots", "brownout_events", "correct"):
+        if intermittent is not None:
+            it_state = res["final_intermittent"]
+        parts.append({k: res[k] for k in trace_keys})
+        for k in counter_keys:
             if k in res:
                 counters[k] = counters.get(k, 0) + res[k]
         # the exact byte pair needs its carry propagated each segment: a
@@ -908,8 +1296,31 @@ def seeker_fleet_simulate_streamed(
         "final_brownout": browned,
         "n_chunks": -(-s // chunk),
     })
+    if intermittent is not None:
+        out["final_intermittent"] = it_state
     if "correct" in counters:
-        out["fleet_accuracy"] = (counters["correct"]
+        if intermittent is not None:
+            # a segment cannot score an emission whose window was captured
+            # in an EARLIER segment (its label is out of the segment's
+            # view), so the per-segment it_correct counters undercount
+            # exactly the cross-segment completions — rescore the lane over
+            # the concatenated traces, where every source slot is visible
+            rel = out["it_src"]                  # driver runs from slot 0
+            valid = (out["it_emit"] > 0) & out["alive"] & (rel >= 0)
+            rel_c = jnp.clip(rel, 0, s - 1)
+            lab = (jnp.take_along_axis(labels_full.astype(jnp.int32), rel_c,
+                                       axis=0)
+                   if labels_full.ndim == 2
+                   else labels_full.astype(jnp.int32)[rel_c])
+            it_ok = (out["it_label"] == lab) & valid
+            out["it_correct_full"] = jnp.sum(
+                (it_ok & (out["it_emit"] == 2)).astype(jnp.int32))
+            out["it_correct_early"] = jnp.sum(
+                (it_ok & (out["it_emit"] == 1)).astype(jnp.int32))
+            out["correct"] = (counters["correct_ladder"]
+                              + out["it_correct_full"]
+                              + out["it_correct_early"])
+        out["fleet_accuracy"] = (out["correct"]
                                  / jnp.maximum(counters["completed"], 1))
     if mesh is not None:
         out["padded_nodes"] = res["padded_nodes"]

@@ -1,0 +1,107 @@
+"""The docs tier doesn't rot: links resolve, code references exist.
+
+Checks every page under ``docs/`` plus the README for
+
+- relative markdown links (``[text](target)``) pointing at files that
+  actually exist in the repo;
+- backticked dotted references (``repro.module.symbol``) that must resolve
+  via importlib — a renamed function invalidates the page that cites it;
+- backticked file paths (``serving/fleet.py``-style) that must exist under
+  the repo root, ``src/`` or ``src/repro/``;
+- ``tests/test_x.py::test_name`` references whose named test function must
+  be defined in that file.
+
+Fenced code blocks are excluded (ASCII diagrams and module-map trees are
+illustrations, not references).
+"""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_PAGES = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+_FENCE = re.compile(r"```.*?```", re.DOTALL)
+_LINK = re.compile(r"\[[^\]]+\]\(([^)]+)\)")
+_SPAN = re.compile(r"`([^`]+)`")
+_DOTTED = re.compile(r"^repro(\.\w+)+$")
+_PATH = re.compile(r"^[\w./-]*/[\w.-]+\.(py|md)$")
+_TEST_REF = re.compile(r"(tests/[\w/.-]+\.py)::(\w+)")
+
+
+def _prose(page: Path) -> str:
+    return _FENCE.sub("", page.read_text())
+
+
+def _resolves(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+@pytest.mark.parametrize("page", DOC_PAGES, ids=lambda p: p.name)
+def test_docs_exist_and_nonempty(page):
+    assert page.is_file() and page.stat().st_size > 0
+
+
+@pytest.mark.parametrize("page", DOC_PAGES, ids=lambda p: p.name)
+def test_relative_links_resolve(page):
+    broken = []
+    for target in _LINK.findall(_prose(page)):
+        if "://" in target or target.startswith("#"):
+            continue
+        rel = target.split("#")[0]
+        if not (page.parent / rel).exists():
+            broken.append(target)
+    assert not broken, f"{page.name}: broken links {broken}"
+
+
+@pytest.mark.parametrize("page", DOC_PAGES, ids=lambda p: p.name)
+def test_code_references_resolve(page):
+    broken = []
+    for span in _SPAN.findall(_prose(page)):
+        if _DOTTED.match(span) and not _resolves(span):
+            broken.append(span)
+    assert not broken, f"{page.name}: dangling code references {broken}"
+
+
+@pytest.mark.parametrize("page", DOC_PAGES, ids=lambda p: p.name)
+def test_file_path_references_resolve(page):
+    broken = []
+    for span in _SPAN.findall(_prose(page)):
+        span = span.rstrip("/")
+        if not _PATH.match(span):
+            continue
+        roots = (REPO, REPO / "src", REPO / "src" / "repro")
+        if not any((r / span).exists() for r in roots):
+            broken.append(span)
+    assert not broken, f"{page.name}: dangling file references {broken}"
+
+
+@pytest.mark.parametrize("page", DOC_PAGES, ids=lambda p: p.name)
+def test_test_references_resolve(page):
+    broken = []
+    for path, func in _TEST_REF.findall(page.read_text()):
+        f = REPO / path
+        if not f.is_file() or f"def {func}(" not in f.read_text():
+            broken.append(f"{path}::{func}")
+    assert not broken, f"{page.name}: dangling test references {broken}"
+
+
+def test_readme_links_every_docs_page():
+    readme = (REPO / "README.md").read_text()
+    missing = [p.name for p in (REPO / "docs").glob("*.md")
+               if f"docs/{p.name}" not in readme]
+    assert not missing, f"docs pages not linked from README: {missing}"

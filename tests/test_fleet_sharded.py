@@ -327,6 +327,76 @@ print("OK")
 """
 
 
+_INTERMITTENT_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core import (BrownoutConfig, IntermittentConfig,
+                        fleet_harvest_traces)
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_aux_init, har_init
+from repro.serving import (seeker_fleet_simulate,
+                           seeker_fleet_simulate_sharded,
+                           seeker_fleet_simulate_streamed, wire_bytes_exact)
+from repro.sharding import make_mesh_compat
+
+assert jax.device_count() == 8, jax.device_count()
+S, N, BLOCK = 8, 13, 4
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+aux = har_aux_init(jax.random.fold_in(key, 7), HAR)
+gen = init_generator(key, HAR.window, HAR.channels)
+wins, labels = har_stream(key, S)
+harvest = fleet_harvest_traces(key, N, S) * 0.04      # scarce: DEFER-heavy
+mesh = make_mesh_compat((8,), ("data",))
+kw = dict(signatures=class_signatures(), qdnn_params=params,
+          host_params=params, gen_params=gen, har_cfg=HAR, node_block=BLOCK,
+          donate=False, initial_uj=12.0, labels=labels,
+          brownout=BrownoutConfig(), intermittent=IntermittentConfig(),
+          aux_params=aux)
+
+IT_KEYS = ("decisions", "payload_bytes", "stored_uj", "logits", "alive",
+           "brownout", "it_emit", "it_label", "it_conf", "it_src",
+           "it_stage")
+COUNTERS = ("completed", "alive_slots", "brownout_slots", "it_full",
+            "it_early", "correct", "correct_ladder", "it_correct_full",
+            "it_correct_early")
+
+# --- intermittent lane: sharded == single-device bitwise, N=13 pads --------
+ref = seeker_fleet_simulate(wins, harvest, **kw)
+assert int(ref["it_full"]) + int(ref["it_early"]) > 0, "lane must emit"
+sh = seeker_fleet_simulate_sharded(wins, harvest, mesh=mesh, **kw)
+assert sh["padded_nodes"] == 3
+for k in IT_KEYS:
+    np.testing.assert_array_equal(np.asarray(sh[k]), np.asarray(ref[k]),
+                                  err_msg=k)
+for k in COUNTERS:
+    assert int(sh[k]) == int(ref[k]), (k, int(sh[k]), int(ref[k]))
+np.testing.assert_array_equal(np.asarray(sh["decision_histogram"]),
+                              np.asarray(ref["decision_histogram"]))
+jax.tree_util.tree_map(
+    lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+    sh["final_intermittent"], ref["final_intermittent"])
+assert wire_bytes_exact(sh) == wire_bytes_exact(ref)
+print("sharded intermittent OK")
+
+# --- streamed sharded: suspended progress rides the resume contract --------
+stream = seeker_fleet_simulate_streamed(wins, harvest, chunk=3, mesh=mesh,
+                                        **kw)
+for k in IT_KEYS:
+    np.testing.assert_array_equal(np.asarray(stream[k]), np.asarray(sh[k]),
+                                  err_msg="streamed " + k)
+for k in COUNTERS:
+    assert int(stream[k]) == int(sh[k]), k
+jax.tree_util.tree_map(
+    lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+    stream["final_intermittent"], sh["final_intermittent"])
+print("streamed sharded intermittent OK")
+print("OK")
+"""
+
+
 _PER_SHARD_HOST_CODE = """
 import numpy as np
 import jax, jax.numpy as jnp
@@ -418,6 +488,17 @@ def test_sharded_brownout_parity_8dev():
     guarantee (N=13 on 8 devices), and the exact int32-pair byte counter
     against an int64 recomputation."""
     assert "OK" in _run(_BROWNOUT_CODE, devices=8)
+
+
+@pytest.mark.slow
+def test_sharded_intermittent_parity_8dev():
+    """ISSUE 7 acceptance on the mesh: the staged intermittent-inference
+    lane is bitwise identical single-device vs sharded vs streamed under
+    scarce harvest + brown-outs — it_* traces, the 9-bin histogram, the
+    psum'd completion/accuracy counters (exact ints), suspended progress
+    chained through the resume contract, and padding nodes (N=13 on 8
+    devices) never entering any lane aggregate."""
+    assert "OK" in _run(_INTERMITTENT_CODE, devices=8)
 
 
 @pytest.mark.slow

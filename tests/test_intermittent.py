@@ -1,0 +1,331 @@
+"""Intermittent inference across brown-outs (ISSUE 7).
+
+The contracts pinned here (the sharded mirror lives in
+tests/test_fleet_sharded.py's ``_INTERMITTENT_CODE`` subprocess snippet):
+
+* the staged forward pass is the quantized forward pass: running the three
+  stages through the activation buffer reproduces ``har_apply_quantized``
+  bitwise, so suspending between stages cannot change the answer;
+* per-stage strict spend: under ANY (stored, harvested, progress) the
+  lane's spend never exceeds ``stored + harvested`` — PR 5 semantics per
+  stage, and the brown-out reserve is honoured by everything past sensing;
+* the resume contract (docs/RESUME_CONTRACT.md): a manual split run and the
+  streamed driver both equal one long run BITWISE, including inferences
+  suspended across segment boundaries and brown-outs;
+* early exits are confidence-gated and monotone in ``exit_threshold``;
+* the per-source-slot accuracy gather matches a numpy recomputation from
+  the raw traces;
+* ``intermittent=None`` keeps the engine bitwise-identical to the legacy
+  path, and half-configured runs raise instead of silently dropping state;
+* the acceptance metric: under scarce harvest the staged lane completes
+  strictly more inferences than freeze-and-lose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.configs.seeker_har import HAR
+from repro.core import (
+    D6_PARTIAL, D7_EARLY_EXIT, D8_STAGED_FULL, DEFER, EnergyCosts,
+    N_INTERMITTENT_DECISIONS, BrownoutConfig, IntermittentConfig,
+    fleet_harvest_traces,
+)
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import (har_act_buffer, har_apply_quantized,
+                              har_apply_staged, har_aux_init, har_init,
+                              quantize_params)
+from repro.serving import (IntermittentState, SeekerNodeState,
+                           intermittent_fleet_init, intermittent_lane_step,
+                           seeker_fleet_simulate,
+                           seeker_fleet_simulate_streamed, seeker_node_init)
+
+S, N = 18, 4
+SCARCITY = 0.04          # the benchmark's scarce-harvest regime
+CFG = IntermittentConfig()
+BO = BrownoutConfig()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    aux = har_aux_init(jax.random.fold_in(key, 7), HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    wins, labels = har_stream(key, S)
+    harvest = fleet_harvest_traces(key, N, S) * SCARCITY
+    kw = dict(signatures=class_signatures(), qdnn_params=params,
+              host_params=params, gen_params=gen, har_cfg=HAR, key=key,
+              labels=labels, donate=False, initial_uj=12.0, brownout=BO)
+    return key, params, aux, wins, labels, harvest, kw
+
+
+def _it_kw(kw, aux, cfg=CFG):
+    out = dict(kw)
+    out.update(intermittent=cfg, aux_params=aux)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The staged forward pass
+# ---------------------------------------------------------------------------
+
+def test_staged_matches_quantized_bitwise():
+    """Cutting the quantized DNN at the pooling boundaries and threading the
+    flat activation buffer through reproduces the one-shot pass bitwise —
+    suspension points cannot change the classification."""
+    key = jax.random.PRNGKey(1)
+    params = har_init(key, HAR)
+    wins = jax.random.normal(jax.random.fold_in(key, 2),
+                             (5, HAR.window, HAR.channels))
+    for bits in (16, 12):
+        for w in wins:
+            ref = har_apply_quantized(params, w[None], bits)[0]
+            staged = har_apply_staged(params, w, bits, HAR)
+            np.testing.assert_array_equal(np.asarray(ref),
+                                          np.asarray(staged))
+
+
+def test_stage_costs_partition_the_quantized_inference():
+    c = EnergyCosts()
+    assert np.isclose(sum(c.stage_costs(16)), c.dnn16)
+    assert np.isclose(sum(c.stage_costs(12)), c.dnn12)
+    assert len(c.decision_costs()) == N_INTERMITTENT_DECISIONS
+
+
+# ---------------------------------------------------------------------------
+# Per-stage strict spend + the brown-out reserve
+# ---------------------------------------------------------------------------
+
+def _lane(stored, harvested, stage, active, reserve=0.0,
+          cfg=CFG, slot=3):
+    key = jax.random.PRNGKey(4)
+    params = har_init(key, HAR)
+    aux = har_aux_init(jax.random.fold_in(key, 7), HAR)
+    qp = quantize_params(params, 16)
+    window = jax.random.normal(jax.random.fold_in(key, 5),
+                               (HAR.window, HAR.channels))
+    state = seeker_node_init(initial_uj=float(stored))
+    it = IntermittentState(
+        active=jnp.asarray(bool(active)),
+        stage=jnp.asarray(int(stage), jnp.int32),
+        acts=jnp.abs(jax.random.normal(jax.random.fold_in(key, 6),
+                                       (har_act_buffer(HAR),))),
+        src_slot=jnp.asarray(1, jnp.int32))
+    return intermittent_lane_step(
+        window, state, jnp.asarray(float(harvested)), jnp.asarray(DEFER),
+        it, jnp.asarray(slot, jnp.int32), qp=qp, aux_params=aux,
+        har_cfg=HAR, costs=EnergyCosts(), quant_bits=16, cfg=cfg,
+        reserve_uj=reserve)
+
+
+@settings(max_examples=24, deadline=None)
+@given(stored=st.floats(0, 40), harvested=st.floats(0, 20),
+       stage=st.integers(0, 3), active=st.integers(0, 1))
+def test_lane_strict_spend(stored, harvested, stage, active):
+    """The lane's acceptance property: whatever the suspended progress, the
+    slot's spend is payable from stored + harvested alone."""
+    out = _lane(stored, harvested, stage, active)
+    spend = float(out.spend)
+    assert 0.0 <= spend <= stored + harvested + 1e-4
+    # and the supercap recurrence never hits the clip floor
+    assert float(out.stored_uj) >= -1e-5
+
+
+@settings(max_examples=24, deadline=None)
+@given(stored=st.floats(0, 40), harvested=st.floats(0, 20),
+       stage=st.integers(0, 3), active=st.integers(0, 1),
+       reserve=st.floats(0, 15))
+def test_lane_reserve_respected(stored, harvested, stage, active, reserve):
+    """Everything past mandatory sensing is gated on leaving the brown-out
+    reserve in the supercap: if the lane spent more than ``sense``, the
+    budget it left behind is at least the reserve."""
+    out = _lane(stored, harvested, stage, active, reserve=reserve)
+    spend = float(out.spend)
+    sense = EnergyCosts().sense
+    if spend > sense + 1e-6:
+        assert stored + harvested - spend >= reserve - 1e-4
+
+
+def test_lane_resume_owns_slot_and_emits_at_depth():
+    """An in-flight inference at full depth with an affordable tx emits D8
+    scored against its SOURCE slot, not the current one."""
+    out = _lane(stored=40.0, harvested=10.0, stage=3, active=True, slot=9)
+    assert int(out.decision) == D8_STAGED_FULL
+    assert int(out.emit) == 2 and int(out.emit_src) == 1  # src_slot=1, not 9
+    assert float(out.payload_bytes) == 2.0
+    assert not bool(out.state.active)
+
+
+def test_lane_suspends_when_broke():
+    """Sensing affordable but no stage is: D6 with progress frozen."""
+    out = _lane(stored=1.0, harvested=0.0, stage=1, active=True)
+    assert int(out.decision) == D6_PARTIAL
+    assert int(out.emit) == 0
+    assert bool(out.state.active) and int(out.state.stage) == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: None-parity, validation, early exit
+# ---------------------------------------------------------------------------
+
+def test_none_mode_is_bitwise_legacy(setup):
+    """intermittent=None takes the untouched 3-tuple-carry path: every lane
+    of a run without the kwarg equals a run that never heard of it."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    a = seeker_fleet_simulate(wins, harvest, **kw)
+    b = seeker_fleet_simulate(wins, harvest, intermittent=None,
+                              intermittent_state0=None, aux_params=None,
+                              **kw)
+    for k in ("decisions", "payload_bytes", "stored_uj", "logits"):
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert "it_emit" not in a and "it_emit" not in b
+
+
+def test_half_configured_runs_raise(setup):
+    key, params, aux, wins, labels, harvest, kw = setup
+    it0 = intermittent_fleet_init(N, HAR)
+    with pytest.raises(ValueError, match="intermittent_state0"):
+        seeker_fleet_simulate(wins, harvest, intermittent_state0=it0, **kw)
+    with pytest.raises(ValueError, match="aux"):
+        seeker_fleet_simulate(wins, harvest, intermittent=CFG, **kw)
+    with pytest.raises(ValueError, match="stacked"):
+        seeker_fleet_simulate(wins, harvest, intermittent=CFG,
+                              aux_params=aux,
+                              intermittent_state0=intermittent_fleet_init(
+                                  N + 1, HAR), **kw)
+
+
+def test_early_exit_monotone_in_threshold(setup):
+    """Raising exit_threshold can only forbid early exits: the D7 count is
+    non-increasing, and a threshold above 1 (max-softmax is <= 1) kills
+    them entirely."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    counts = []
+    for thr in (0.0, 0.3, 0.8, 1.5):
+        res = seeker_fleet_simulate(
+            wins, harvest,
+            **_it_kw(kw, aux, IntermittentConfig(exit_threshold=thr)))
+        counts.append(int(res["it_early"]))
+    assert counts == sorted(counts, reverse=True)
+    assert counts[-1] == 0
+    assert counts[0] > 0          # the scarce regime does produce D7s
+
+
+def test_emissions_and_histogram_consistent(setup):
+    key, params, aux, wins, labels, harvest, kw = setup
+    res = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
+    dec = np.asarray(res["decisions"])
+    emit = np.asarray(res["it_emit"])
+    alive = np.asarray(res["alive"])
+    hist = np.asarray(res["decision_histogram"])
+    assert hist.shape == (N_INTERMITTENT_DECISIONS,)
+    assert int(res["it_full"]) == int(((emit == 2) & alive).sum()) \
+        == hist[D8_STAGED_FULL]
+    assert int(res["it_early"]) == int(((emit == 1) & alive).sum()) \
+        == hist[D7_EARLY_EXIT]
+    # a D6 suspension put nothing on the wire and is not completed
+    completed = (dec != DEFER) & (dec != D6_PARTIAL) & alive
+    assert int(res["completed"]) == int(completed.sum())
+    assert (np.asarray(res["payload_bytes"])[(dec == D6_PARTIAL)] == 0).all()
+
+
+def test_accuracy_gather_matches_numpy(setup):
+    """The engine scores an emission against the label of the SOURCE slot
+    via a take-along-axis gather; recompute it in numpy from raw traces."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    res = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
+    emit = np.asarray(res["it_emit"])
+    src = np.asarray(res["it_src"])
+    lab = np.asarray(res["it_label"])
+    alive = np.asarray(res["alive"])
+    y = np.asarray(labels)
+    valid = (emit > 0) & alive & (src >= 0)
+    ok = valid & (lab == y[np.clip(src, 0, S - 1)])
+    assert int(res["it_correct_full"]) == int((ok & (emit == 2)).sum())
+    assert int(res["it_correct_early"]) == int((ok & (emit == 1)).sum())
+    assert int(res["correct"]) == int(res["correct_ladder"]) \
+        + int(res["it_correct_full"]) + int(res["it_correct_early"])
+
+
+# ---------------------------------------------------------------------------
+# The resume contract (docs/RESUME_CONTRACT.md)
+# ---------------------------------------------------------------------------
+
+def _assert_bitwise(a, b, keys):
+    for k in keys:
+        np.testing.assert_array_equal(
+            np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+
+
+IT_KEYS = ("decisions", "payload_bytes", "stored_uj", "it_emit", "it_label",
+           "it_conf", "it_src", "it_stage", "logits")
+IT_COUNTERS = ("completed", "it_full", "it_early", "correct",
+               "it_correct_full", "it_correct_early", "brownout_slots")
+
+
+def test_manual_resume_matches_long_run(setup):
+    """The contract exactly as docs/RESUME_CONTRACT.md states it: chain two
+    segments by hand through state0/node_keys/brownout_state0/
+    intermittent_state0/slot0 and compare bitwise against one long run."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    s1 = S // 2
+    kw1 = {k: v for k, v in kw.items() if k != "labels"}
+    full = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
+    a = seeker_fleet_simulate(wins[:s1], harvest[:, :s1],
+                              **_it_kw(kw1, aux))
+    b = seeker_fleet_simulate(
+        wins[s1:], harvest[:, s1:], state0=a["final_state"],
+        node_keys=a["final_keys"], brownout_state0=a["final_brownout"],
+        intermittent_state0=a["final_intermittent"], slot0=s1,
+        **_it_kw(kw1, aux))
+    for k in IT_KEYS:
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(a[k]), np.asarray(b[k])]),
+            np.asarray(full[k]), err_msg=k)
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        b["final_intermittent"], full["final_intermittent"])
+
+
+def test_streamed_resume_bitwise(setup):
+    """Suspend → brown-out → trickle-charge → resume, chained through the
+    streamed driver in 3-slot segments: bitwise one long run, including
+    inferences whose suspension spans a segment boundary (the driver's
+    cross-segment rescoring path)."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    full = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
+    streamed = seeker_fleet_simulate_streamed(wins, harvest, chunk=3,
+                                              **_it_kw(kw, aux))
+    _assert_bitwise(full, streamed, IT_KEYS)
+    for k in IT_COUNTERS:
+        assert int(full[k]) == int(streamed[k]), k
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        full["final_intermittent"], streamed["final_intermittent"])
+    # the regime actually exercises the hard paths: brown-outs happened,
+    # and at least one emission's source slot lies in an earlier segment
+    emit = np.asarray(streamed["it_emit"])
+    src = np.asarray(streamed["it_src"])
+    slots = np.arange(S)[:, None]
+    assert int(streamed["brownout_slots"]) > 0
+    assert ((emit > 0) & (src // 3 < slots // 3)).any(), \
+        "no emission crossed a segment boundary — weaken the harvest"
+
+
+# ---------------------------------------------------------------------------
+# The acceptance metric
+# ---------------------------------------------------------------------------
+
+def test_staged_beats_freeze_and_lose(setup):
+    """Under scarce harvest the lane converts DEFER slots into completed
+    inferences: completed count strictly above the brown-out baseline."""
+    key, params, aux, wins, labels, harvest, kw = setup
+    base = seeker_fleet_simulate(wins, harvest, **kw)
+    staged = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
+    assert int(staged["it_full"]) + int(staged["it_early"]) > 0
+    assert int(staged["completed"]) > int(base["completed"])
