@@ -1,0 +1,127 @@
+"""Compare a benchmark run against the checked-in baseline.
+
+``PYTHONPATH=src python -m benchmarks.compare CURRENT [--baseline F]
+[--rtol R] [--timing-rtol R]``
+
+Reads two ``benchmarks.run`` result JSONs (lists of row dicts keyed by
+``name``) and exits non-zero when the current run regresses:
+
+* **deterministic metrics** (``completed_frac``, ``reduction_x``,
+  ``fleet_accuracy``, byte counts, lane totals, ``bitwise_equal`` ...) must
+  match the baseline within ``--rtol`` (default 1e-6) — these are pure
+  functions of the seeded simulation, so any drift is a real behaviour
+  change, not noise;
+* **timing metrics** (``us_per_call``, ``windows_per_s``,
+  ``payloads_per_s``, ``speedup_x``, ``wall_s``) are noisy and only checked
+  *directionally*: a slowdown beyond ``--timing-rtol`` (default 0.5, i.e.
+  50%) fails; getting faster never does;
+* a baseline row whose ``name`` is missing from the current run is a
+  regression (a benchmark silently disappeared); NEW rows in the current
+  run are fine — they become baseline the next time it is regenerated.
+
+Regenerate the baseline after an intentional change with::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+      PYTHONPATH=src python -m benchmarks.run --quick \
+      --out benchmarks/BENCH_baseline.json
+
+and commit the diff alongside the change that explains it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Noisy wall-clock observables: direction-aware, loose tolerance.  "Bigger
+# is better" for rates/speedups, "smaller is better" for times.
+TIMING_BIGGER_BETTER = {"windows_per_s", "payloads_per_s", "speedup_x",
+                        "completed_gain_x"}
+TIMING_SMALLER_BETTER = {"us_per_call", "wall_s"}
+# Machine-/run-dependent context fields: reported, never compared.
+SKIP = {"name", "rss_mb", "devices", "nodes", "n_payloads"}
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "BENCH_baseline.json")
+
+
+def _rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return {row["name"]: row for row in json.load(f)}
+
+
+def compare(current: dict[str, dict], baseline: dict[str, dict],
+            rtol: float, timing_rtol: float) -> list[str]:
+    """Returns the list of regression messages (empty = pass)."""
+    problems = []
+    for name, base_row in sorted(baseline.items()):
+        cur_row = current.get(name)
+        if cur_row is None:
+            problems.append(f"{name}: row missing from current run")
+            continue
+        for key, base in base_row.items():
+            if key in SKIP or key not in cur_row:
+                continue
+            cur = cur_row[key]
+            if isinstance(base, bool) or isinstance(cur, bool):
+                if bool(cur) != bool(base):
+                    problems.append(f"{name}.{key}: {cur} != {base}")
+                continue
+            if not isinstance(base, (int, float)):
+                if cur != base:
+                    problems.append(f"{name}.{key}: {cur!r} != {base!r}")
+                continue
+            if key in TIMING_BIGGER_BETTER:
+                if cur < base * (1.0 - timing_rtol):
+                    problems.append(
+                        f"{name}.{key}: {cur:.4g} < {base:.4g} "
+                        f"(-{100 * (1 - cur / base):.0f}%, "
+                        f"allowed -{100 * timing_rtol:.0f}%)")
+            elif key in TIMING_SMALLER_BETTER:
+                if base > 0 and cur > base * (1.0 + timing_rtol):
+                    problems.append(
+                        f"{name}.{key}: {cur:.4g} > {base:.4g} "
+                        f"(+{100 * (cur / base - 1):.0f}%, "
+                        f"allowed +{100 * timing_rtol:.0f}%)")
+            else:                       # deterministic: tight relative match
+                tol = rtol * max(abs(base), 1.0)
+                if abs(cur - base) > tol:
+                    problems.append(
+                        f"{name}.{key}: {cur!r} != baseline {base!r} "
+                        f"(|diff| {abs(cur - base):.4g} > rtol {rtol:g})")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="bench_results.json of the current run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: benchmarks/"
+                         "BENCH_baseline.json)")
+    ap.add_argument("--rtol", type=float, default=1e-6,
+                    help="relative tolerance for deterministic metrics")
+    ap.add_argument("--timing-rtol", type=float, default=0.5,
+                    help="allowed fractional slowdown for timing metrics")
+    args = ap.parse_args()
+
+    current = _rows(args.current)
+    baseline = _rows(args.baseline)
+    problems = compare(current, baseline, args.rtol, args.timing_rtol)
+
+    new = sorted(set(current) - set(baseline))
+    if new:
+        print(f"# {len(new)} new row(s) not in baseline: "
+              + ", ".join(new[:8]) + ("..." if len(new) > 8 else ""))
+    if problems:
+        print(f"REGRESSION: {len(problems)} metric(s) regressed vs "
+              f"{os.path.basename(args.baseline)}")
+        for p in problems:
+            print(f"  {p}")
+        sys.exit(1)
+    print(f"OK: {len(baseline)} baseline row(s) matched "
+          f"({len(current)} current)")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,7 @@ from repro.data.sensors import class_signatures, har_stream
 from repro.models.har import har_aux_init, har_init
 from repro.serving import (seeker_fleet_simulate,
                            seeker_fleet_simulate_sharded,
-                           seeker_fleet_simulate_streamed)
+                           seeker_fleet_simulate_streamed, wire_bytes_exact)
 from repro.sharding import make_mesh_compat
 
 from .common import timeit_us
@@ -109,7 +109,7 @@ def run(quick: bool = False) -> list[dict]:
             res = last["res"]
             n_windows = n * slots
             sent = int(jnp.sum(res["decisions"] != DEFER))
-            wire = float(res["bytes_on_wire"])
+            wire = float(wire_bytes_exact(res))
             raw = sent * float(res["raw_bytes_per_window"])
             row = {
                 "name": f"fleet_scale/{'sharded_' if sharded else ''}n{n}",
@@ -285,7 +285,7 @@ def _intermittent_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
             "windows_per_s": n * s / wall,
             "completed_frac": float(res["completed"]) / (n * s),
             "fleet_accuracy": float(res["fleet_accuracy"]),
-            "bytes_on_wire": float(res["bytes_on_wire"]),
+            "bytes_on_wire": float(wire_bytes_exact(res)),
             "slots": s,
             "scarcity": INTERMITTENT_SCARCITY,
         }

@@ -32,7 +32,8 @@ from repro.core.coreset import channel_cluster_coresets
 from repro.core.recovery import init_generator
 from repro.data.sensors import har_stream
 from repro.host import (HostServeConfig, host_server_init,
-                        recover_infer_batch, serve_fleet_payloads)
+                        host_server_stats, recover_infer_batch,
+                        serve_fleet_payloads)
 from repro.models.har import har_init
 from repro.serving import WirePayload, encode_wire_coresets
 
@@ -122,6 +123,42 @@ def run(quick: bool = False) -> list[dict]:
                 "queue_depth": depth,
                 "speedup_x": base_us / us,
             })
+
+    # --- telemetry-on QoS row: the same serve path with registry lanes -----
+    # (sojourn/e2e percentiles extracted from the jit-resident histograms;
+    # the timing delta vs the matching telemetry=off row above is the lane
+    # overhead the OBSERVABILITY doc quotes)
+    cfg = HostServeConfig(
+        channels=HAR.channels, k=12, m=20, t=t, n_classes=HAR.n_classes,
+        n_nodes=n, batch_size=batches[-1],
+        queue_capacity=max(depths[-1], n), cache_capacity=depths[-1],
+        qos_slots=8, telemetry=True)
+    iters = 1 if quick else 5
+    states = iter([host_server_init(cfg) for _ in range(iters + 2)])
+    final = {}
+
+    def serve_tel():
+        final["state"], out = serve_fleet_payloads(
+            next(states), pool, node_ids, cfg=cfg,
+            host_params=params, gen_params=gen, base_key=key)
+        return out.logits
+
+    us = timeit_us(serve_tel, iters=iters, warmup=1)
+    stats = host_server_stats(final["state"], cfg)
+    rows.append({
+        "name": f"host_throughput/host_server_telemetry_b{batches[-1]}"
+                f"_q{depths[-1]}",
+        "us_per_call": us,
+        "payloads_per_s": n / (us / 1e6),
+        "n_payloads": n,
+        "speedup_x": base_us / us,
+        "sojourn_p50": stats["sojourn_p50"],
+        "sojourn_p99": stats["sojourn_p99"],
+        "e2e_p50": stats["e2e_p50"],
+        "e2e_p99": stats["e2e_p99"],
+        "served": stats["served"],
+        "deadline_misses": stats["deadline_misses"],
+    })
     return rows
 
 

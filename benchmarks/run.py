@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--out F]``
+``PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--out F]
+[--emit-metrics F] [--trace-out F]``
 
 Prints ``name,us_per_call,derived`` CSV (derived = the module's headline
 metric per row) followed by human-readable tables, and writes the raw rows
@@ -11,6 +12,13 @@ perf-trajectory artifact, not a measurement) on every module whose ``run``
 accepts a ``quick`` kwarg.  Any benchmark that raises marks the whole run
 failed: the harness still executes the remaining modules, then exits
 non-zero so CI surfaces the breakage instead of swallowing it.
+
+``--trace-out F`` wraps every module in a :func:`repro.obs.trace.span` and
+writes the run as Chrome-trace/Perfetto JSON (load it at ui.perfetto.dev);
+compile events fired by the engines appear as instant markers on the same
+timeline.  ``--emit-metrics F`` dumps a JSON sidecar with the per-module
+wall times and the process-wide compile counts from
+:mod:`repro.obs.compile_guard` — the "did this PR add a retrace?" artifact.
 """
 from __future__ import annotations
 
@@ -56,22 +64,36 @@ def main() -> None:
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="result JSON path (default: "
                          "experiments/bench_results.json)")
+    ap.add_argument("--emit-metrics", default=None, metavar="FILE",
+                    help="also write a JSON metrics dump (per-module wall "
+                         "times + repro.obs compile counts)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record a Chrome-trace/Perfetto JSON of the run "
+                         "(one span per benchmark module)")
     args = ap.parse_args()
+
+    from repro.obs import compile_counts, trace as obs_trace
+    if args.trace_out:
+        obs_trace.enable()
 
     import importlib
     all_rows: list[dict] = []
     failed: list[str] = []
+    wall: dict[str, float] = {}
     print("name,us_per_call,derived")
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
         t0 = time.time()
         try:
-            mod = importlib.import_module(f"benchmarks.{modname}")
-            if args.quick and "quick" in inspect.signature(mod.run).parameters:
-                rows = mod.run(quick=True)
-            else:
-                rows = mod.run()
+            with obs_trace.span(f"bench.{modname}", cat="bench",
+                                args={"quick": args.quick}):
+                mod = importlib.import_module(f"benchmarks.{modname}")
+                if args.quick and \
+                        "quick" in inspect.signature(mod.run).parameters:
+                    rows = mod.run(quick=True)
+                else:
+                    rows = mod.run()
         except Exception as e:  # keep the harness alive per-module ...
             print(f"{modname}/ERROR,0,{type(e).__name__}:{e}")
             failed.append(modname)          # ... but fail the run at the end
@@ -80,8 +102,9 @@ def main() -> None:
             print(f"{row['name']},{row.get('us_per_call', 0.0):.1f},"
                   f"{_derived(row)}")
         all_rows.extend(rows)
+        wall[modname] = round(time.time() - t0, 1)
         all_rows.append({"name": f"_meta/{modname}",
-                         "wall_s": round(time.time() - t0, 1)})
+                         "wall_s": wall[modname]})
 
     out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                    "experiments", "bench_results.json")
@@ -89,6 +112,18 @@ def main() -> None:
     with open(out, "w") as f:
         json.dump(all_rows, f, indent=1)
     print(f"# wrote {os.path.normpath(out)}")
+
+    if args.trace_out:
+        obs_trace.export_chrome_trace(args.trace_out)
+        print(f"# wrote {args.trace_out} (load at ui.perfetto.dev)")
+    if args.emit_metrics:
+        dump = {"wall_s": wall, "compile_counts": compile_counts(),
+                "quick": args.quick, "failed": failed}
+        os.makedirs(os.path.dirname(os.path.abspath(args.emit_metrics)),
+                    exist_ok=True)
+        with open(args.emit_metrics, "w") as f:
+            json.dump(dump, f, indent=1)
+        print(f"# wrote {args.emit_metrics}")
     if failed:
         sys.exit(f"benchmarks raised: {', '.join(failed)}")
 

@@ -10,6 +10,8 @@
         --intermittent
     PYTHONPATH=src python examples/edge_host_serving.py --fleet 24 \
         --host-queue
+    PYTHONPATH=src python examples/edge_host_serving.py --fleet 64 \
+        --emit-metrics metrics.json --trace-out trace.json
 
 Trains the HAR classifier, builds the memoization signature bank, then
 streams activity windows through the full Seeker decision flow under a
@@ -33,9 +35,15 @@ slot to slot, periodically re-transmitting identical payloads — through the
 host-tier serving subsystem (``repro.host``: QoS-deadline ring queue, EDF
 fixed-shape microbatch scheduler, signature-keyed recovery cache) and
 prints deadline-miss and cache-hit rates plus the compile-shape count.
+
+``--emit-metrics FILE`` turns on the ``repro.obs`` telemetry lanes for the
+fleet/host run and writes the metric summary JSON (with the host tier:
+queue-sojourn and end-to-end QoS percentiles); ``--trace-out FILE`` records
+wall-clock spans as Chrome-trace/Perfetto JSON (docs/OBSERVABILITY.md).
 """
 import argparse
 import collections
+import json
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +82,7 @@ def train_classifier(key):
 
 def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
                sharded: bool = False, churn: float = 0.0, chunk: int = 0,
-               intermittent: bool = False):
+               intermittent: bool = False, emit_metrics: str | None = None):
     """N heterogeneous nodes in one batched scan: the fleet engine.
 
     ``sharded`` splits the node axis over every visible device (run under
@@ -110,6 +118,8 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
                   aux_params=har_aux_init(jax.random.fold_in(key, 7), HAR))
     if sharded:
         kw["mesh"] = make_mesh_compat((jax.device_count(),), ("data",))
+    if emit_metrics:
+        kw["telemetry"] = True
     t0 = time.time()
     if chunk > 0:
         res = seeker_fleet_simulate_streamed(wins, harvest, chunk=chunk,
@@ -169,9 +179,16 @@ def fleet_demo(key, params, gen, wins, labels, n_nodes: int,
     raw = completed.sum() * float(res["raw_bytes_per_window"])
     print(f"bytes on wire: {wire:.0f} vs {raw:.0f} raw-equivalent "
           f"({raw / max(wire, 1e-9):.1f}x reduction)")
+    if emit_metrics:
+        from repro.obs import metrics_summary
+        summary = metrics_summary(res["telemetry_spec"], res["telemetry"])
+        with open(emit_metrics, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote telemetry lanes to {emit_metrics}")
 
 
-def host_queue_demo(key, params, gen, wins, n_nodes: int, args):
+def host_queue_demo(key, params, gen, wins, n_nodes: int, args,
+                    emit_metrics: str | None = None):
     """Churny fleet -> host-tier serving subsystem (queue/EDF/cache).
 
     Each node follows an on/off duty cycle (intermittent power) and, while
@@ -196,7 +213,8 @@ def host_queue_demo(key, params, gen, wins, n_nodes: int, args):
         channels=HAR.channels, k=12, m=20, t=HAR.window,
         n_classes=HAR.n_classes, n_nodes=n_nodes,
         batch_size=args.host_batch, queue_capacity=4 * n_nodes,
-        cache_capacity=4 * pool, qos_slots=args.qos)
+        cache_capacity=4 * pool, qos_slots=args.qos,
+        telemetry=bool(emit_metrics))
 
     # pre-encode both payload kinds for the window pool (the edge side)
     centers, radii, counts = jax.vmap(
@@ -239,7 +257,7 @@ def host_queue_demo(key, params, gen, wins, n_nodes: int, args):
         state, _ = host_serve_slot(state, empty, node_ids, none, **kw)
     dt = time.time() - t0
 
-    stats = host_server_stats(state)
+    stats = host_server_stats(state, cfg)
     ens = host_ensemble(state)
     print(f"\nhost queue: {n_nodes} churny nodes x {slots} slots "
           f"({ingested} payloads) in {dt:.2f}s "
@@ -261,6 +279,13 @@ def host_queue_demo(key, params, gen, wins, n_nodes: int, args):
     print(f"  per-node ensemble: {int(answered.sum())}/{n_nodes} nodes "
           f"answered (mean-logit vs majority-vote agreement "
           f"{agree_pct:.0f}% over answered nodes)")
+    if emit_metrics:
+        print(f"  queue sojourn p50/p95/p99: {stats['sojourn_p50']:.2f}/"
+              f"{stats['sojourn_p95']:.2f}/{stats['sojourn_p99']:.2f} slots; "
+              f"end-to-end p99 {stats['e2e_p99']:.2f} slots")
+        with open(emit_metrics, "w") as f:
+            json.dump(stats["telemetry"], f, indent=1)
+        print(f"  wrote telemetry lanes to {emit_metrics}")
 
 
 def main():
@@ -299,24 +324,49 @@ def main():
                     help="host EDF microbatch size (--host-queue)")
     ap.add_argument("--qos", type=int, default=3,
                     help="QoS deadline in slots after arrival (--host-queue)")
+    ap.add_argument("--emit-metrics", default=None, metavar="FILE",
+                    help="run with telemetry lanes on and write the "
+                         "metric summary JSON (fleet or host-queue modes)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record the run as Chrome-trace/Perfetto JSON")
     args = ap.parse_args()
+
+    from repro.obs import trace as obs_trace
+    if args.trace_out:
+        obs_trace.enable()
 
     key = jax.random.PRNGKey(0)
     print("training HAR classifier on synthetic MHEALTH ...")
-    params = train_classifier(key)
+    with obs_trace.span("example.train", cat="example"):
+        params = train_classifier(key)
     gen = init_generator(key, HAR.window, HAR.channels)
     wins, labels = har_stream(key, args.windows)
 
-    if args.host_queue:
-        host_queue_demo(key, params, gen, wins, args.fleet or 16, args)
-        return
+    try:
+        if args.host_queue:
+            with obs_trace.span("example.host_queue", cat="example"):
+                host_queue_demo(key, params, gen, wins, args.fleet or 16,
+                                args, emit_metrics=args.emit_metrics)
+            return
 
-    if args.fleet:
-        fleet_demo(key, params, gen, wins, labels, args.fleet,
-                   sharded=args.sharded, churn=args.churn, chunk=args.chunk,
-                   intermittent=args.intermittent)
-        return
+        if args.fleet:
+            with obs_trace.span("example.fleet", cat="example"):
+                fleet_demo(key, params, gen, wins, labels, args.fleet,
+                           sharded=args.sharded, churn=args.churn,
+                           chunk=args.chunk,
+                           intermittent=args.intermittent,
+                           emit_metrics=args.emit_metrics)
+            return
 
+        with obs_trace.span("example.single_node", cat="example"):
+            _single_node_demo(key, params, gen, wins, labels, args)
+    finally:
+        if args.trace_out:
+            obs_trace.export_chrome_trace(args.trace_out)
+            print(f"wrote {args.trace_out} (load at ui.perfetto.dev)")
+
+
+def _single_node_demo(key, params, gen, wins, labels, args):
     harvest = harvest_trace(key, args.windows, args.source)
 
     print(f"running Seeker over {args.windows} windows on '{args.source}' "
@@ -345,3 +395,4 @@ def main():
 
 if __name__ == "__main__":
     main()
+

@@ -24,8 +24,9 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["RecoveryCache", "cache_init", "payload_signature",
-           "cache_lookup_batch", "cache_insert_batch"]
+__all__ = ["RecoveryCache", "cache_init", "cache_stats",
+           "payload_signature", "cache_lookup_batch",
+           "cache_insert_batch"]
 
 # Knuth/FNV-flavoured odd constants for the two independent 32-bit mixes
 _MIX_SEEDS = (jnp.uint32(2654435761), jnp.uint32(2246822519))
@@ -121,3 +122,12 @@ def cache_insert_batch(cache: RecoveryCache, sigs: jnp.ndarray,
 
     cache, _ = jax.lax.scan(body, cache, (sigs, logits, insert))
     return cache
+
+
+def cache_stats(cache: RecoveryCache) -> dict:
+    """Hit/miss counters as python numbers (one sync; off the hot path) —
+    the single accounting view shared by ``host_server_stats`` and the
+    ``host.cache_*`` telemetry lanes."""
+    hits, misses = int(cache.hits), int(cache.misses)
+    return {"cache_hits": hits, "cache_misses": misses,
+            "cache_hit_rate": hits / max(hits + misses, 1)}

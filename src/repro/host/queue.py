@@ -68,6 +68,14 @@ def queue_occupancy(q: PayloadQueue) -> jnp.ndarray:
     return jnp.sum(q.valid.astype(jnp.int32))
 
 
+def queue_wait_slots(q: PayloadQueue, now: jnp.ndarray) -> jnp.ndarray:
+    """(cap,) int32 — how long each entry has been waiting at slot ``now``
+    (0 for entries that arrived this slot; garbage where ``q.valid`` is
+    False — mask with it).  The backlog-age observable of the telemetry
+    lanes."""
+    return jnp.where(q.valid, now - q.arrival, 0).astype(jnp.int32)
+
+
 def queue_push(q: PayloadQueue, payload: Any, node_id: jnp.ndarray,
                arrival: jnp.ndarray, deadline: jnp.ndarray,
                mask: jnp.ndarray | bool = True

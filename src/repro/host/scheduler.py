@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from .queue import NO_DEADLINE, PayloadQueue
 
-__all__ = ["MicroBatch", "expire_deadlines", "edf_pop_batch"]
+__all__ = ["MicroBatch", "batch_wait_slots", "expire_deadlines",
+           "edf_pop_batch"]
 
 
 class MicroBatch(NamedTuple):
@@ -77,3 +78,11 @@ def edf_pop_batch(q: PayloadQueue, batch_size: int,
         deadline=q.deadline[take],
         valid=taken_valid)
     return q._replace(valid=q.valid.at[take].set(False)), batch, missed
+
+
+def batch_wait_slots(batch: MicroBatch, now: jnp.ndarray) -> jnp.ndarray:
+    """(B,) int32 queue sojourn of each batch row at service time ``now``
+    (0 = served the slot it arrived; garbage on padding rows — mask with
+    ``batch.valid``).  The QoS-percentile observable: its histogram is what
+    p50/p95/p99 queue-wait is extracted from."""
+    return jnp.where(batch.valid, now - batch.arrival, 0).astype(jnp.int32)

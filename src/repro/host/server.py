@@ -31,7 +31,6 @@ Design points:
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Any, NamedTuple
@@ -43,18 +42,25 @@ from ..core.coreset import ClusterCoreset, SamplingCoreset
 from ..core.recovery import (GeneratorParams, recover_cluster_window,
                              recover_sampling_window)
 from ..models.har import har_apply
+from ..obs import (MetricsSpec, compile_event, counter, counter_add,
+                   gauge, gauge_set, hist_observe, histogram, metrics_init,
+                   metrics_summary)
+from ..obs import trace as obs_trace
+from ..obs.compile_guard import compile_key_counts
 from ..serving.edge_host import (WirePayload, WireSamplePayload,
                                  decode_wire_coresets, decode_wire_samples)
 from .cache import (RecoveryCache, cache_init, cache_insert_batch,
-                    cache_lookup_batch, payload_signature)
-from .queue import PayloadQueue, queue_init, queue_occupancy, queue_push_batch
-from .scheduler import edf_pop_batch
+                    cache_lookup_batch, cache_stats, payload_signature)
+from .queue import (PayloadQueue, queue_init, queue_occupancy,
+                    queue_push_batch, queue_wait_slots)
+from .scheduler import batch_wait_slots, edf_pop_batch
 
 __all__ = ["HostServeConfig", "HostPayload", "HostServerState", "SlotOutput",
            "host_payload_example", "cluster_entries", "sampling_entries",
            "host_server_init", "host_server_init_stacked", "host_serve_slot",
-           "host_serve_trace", "serve_fleet_payloads", "recover_infer_batch",
-           "host_server_stats", "host_ensemble", "serve_trace_count"]
+           "host_serve_trace", "host_telemetry_spec", "serve_fleet_payloads",
+           "recover_infer_batch", "host_server_stats", "host_ensemble",
+           "serve_trace_count"]
 
 CLUSTER_KIND = 0    # D3 payload: quantized cluster coreset
 SAMPLING_KIND = 1   # D4 payload: quantized importance samples + moments
@@ -76,6 +82,7 @@ class HostServeConfig:
     cache_capacity: int = 256   # recovery-memo entries
     qos_slots: int = 4          # deadline = arrival + qos_slots (inclusive)
     batches_per_slot: int = 1   # host service rate per slot
+    telemetry: bool = False     # registry lanes + latency histograms in-slot
 
     def __post_init__(self):
         """Reject configurations that would silently corrupt service.
@@ -153,6 +160,9 @@ class HostServerState(NamedTuple):
     deadline_misses: jnp.ndarray  # () int32 — expired before service
     ensemble_logits: jnp.ndarray  # (n_nodes, L) float32 — summed logits
     ensemble_votes: jnp.ndarray   # (n_nodes, L) int32 — argmax histogram
+    # registry lanes (cfg.telemetry=True; None = untelemetered, an empty
+    # pytree node, so every legacy positional construction still works)
+    metrics: Any = None
 
 
 def host_payload_example(cfg: HostServeConfig) -> HostPayload:
@@ -196,6 +206,45 @@ def sampling_entries(swire: WireSamplePayload, k: int) -> HostPayload:
         s_mean=swire.mean, s_var=swire.var)
 
 
+@functools.lru_cache(maxsize=32)
+def _host_spec(qos_slots: int) -> MetricsSpec:
+    # sojourn of a SERVED payload is 0..qos_slots (later pops expire first);
+    # end-to-end latency (arrival -> result available) is sojourn + 1.  Small
+    # deadline windows get exact per-slot categorical bins; large ones fall
+    # back to 16 log-spaced bins over the feasible span.
+    span = qos_slots + 1
+    if span + 2 <= 18:
+        lat = functools.partial(histogram, bins=span + 2, log=False,
+                                unit="slots")
+    else:
+        lat = functools.partial(histogram, bins=16, lo=1.0, hi=float(span),
+                                unit="slots")
+    return MetricsSpec((
+        counter("host.served", "payloads"),
+        counter("host.deadline_misses", "payloads"),
+        counter("host.drops_overflow", "payloads"),
+        counter("host.cache_hits", "lookups"),
+        counter("host.cache_misses", "lookups"),
+        gauge("host.backlog", "payloads"),
+        lat("host.sojourn_slots"),
+        lat("host.e2e_slots"),
+        lat("host.sojourn_slots.cluster"),
+        lat("host.sojourn_slots.sampling"),
+        lat("host.backlog_age_slots"),
+    ))
+
+
+def host_telemetry_spec(cfg: HostServeConfig) -> MetricsSpec:
+    """The host tier's registry lanes: QoS counters (served / misses /
+    drops / cache), a backlog gauge, and the fixed-bin latency histograms
+    QoS percentiles are extracted from — per-payload queue sojourn,
+    end-to-end slot latency, per-payload-class sojourn breakdown, and the
+    age profile of the waiting backlog.  Pure function of ``cfg.qos_slots``
+    (the only field that shapes the bins), so service-rate variants of one
+    config share the spec instance."""
+    return _host_spec(cfg.qos_slots)
+
+
 def host_server_init(cfg: HostServeConfig) -> HostServerState:
     return HostServerState(
         queue=queue_init(host_payload_example(cfg), cfg.queue_capacity),
@@ -204,7 +253,9 @@ def host_server_init(cfg: HostServeConfig) -> HostServerState:
         served=jnp.zeros((), jnp.int32),
         deadline_misses=jnp.zeros((), jnp.int32),
         ensemble_logits=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.float32),
-        ensemble_votes=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.int32))
+        ensemble_votes=jnp.zeros((cfg.n_nodes, cfg.n_classes), jnp.int32),
+        metrics=(metrics_init(host_telemetry_spec(cfg)) if cfg.telemetry
+                 else None))
 
 
 def host_server_init_stacked(cfg: HostServeConfig,
@@ -298,9 +349,12 @@ def _check_lane_width(cfg: HostServeConfig, width: int) -> None:
 # The jitted serve slot
 # ---------------------------------------------------------------------------
 
-# trace-time event counter: incremented when XLA (re)traces a serve function,
-# i.e. once per distinct compiled shape — the compile-cache acceptance probe
-_TRACE_EVENTS: collections.Counter = collections.Counter()
+# the compile-cache acceptance probe rides the generalized trace-event
+# accounting of repro.obs.compile_guard: serve builders emit
+# compile_event("host.serve", (cfg, tag)) at trace time — once per distinct
+# compiled shape — and serve_trace_count groups those keys the way the
+# host tests have always pinned them
+_SERVE_COMPONENT = "host.serve"
 
 
 def serve_trace_count(cfg: HostServeConfig | None = None) -> int:
@@ -311,12 +365,13 @@ def serve_trace_count(cfg: HostServeConfig | None = None) -> int:
     config :func:`serve_fleet_payloads` derives per fleet round): a variant
     is a distinct compiled shape and must show up in the probe.  Without
     ``cfg``, the global total."""
+    counts = compile_key_counts(_SERVE_COMPONENT)
     if cfg is not None:
         key = dataclasses.replace(cfg, batches_per_slot=0)
         return sum(
-            n for (c, _), n in _TRACE_EVENTS.items()
+            n for (c, _), n in counts.items()
             if dataclasses.replace(c, batches_per_slot=0) == key)
-    return sum(_TRACE_EVENTS.values())
+    return sum(counts.values())
 
 
 def _slot_body(cfg: HostServeConfig, state: HostServerState,
@@ -327,10 +382,21 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
     """One serve slot: ingest stamped arrivals, then run
     ``cfg.batches_per_slot`` EDF microbatches through cache + recovery +
     DNN.  Pure function of fixed-shape inputs."""
+    tel = host_telemetry_spec(cfg) if cfg.telemetry else None
+    metrics = state.metrics
+    if tel is not None and metrics is None:
+        raise ValueError(
+            "cfg.telemetry=True but the server state has no metrics lanes — "
+            "build the state with host_server_init(cfg) using the SAME "
+            "telemetry setting (the lanes are part of the resumable carry)")
     arrival = jnp.broadcast_to(state.slot, node_ids.shape)
     deadline = arrival + cfg.qos_slots
     queue, _ = queue_push_batch(state.queue, entries, node_ids, arrival,
                                 deadline, mask)
+    if tel is not None:
+        metrics = counter_add(
+            tel, metrics, "host.drops_overflow",
+            queue.drops_overflow - state.queue.drops_overflow)
 
     cache = state.cache
     served, missed_total = state.served, state.deadline_misses
@@ -340,6 +406,26 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
         queue, batch, missed = edf_pop_batch(queue, cfg.batch_size,
                                              now=state.slot)
         missed_total = missed_total + missed
+        if tel is not None:
+            # QoS observables at service time: queue sojourn of every row
+            # served this batch (and its +1-slot end-to-end latency), with a
+            # per-payload-class breakdown — the histograms the p50/p95/p99
+            # extraction reads
+            sojourn = batch_wait_slots(batch, state.slot)
+            is_cluster = batch.valid & (batch.payload.kind == CLUSTER_KIND)
+            is_sampling = batch.valid & (batch.payload.kind == SAMPLING_KIND)
+            metrics = hist_observe(tel, metrics, "host.sojourn_slots",
+                                   sojourn, batch.valid)
+            metrics = hist_observe(tel, metrics, "host.e2e_slots",
+                                   sojourn + 1, batch.valid)
+            metrics = hist_observe(tel, metrics, "host.sojourn_slots.cluster",
+                                   sojourn, is_cluster)
+            metrics = hist_observe(tel, metrics,
+                                   "host.sojourn_slots.sampling",
+                                   sojourn, is_sampling)
+            metrics = counter_add(tel, metrics, "host.served", batch.valid)
+            metrics = counter_add(tel, metrics, "host.deadline_misses",
+                                  missed)
 
         sigs = jax.vmap(payload_signature)(batch.payload)        # (B, 2)
         hit, cached = cache_lookup_batch(cache, sigs, batch.valid)
@@ -363,6 +449,9 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
             hits=cache.hits + jnp.sum(hit.astype(jnp.int32)),
             misses=cache.misses + jnp.sum(fresh.astype(jnp.int32)))
         served = served + jnp.sum(batch.valid.astype(jnp.int32))
+        if tel is not None:
+            metrics = counter_add(tel, metrics, "host.cache_hits", hit)
+            metrics = counter_add(tel, metrics, "host.cache_misses", fresh)
 
         # per-node ensemble: mean-logit sum + majority-vote histogram
         nid = jnp.clip(jnp.where(batch.valid, batch.node_id, 0),
@@ -378,8 +467,16 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
 
     out = jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=0),
                                  *outs)
+    if tel is not None:
+        # backlog level and age profile AFTER this slot's service — what is
+        # still waiting, and for how long it has waited
+        metrics = gauge_set(tel, metrics, "host.backlog",
+                            queue_occupancy(queue))
+        metrics = hist_observe(tel, metrics, "host.backlog_age_slots",
+                               queue_wait_slots(queue, state.slot),
+                               queue.valid)
     new_state = HostServerState(queue, cache, state.slot + 1, served,
-                                missed_total, ens_l, ens_v)
+                                missed_total, ens_l, ens_v, metrics)
     return new_state, out
 
 
@@ -387,7 +484,8 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
 def _build_serve_slot(cfg: HostServeConfig, donate: bool):
     def slot(state, entries, node_ids, mask, host_params, gen_params,
              base_key):
-        _TRACE_EVENTS[(cfg, "slot")] += 1    # trace-time only
+        compile_event(_SERVE_COMPONENT, (cfg, "slot"))    # trace-time only
+        obs_trace.instant("compile:host.serve_slot")
         return _slot_body(cfg, state, entries, node_ids, mask, host_params,
                           gen_params, base_key)
     return jax.jit(slot, donate_argnums=(0,) if donate else ())
@@ -397,7 +495,8 @@ def _build_serve_slot(cfg: HostServeConfig, donate: bool):
 def _build_serve_trace(cfg: HostServeConfig, donate: bool):
     def trace(state, entries, node_ids, masks, host_params, gen_params,
               base_key):
-        _TRACE_EVENTS[(cfg, "trace")] += 1   # trace-time only
+        compile_event(_SERVE_COMPONENT, (cfg, "trace"))   # trace-time only
+        obs_trace.instant("compile:host.serve_trace")
 
         def step(carry, inp):
             e, nid, m = inp
@@ -475,14 +574,20 @@ def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
 # Reporting
 # ---------------------------------------------------------------------------
 
-def host_server_stats(state: HostServerState) -> dict:
-    """QoS counters as python numbers (one sync; call off the hot path)."""
+def host_server_stats(state: HostServerState,
+                      cfg: HostServeConfig | None = None) -> dict:
+    """QoS counters as python numbers (one sync; call off the hot path).
+
+    With ``cfg`` (and a state whose carry holds telemetry lanes), the dict
+    additionally reports the QoS percentiles the ROADMAP asks for —
+    ``sojourn_p50/p95/p99`` and ``e2e_p50/p95/p99`` slot latencies extracted
+    from the in-slot histograms — plus the full
+    :func:`repro.obs.metrics_summary` under ``"telemetry"``."""
     served = int(state.served)
     missed = int(state.deadline_misses)
     dropped = int(state.queue.drops_overflow)
-    hits, misses = int(state.cache.hits), int(state.cache.misses)
     total = served + missed + dropped
-    return {
+    out = {
         "slot": int(state.slot),
         "served": served,
         "deadline_misses": missed,
@@ -490,10 +595,17 @@ def host_server_stats(state: HostServerState) -> dict:
         "backlog": int(queue_occupancy(state.queue)),
         "deadline_miss_rate": missed / max(total, 1),
         "qos_fail_rate": (missed + dropped) / max(total, 1),  # misses + drops
-        "cache_hits": hits,
-        "cache_misses": misses,
-        "cache_hit_rate": hits / max(hits + misses, 1),
+        **cache_stats(state.cache),
     }
+    if cfg is not None and cfg.telemetry and state.metrics is not None:
+        spec = host_telemetry_spec(cfg)
+        summary = metrics_summary(spec, state.metrics)
+        out["telemetry"] = summary
+        for key, lane in (("sojourn", "host.sojourn_slots"),
+                          ("e2e", "host.e2e_slots")):
+            for q in (50, 95, 99):
+                out[f"{key}_p{q}"] = summary[lane][f"p{q}"]
+    return out
 
 
 def host_ensemble(state: HostServerState) -> dict:

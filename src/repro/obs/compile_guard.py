@@ -1,0 +1,89 @@
+"""Compile-count accounting: (re)trace events as a tracked metric.
+
+XLA recompiles are the silent performance killer in a jit-heavy serving
+system — a shape that varies per fleet round turns the compile cache into a
+treadmill.  The host tier pinned this with an ad-hoc ``serve_trace_count``
+probe (PR 3); this module is that probe generalized for every component:
+
+* traced function bodies call :func:`compile_event` — Python in a jitted
+  function runs only at trace time, so the counter increments exactly once
+  per distinct compiled shape;
+* :func:`compile_count` reads per-component totals, and
+  :func:`compile_guard` wraps a block and RAISES
+  :class:`CompileBudgetError` when the block traced more shapes than its
+  budget — compiled-shape budgets become regression-testable instead of
+  folklore (the fleet engines and the host serve path are pinned at <= 2
+  shapes under churny traces by ``tests/test_obs.py``).
+
+An optional hashable ``key`` (a config dataclass, a shape tuple) splits a
+component's count, mirroring the host probe's per-config accounting.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+from typing import Hashable
+
+__all__ = ["compile_event", "compile_count", "compile_counts",
+           "compile_key_counts", "reset_compile_counts", "compile_guard",
+           "CompileBudgetError"]
+
+_COUNTS: collections.Counter = collections.Counter()
+
+
+class CompileBudgetError(RuntimeError):
+    """A block compiled more distinct shapes than its declared budget."""
+
+
+def compile_event(component: str, key: Hashable = None) -> None:
+    """Count one (re)trace of ``component``.  Call from INSIDE the traced
+    function body (runs at trace time only, never per step)."""
+    _COUNTS[(component, key)] += 1
+
+
+def compile_count(component: str | None = None,
+                  key: Hashable = None) -> int:
+    """Trace events so far: for one ``(component, key)``, for every key of a
+    ``component``, or the global total."""
+    if component is None:
+        return sum(_COUNTS.values())
+    if key is not None:
+        return _COUNTS[(component, key)]
+    return sum(n for (c, _), n in _COUNTS.items() if c == component)
+
+
+def compile_key_counts(component: str) -> dict:
+    """``{key: trace events}`` for one component — lets a caller group keys
+    its own way (e.g. the host probe's ``batches_per_slot``-normalized
+    per-config accounting)."""
+    return {k: n for (c, k), n in _COUNTS.items() if c == component}
+
+
+def compile_counts() -> dict[str, int]:
+    """Per-component totals (the ``--emit-metrics`` dump's compile section)."""
+    out: dict[str, int] = {}
+    for (c, _), n in _COUNTS.items():
+        out[c] = out.get(c, 0) + n
+    return dict(sorted(out.items()))
+
+
+def reset_compile_counts() -> None:
+    _COUNTS.clear()
+
+
+@contextlib.contextmanager
+def compile_guard(component: str, budget: int):
+    """Assert the wrapped block stays within its compiled-shape budget.
+
+    ``with compile_guard("fleet.run", 2): ...`` raises
+    :class:`CompileBudgetError` if more than ``budget`` new trace events for
+    ``component`` occur inside the block.
+    """
+    before = compile_count(component)
+    yield
+    grew = compile_count(component) - before
+    if grew > budget:
+        raise CompileBudgetError(
+            f"{component} compiled {grew} distinct shapes inside a "
+            f"compile_guard budget of {budget} — a shape that varies per "
+            f"call is defeating the compile cache")

@@ -1,0 +1,316 @@
+"""Metrics registry: declared-once telemetry lanes on a jit-friendly pytree.
+
+Seeker's headline claims are *measurements* — communication volume,
+completion fraction, QoS satisfaction under harvested-energy churn — so the
+engines need one substrate every counter flows through instead of ad-hoc
+aggregate dicts per engine.  This module is that substrate:
+
+* a :class:`MetricsSpec` declares named lanes ONCE (counter, gauge, or
+  fixed-bin histogram).  The spec is a frozen, hashable dataclass, so it can
+  key the engines' compile caches and ride ``lru_cache`` builders;
+* :func:`metrics_init` materializes the spec as a flat ``{name: array}``
+  pytree that rides a ``lax.scan`` carry (the fleet engines) or a server
+  state (the host tier).  Every update op is pure fixed-shape jnp;
+* **exactness is the contract**: counters are (2,) int32 ``[hi, lo]``
+  base-2**16 digit pairs (the PR-5 idiom — float32 sums lose bytes past
+  2**24, int64 is off by default), histogram counts and gauges are int32.
+  Integer adds are associative, so lanes are *bitwise-equal* across
+  single-device, sharded (``psum`` component-wise via
+  :func:`metrics_psum`), and streamed (:func:`metrics_merge` across
+  segments) execution — observation never depends on layout;
+* histograms are **fixed-bin**: log-spaced edges for latency-style values
+  (percentile extraction via :func:`percentile_from_hist` on the host side)
+  or categorical integer bins (decision codes).  Bin edges are static
+  functions of the spec, never of the data, so recording stays jit-stable.
+
+The fleet engines build their spec in
+:func:`repro.serving.fleet.fleet_telemetry_spec`; the host tier in
+:func:`repro.host.server.host_telemetry_spec` — this module knows nothing
+about either (obs is a leaf dependency).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Lane", "MetricsSpec", "counter", "gauge", "histogram",
+           "metrics_init", "counter_add", "gauge_set", "hist_observe",
+           "metrics_psum", "metrics_merge", "counter_value", "int_pair_total",
+           "int_pair_sum", "categorical_counts", "lane_edges",
+           "percentile_from_hist", "metrics_summary"]
+
+COUNTER = "counter"
+GAUGE = "gauge"
+HISTOGRAM = "histogram"
+
+# int32-pair digit base: per-slot/per-shard lo digits stay < 2**31 for fleets
+# up to 32767 nodes (the same bound as PR 5's wire-byte pair)
+_DIGIT = 16
+_MASK = (1 << _DIGIT) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Lane:
+    """One declared metric lane (hashable; lives inside a MetricsSpec).
+
+    ``kind``: ``"counter"`` — monotone exact int total, stored as a
+    normalized (2,) int32 ``[hi, lo]`` base-2**16 pair; ``"gauge"`` — an
+    int32 level re-set each slot (summed across shards, latest-wins across
+    segments); ``"histogram"`` — (bins,) int32 counts over fixed edges:
+    log-spaced over ``(lo, hi)`` when ``log`` (latency lanes), else
+    categorical integer bins ``0..bins-1`` (decision codes), with the last
+    bin catching overflow either way."""
+
+    name: str
+    kind: str
+    unit: str = ""
+    bins: int = 0
+    lo: float = 1.0
+    hi: float = 1024.0
+    log: bool = True
+
+    def __post_init__(self):
+        if self.kind not in (COUNTER, GAUGE, HISTOGRAM):
+            raise ValueError(f"unknown lane kind {self.kind!r}")
+        if self.kind == HISTOGRAM:
+            if self.bins < 2:
+                raise ValueError(
+                    f"histogram lane {self.name!r} needs >= 2 bins")
+            if self.log and not 0 < self.lo < self.hi:
+                raise ValueError(
+                    f"histogram lane {self.name!r} needs 0 < lo < hi for "
+                    f"log-spaced edges, got ({self.lo}, {self.hi})")
+
+
+def counter(name: str, unit: str = "") -> Lane:
+    return Lane(name, COUNTER, unit)
+
+
+def gauge(name: str, unit: str = "") -> Lane:
+    return Lane(name, GAUGE, unit)
+
+
+def histogram(name: str, bins: int, lo: float = 1.0, hi: float = 1024.0,
+              unit: str = "", log: bool = True) -> Lane:
+    return Lane(name, HISTOGRAM, unit, bins=bins, lo=lo, hi=hi, log=log)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSpec:
+    """The declared lane set.  Frozen + hashable: one spec instance keys one
+    compiled engine variant, exactly like ``BrownoutConfig`` et al."""
+
+    lanes: tuple[Lane, ...]
+
+    def __post_init__(self):
+        names = [ln.name for ln in self.lanes]
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(f"duplicate lane names: {sorted(dupes)}")
+
+    def lane(self, name: str) -> Lane:
+        for ln in self.lanes:
+            if ln.name == name:
+                return ln
+        raise KeyError(
+            f"no lane {name!r} declared; spec has "
+            f"{[ln.name for ln in self.lanes]}")
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(ln.name for ln in self.lanes)
+
+
+@functools.lru_cache(maxsize=256)
+def lane_edges(lane: Lane) -> tuple[float, ...]:
+    """The ``bins - 1`` static bin edges of a histogram lane.  A value lands
+    in bin ``sum(v > edges)``: log lanes put ``v <= lo`` in bin 0 and
+    ``v > hi`` in the overflow bin; categorical lanes map integer ``k`` to
+    bin ``k`` (clipped into the last bin)."""
+    if lane.kind != HISTOGRAM:
+        raise ValueError(f"{lane.name!r} is not a histogram lane")
+    if lane.log:
+        return tuple(float(e) for e in
+                     np.geomspace(lane.lo, lane.hi, lane.bins - 1))
+    return tuple(float(k) + 0.5 for k in range(lane.bins - 1))
+
+
+def metrics_init(spec: MetricsSpec) -> dict:
+    """The zeroed metrics pytree: ``{lane name: int32 array}`` — counters
+    (2,), gauges (), histograms (bins,)."""
+    out = {}
+    for ln in spec.lanes:
+        if ln.kind == COUNTER:
+            out[ln.name] = jnp.zeros((2,), jnp.int32)
+        elif ln.kind == GAUGE:
+            out[ln.name] = jnp.zeros((), jnp.int32)
+        else:
+            out[ln.name] = jnp.zeros((ln.bins,), jnp.int32)
+    return out
+
+
+def _norm_pair(pair: jnp.ndarray) -> jnp.ndarray:
+    """Canonical ``[hi, lo]``: carry lo's overflow digits into hi.  The
+    canonical form (``lo < 2**16``) is unique for a given total, which is
+    what makes counter pairs bitwise-comparable across layouts."""
+    return jnp.stack([pair[0] + (pair[1] >> _DIGIT), pair[1] & _MASK])
+
+
+def int_pair_sum(values: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Exact masked sum of non-negative int values as an UNNORMALIZED (2,)
+    int32 ``[hi, lo]`` digit pair: each value is split into base-2**16
+    digits *before* the reduction, so both digit sums stay exact in int32
+    for up to 32767 terms of < 2**31 each (the PR-5 wire-byte idiom,
+    generalized).  Combine with :func:`int_pair_total` or feed
+    :func:`counter_add`."""
+    v = jnp.asarray(values)
+    if v.dtype == bool:
+        v = v.astype(jnp.int32)
+    elif jnp.issubdtype(v.dtype, jnp.floating):
+        v = jnp.round(v).astype(jnp.int32)
+    else:
+        v = v.astype(jnp.int32)
+    if mask is not None:
+        v = jnp.where(mask, v, 0)
+    return jnp.stack([jnp.sum(v >> _DIGIT),
+                      jnp.sum(v & _MASK)]).astype(jnp.int32)
+
+
+def int_pair_total(pair) -> int:
+    """Combine a (2,) ``[hi, lo]`` pair into the exact arbitrary-precision
+    Python int it represents (host side)."""
+    hi, lo = (int(x) for x in np.asarray(pair))
+    return (hi << _DIGIT) + lo
+
+
+def counter_add(spec: MetricsSpec, metrics: dict, name: str,
+                values: jnp.ndarray,
+                mask: jnp.ndarray | None = None) -> dict:
+    """Add a masked batch of non-negative values to a counter lane, exactly.
+    ``values`` may be any shape (bool counts as 0/1, floats are rounded —
+    whole-byte payload lanes); the pair stays normalized after every add."""
+    if spec.lane(name).kind != COUNTER:
+        raise ValueError(f"{name!r} is not a counter lane")
+    pair = metrics[name] + int_pair_sum(values, mask)
+    return {**metrics, name: _norm_pair(pair)}
+
+
+def gauge_set(spec: MetricsSpec, metrics: dict, name: str,
+              value: jnp.ndarray) -> dict:
+    """Overwrite a gauge lane with this slot's level (() int32)."""
+    if spec.lane(name).kind != GAUGE:
+        raise ValueError(f"{name!r} is not a gauge lane")
+    return {**metrics, name: jnp.asarray(value).astype(jnp.int32)}
+
+
+def hist_observe(spec: MetricsSpec, metrics: dict, name: str,
+                 values: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> dict:
+    """Record a masked batch of values into a histogram lane's fixed bins.
+    Bin index is ``sum(v > edges)`` over the lane's static edges; counts are
+    int32 scatter-adds (exact, order-independent)."""
+    ln = spec.lane(name)
+    if ln.kind != HISTOGRAM:
+        raise ValueError(f"{name!r} is not a histogram lane")
+    edges = jnp.asarray(lane_edges(ln), jnp.float32)
+    v = jnp.asarray(values).astype(jnp.float32).reshape(-1)
+    idx = jnp.sum(v[:, None] > edges[None, :], axis=-1)
+    m = (jnp.ones(v.shape, jnp.int32) if mask is None
+         else jnp.asarray(mask).reshape(-1).astype(jnp.int32))
+    counts = jnp.zeros((ln.bins,), jnp.int32).at[idx].add(m)
+    return {**metrics, name: metrics[name] + counts}
+
+
+def categorical_counts(values: jnp.ndarray, bins: int,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(bins,) int32 masked counts of integer codes — the decision-histogram
+    primitive shared by the engines' post-scan aggregates and the registry's
+    categorical lanes (one implementation, two views)."""
+    oh = jax.nn.one_hot(values, bins, dtype=jnp.int32)
+    if mask is not None:
+        oh = oh * jnp.asarray(mask)[..., None].astype(jnp.int32)
+    return jnp.sum(oh, axis=tuple(range(oh.ndim - 1)))
+
+
+def metrics_psum(spec: MetricsSpec, metrics: dict, axis_names) -> dict:
+    """Component-wise ``psum`` of every lane across shards, counters
+    re-normalized afterwards (per-shard pairs are canonical, so their digit
+    sums stay exact for any realistic shard count)."""
+    out = {}
+    for ln in spec.lanes:
+        summed = jax.lax.psum(metrics[ln.name], axis_names)
+        out[ln.name] = _norm_pair(summed) if ln.kind == COUNTER else summed
+    return out
+
+
+def metrics_merge(spec: MetricsSpec, a: dict | None, b: dict) -> dict:
+    """Combine two lane pytrees: counters add exactly (re-normalized),
+    histograms add, gauges take ``b``'s level (the later segment).  This is
+    the streamed driver's resume rule — merging per-segment metrics is
+    bitwise-equal to one long run."""
+    if a is None:
+        return b
+    out = {}
+    for ln in spec.lanes:
+        if ln.kind == COUNTER:
+            out[ln.name] = _norm_pair(a[ln.name] + b[ln.name])
+        elif ln.kind == GAUGE:
+            out[ln.name] = b[ln.name]
+        else:
+            out[ln.name] = a[ln.name] + b[ln.name]
+    return out
+
+
+def counter_value(metrics: dict, name: str) -> int:
+    """Host-side exact value of a counter lane."""
+    return int_pair_total(metrics[name])
+
+
+def percentile_from_hist(counts, edges, q: float) -> float:
+    """Host-side percentile (``q`` in [0, 100]) from fixed-bin counts.
+
+    Finds the bin where the cumulative count crosses ``q% `` of the total and
+    interpolates linearly inside it (bin 0 spans ``[0, edges[0]]``; the
+    overflow bin reports its lower edge — the histogram cannot resolve
+    beyond its top edge, and the conservative answer is "at least hi").
+    Returns ``nan`` on an empty histogram."""
+    counts = np.asarray(counts, dtype=np.int64)
+    edges = np.asarray(edges, dtype=np.float64)
+    total = counts.sum()
+    if total == 0:
+        return float("nan")
+    target = max(q / 100.0 * total, 1e-12)
+    cum = np.cumsum(counts)
+    idx = int(np.searchsorted(cum, target, side="left"))
+    if idx >= len(edges):                       # overflow bin
+        return float(edges[-1])
+    lo = 0.0 if idx == 0 else float(edges[idx - 1])
+    hi = float(edges[idx])
+    inside = target - (0 if idx == 0 else cum[idx - 1])
+    frac = inside / max(counts[idx], 1)
+    return lo + (hi - lo) * min(frac, 1.0)
+
+
+def metrics_summary(spec: MetricsSpec, metrics: dict) -> dict:
+    """Host-side human/JSON view: counters as exact ints, gauges as ints,
+    histograms as ``{counts, edges, p50, p95, p99}``."""
+    out = {}
+    for ln in spec.lanes:
+        if ln.kind == COUNTER:
+            out[ln.name] = counter_value(metrics, ln.name)
+        elif ln.kind == GAUGE:
+            out[ln.name] = int(metrics[ln.name])
+        else:
+            counts = np.asarray(metrics[ln.name]).tolist()
+            edges = list(lane_edges(ln))
+            out[ln.name] = {
+                "counts": counts, "edges": edges, "unit": ln.unit,
+                "p50": percentile_from_hist(counts, edges, 50.0),
+                "p95": percentile_from_hist(counts, edges, 95.0),
+                "p99": percentile_from_hist(counts, edges, 99.0),
+            }
+    return out

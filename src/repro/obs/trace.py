@@ -1,0 +1,117 @@
+"""Wall-clock span tracer with Chrome-trace/Perfetto JSON export.
+
+The registry (:mod:`repro.obs.registry`) measures *what the simulation did*;
+this module measures *where the wall-clock went* — edge-scan segments, host
+microbatches, jit (re)traces, benchmark phases.  Spans are recorded with
+:func:`span`, a context manager that can **flush async dispatch** before
+stamping the end time: jax returns futures, so a naive ``perf_counter``
+around a jitted call times the dispatch, not the work.  Pass the result
+arrays (or a callable producing them) as ``flush=`` and the span blocks via
+``jax.block_until_ready`` before closing — the honest-timing idiom the
+benchmarks already use, made structural.
+
+Tracing is **off by default** and the disabled path does nothing at all (no
+clock reads, no flush), so instrumented library code — the streamed fleet
+driver, the host serve loop — is perturbation-free unless a tool opts in
+with :func:`enable`.
+
+Export (:func:`export_chrome_trace`) writes the Chrome trace-event JSON
+format (``{"traceEvents": [...]}``, ``ph: "X"`` complete events in µs),
+loadable directly in Perfetto / ``chrome://tracing``; CI uploads the file
+per PR next to the BENCH artifacts.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+import time
+
+import jax
+
+__all__ = ["enable", "enabled", "clear", "span", "instant", "events",
+           "export_chrome_trace"]
+
+_LOCK = threading.Lock()
+_ENABLED = False
+_EVENTS: list[dict] = []
+_T0_NS = time.perf_counter_ns()
+
+
+def enable(on: bool = True) -> None:
+    """Globally switch span recording on/off (off = zero-overhead no-ops)."""
+    global _ENABLED
+    _ENABLED = on
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def clear() -> None:
+    """Drop all recorded events (the buffer is process-global)."""
+    with _LOCK:
+        _EVENTS.clear()
+
+
+def _now_us() -> float:
+    return (time.perf_counter_ns() - _T0_NS) / 1e3
+
+
+def _record(ev: dict) -> None:
+    with _LOCK:
+        _EVENTS.append(ev)
+
+
+@contextlib.contextmanager
+def span(name: str, cat: str = "repro", args: dict | None = None,
+         flush=None):
+    """Record a wall-clock span around a block.
+
+    ``flush``: jax arrays (any pytree) or a zero-arg callable returning
+    them — ``jax.block_until_ready`` runs on them before the end timestamp,
+    so asynchronously-dispatched device work is *inside* the span instead of
+    leaking into whatever is timed next.  When tracing is disabled the body
+    runs untouched: no clock, no flush, no event.
+    """
+    if not _ENABLED:
+        yield
+        return
+    t0 = _now_us()
+    try:
+        yield
+    finally:
+        if flush is not None:
+            jax.block_until_ready(flush() if callable(flush) else flush)
+        _record({"name": name, "cat": cat, "ph": "X", "ts": t0,
+                 "dur": _now_us() - t0, "pid": os.getpid(),
+                 "tid": threading.get_ident(),
+                 **({"args": args} if args else {})})
+
+
+def instant(name: str, cat: str = "repro",
+            args: dict | None = None) -> None:
+    """Record a zero-duration instant event (e.g. a jit retrace — called
+    from traced-function bodies, which only run at trace time)."""
+    if not _ENABLED:
+        return
+    _record({"name": name, "cat": cat, "ph": "i", "s": "p",
+             "ts": _now_us(), "pid": os.getpid(),
+             "tid": threading.get_ident(),
+             **({"args": args} if args else {})})
+
+
+def events() -> list[dict]:
+    """Snapshot of the recorded events (copies; safe to mutate)."""
+    with _LOCK:
+        return [dict(e) for e in _EVENTS]
+
+
+def export_chrome_trace(path: str) -> int:
+    """Write the recorded events as Chrome-trace JSON (Perfetto-loadable);
+    returns the number of events written."""
+    evs = events()
+    with open(path, "w") as f:
+        json.dump({"traceEvents": evs, "displayTimeUnit": "ms"}, f)
+    return len(evs)

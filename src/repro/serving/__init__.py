@@ -10,6 +10,7 @@ from .edge_host import (  # noqa: F401
     intermittent_fleet_init, IntermittentLaneOut, intermittent_lane_step,
 )
 from .fleet import (  # noqa: F401
-    fleet_node_init, seeker_fleet_simulate, seeker_fleet_simulate_sharded,
-    seeker_fleet_simulate_streamed, wire_bytes_exact,
+    fleet_node_init, fleet_telemetry_spec, seeker_fleet_simulate,
+    seeker_fleet_simulate_sharded, seeker_fleet_simulate_streamed,
+    wire_bytes_exact,
 )

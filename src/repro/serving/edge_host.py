@@ -1021,7 +1021,9 @@ def _fleet_serve_per_shard(windows, *, n, t, c, k, mesh, axis_names,
 
     from jax.sharding import PartitionSpec as P
 
-    from ..host.server import SlotOutput, _slot_body, cluster_entries
+    from ..host.server import (SlotOutput, _slot_body, cluster_entries,
+                               host_telemetry_spec)
+    from ..obs import metrics_psum
     from ..sharding import shard_map_compat
 
     if serve_cfg is None or gen_params is None or host_state is None:
@@ -1064,26 +1066,41 @@ def _fleet_serve_per_shard(windows, *, n, t, c, k, mesh, axis_names,
         }
         qos["drops_overflow"] = jax.lax.psum(
             new_state.queue.drops_overflow, axis_names)
+        if cfg.telemetry:
+            # fleet-wide registry lanes: per-shard host lanes psum'd
+            # component-wise, exactly like the fleet engine's — the
+            # multi-host QoS-percentile substrate (histograms stay exact
+            # int32 across any shard layout)
+            qos["telemetry"] = metrics_psum(
+                host_telemetry_spec(cfg), new_state.metrics, axis_names)
         return (jax.tree_util.tree_map(lambda a: a[None], new_state),
                 slot_out, qos)
 
     nodes = P(axis_names)
     state_specs = jax.tree_util.tree_map(lambda _: nodes, host_state)
+    qos_specs = {"served": P(), "deadline_misses": P(),
+                 "drops_overflow": P()}
+    if serve_cfg.telemetry:
+        qos_specs["telemetry"] = {
+            name: P() for name in host_telemetry_spec(serve_cfg).names()}
     fn = shard_map_compat(
         tier, mesh,
         in_specs=(nodes, state_specs, nodes, nodes, P()),
         out_specs=(state_specs,
                    SlotOutput(*([nodes] * len(SlotOutput._fields))),
-                   {"served": P(), "deadline_misses": P(),
-                    "drops_overflow": P()}),
+                   qos_specs),
         axis_names=frozenset(axis_names))
     new_state, slot_out, qos = fn(windows, host_state, node_ids, mask_full,
                                   key)
+    telemetry = qos.pop("telemetry", None)
     n_tx = n if alive is None else int(jnp.sum(alive))
-    return {
+    out = {
         "wire_bytes": n_tx * wire_payload_nbytes(k, c),
         "raw_bytes": n * raw_payload_bytes(t) * c,
         "host_state": new_state,
         "slot_output": slot_out,
         "qos": {k_: int(v) for k_, v in qos.items()},
     }
+    if telemetry is not None:
+        out["telemetry"] = telemetry
+    return out

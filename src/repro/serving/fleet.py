@@ -68,6 +68,20 @@ fed to the scan in ``(chunk,)``-slot segments through the ``state0`` /
 peak window memory is O(N·chunk·T·C) instead of O(N·S·T·C) while traces
 stay bitwise-equal to one long run.
 
+**Telemetry** (``telemetry=True`` or a :class:`repro.obs.MetricsSpec`): the
+observability lane.  A metrics pytree (:func:`fleet_telemetry_spec`:
+exact-int counters as normalized (2,) int32 ``[hi, lo]`` pairs, the
+categorical decision histogram, a stored-energy gauge) rides the scan carry
+of all three engines, updated per slot from the same masked quantities the
+post-scan aggregates use; the sharded engine ``psum``-s the lanes
+component-wise (int adds are associative, so lanes are *bitwise-equal*
+across single-device, sharded and streamed runs), and the streamed driver
+chains segments through ``telemetry_state0`` /
+``res["telemetry"]`` (:func:`repro.obs.metrics_merge`) exactly like the
+rest of the resume contract.  ``telemetry=None`` (default) keeps every
+engine bitwise-identical to the untelemetered path — observation never
+perturbs simulation.
+
 **Intermittent inference** (``intermittent=IntermittentConfig(...)``): the
 partial-inference lane.  Slots the strict ladder would DEFER instead run as
 many energy-quantized stages of the on-node quantized DNN as ``stored +
@@ -99,16 +113,99 @@ from ..core.energy import (BrownoutConfig, EnergyCosts, predictor_init,
                            supercap_step)
 from ..kernels.ops import signature_corr_op
 from ..models.har import HARConfig, quantize_params
+from ..obs import (MetricsSpec, categorical_counts, compile_event,
+                   counter, counter_add, gauge, gauge_set, hist_observe,
+                   histogram, int_pair_sum, int_pair_total, metrics_init,
+                   metrics_merge, metrics_psum)
+from ..obs import trace as obs_trace
 from ..sharding import make_mesh_compat, node_mesh_axes, shard_map_compat
 from .edge_host import (IntermittentState, SeekerNodeState,
                         intermittent_fleet_init, intermittent_lane_step,
                         seeker_host_step, seeker_sensor_step_given_corr)
 
-__all__ = ["fleet_node_init", "seeker_fleet_simulate",
-           "seeker_fleet_simulate_sharded", "seeker_fleet_simulate_streamed",
-           "wire_bytes_exact"]
+__all__ = ["fleet_node_init", "fleet_telemetry_spec",
+           "seeker_fleet_simulate", "seeker_fleet_simulate_sharded",
+           "seeker_fleet_simulate_streamed", "wire_bytes_exact"]
 
 N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the fleet histogram
+
+
+@functools.lru_cache(maxsize=8)
+def fleet_telemetry_spec(intermittent: bool = False) -> MetricsSpec:
+    """The fleet engines' registry lanes (:mod:`repro.obs.registry`).
+
+    Declared once and shared by all three engines, so a lane name means the
+    same masked quantity everywhere: ``fleet.wire_bytes`` mirrors the exact
+    ``bytes_on_wire_i32`` pair, ``fleet.decisions`` the decision histogram,
+    ``fleet.completed``/``fleet.alive_slots``/``fleet.brownout_*`` the psum'd
+    counters, and ``fleet.stored_uj`` is a gauge of the fleet's total stored
+    energy (floor-µJ over alive nodes) at the latest slot.  All lanes are
+    int32 — counter pairs and categorical histograms are associative, which
+    is what makes them *bitwise-equal* across single-device, sharded and
+    streamed runs (float sums are not order-independent and stay out of the
+    parity set)."""
+    n_bins = N_INTERMITTENT_DECISIONS if intermittent else N_DECISIONS
+    lanes = [
+        counter("fleet.wire_bytes", "B"),
+        counter("fleet.completed", "windows"),
+        counter("fleet.alive_slots", "slots"),
+        counter("fleet.brownout_slots", "slots"),
+        counter("fleet.brownout_events", "events"),
+        gauge("fleet.stored_uj", "uJ"),
+        histogram("fleet.decisions", n_bins, log=False, unit="decisions"),
+    ]
+    if intermittent:
+        lanes += [counter("fleet.it_full", "windows"),
+                  counter("fleet.it_early", "windows")]
+    return MetricsSpec(tuple(lanes))
+
+
+def _resolve_telemetry(telemetry,
+                       intermittent: IntermittentConfig | None
+                       ) -> MetricsSpec | None:
+    """``True`` -> the default lane set; a :class:`MetricsSpec` passes
+    through (it must declare the fleet lanes); ``None`` stays off."""
+    if telemetry is None or telemetry is False:
+        return None
+    if telemetry is True:
+        return fleet_telemetry_spec(intermittent is not None)
+    if not isinstance(telemetry, MetricsSpec):
+        raise TypeError(f"telemetry must be None/True/MetricsSpec, "
+                        f"got {type(telemetry).__name__}")
+    return telemetry
+
+
+def _update_fleet_lanes(spec: MetricsSpec, metrics: dict, out_trace: dict,
+                        exo_alive_t: jnp.ndarray,
+                        intermittent: IntermittentConfig | None) -> dict:
+    """Advance every registry lane by one slot, from the engine's MASKED
+    ``out_trace`` quantities — the same post-mask values the post-scan
+    aggregates reduce, so carry lanes and aggregates cannot drift apart.
+    Padding nodes are exogenously dead (``alive`` False, ``brownout`` flag
+    frozen False), so they contribute to no lane without any extra mask."""
+    act = out_trace["alive"]
+    dec = out_trace["decision"]
+    if intermittent is None:
+        sent = (dec != DEFER) & act
+    else:
+        sent = (dec != DEFER) & (dec != D6_PARTIAL) & act
+    m = counter_add(spec, metrics, "fleet.wire_bytes",
+                    out_trace["payload"], act)
+    m = counter_add(spec, m, "fleet.completed", sent)
+    m = counter_add(spec, m, "fleet.alive_slots", act)
+    m = counter_add(spec, m, "fleet.brownout_slots",
+                    out_trace["brownout"] & exo_alive_t)
+    m = counter_add(spec, m, "fleet.brownout_events", out_trace["bo_event"])
+    m = gauge_set(spec, m, "fleet.stored_uj",
+                  jnp.sum(jnp.where(
+                      act, jnp.floor(out_trace["stored"]).astype(jnp.int32),
+                      0)))
+    m = hist_observe(spec, m, "fleet.decisions", dec, act)
+    if intermittent is not None:
+        emit = out_trace["it_emit"]
+        m = counter_add(spec, m, "fleet.it_full", (emit == 2) & act)
+        m = counter_add(spec, m, "fleet.it_early", (emit == 1) & act)
+    return m
 
 
 def fleet_node_init(n_nodes: int, predictor_window: int = 8,
@@ -124,7 +221,8 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, t: int, node_block: int | None,
                      brownout: BrownoutConfig | None,
-                     intermittent: IntermittentConfig | None = None):
+                     intermittent: IntermittentConfig | None = None,
+                     telemetry: MetricsSpec | None = None):
     """One fleet time slot, shared VERBATIM by the single-device scan and the
     per-shard scan inside ``shard_map`` — the sharded engine sees exactly this
     computation on its local node tile.
@@ -218,6 +316,14 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 
     def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
              aac_table, aux_params=None):
+        if telemetry is not None:
+            # telemetry rides as the TRAILING carry lane (a dict of int32
+            # lane arrays) — never passed through keep(): lanes accumulate
+            # fleet-level masked counts, not per-node state
+            *carry, metrics = carry
+            carry = tuple(carry)
+        else:
+            metrics = None
         if intermittent is None:
             state, keys, browned = carry
             win_t, harv_t, alive_t = inp
@@ -308,18 +414,23 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             "bo_event": next_browned & ~browned,   # brown-out onsets
         }
         if intermittent is None:
-            return (new_state, new_keys, next_browned), out_trace
-        # a dead/browned-out node ran no lane this slot: its emission lane
-        # is masked like the decision lane (the label/conf/src fields are
-        # only meaningful where it_emit > 0)
-        out_trace.update({
-            "it_emit": jnp.where(alive_eff, trace["it_emit"], 0),
-            "it_label": trace["it_label"],
-            "it_conf": trace["it_conf"],
-            "it_src": trace["it_src"],
-            "it_stage": trace["it_stage"],
-        })
-        return (new_state, new_keys, next_browned, new_it), out_trace
+            new_carry = (new_state, new_keys, next_browned)
+        else:
+            # a dead/browned-out node ran no lane this slot: its emission
+            # lane is masked like the decision lane (the label/conf/src
+            # fields are only meaningful where it_emit > 0)
+            out_trace.update({
+                "it_emit": jnp.where(alive_eff, trace["it_emit"], 0),
+                "it_label": trace["it_label"],
+                "it_conf": trace["it_conf"],
+                "it_src": trace["it_src"],
+                "it_stage": trace["it_stage"],
+            })
+            new_carry = (new_state, new_keys, next_browned, new_it)
+        if telemetry is not None:
+            new_carry = new_carry + (_update_fleet_lanes(
+                telemetry, metrics, out_trace, alive_t, intermittent),)
+        return new_carry, out_trace
 
     return step
 
@@ -329,7 +440,8 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, node_block: int | None,
                      brownout: BrownoutConfig | None, donate: bool,
-                     intermittent: IntermittentConfig | None = None):
+                     intermittent: IntermittentConfig | None = None,
+                     telemetry: MetricsSpec | None = None):
     """Compile-cached fleet scan, keyed on the static configuration.
 
     All arrays (params, signatures, windows, state) are jit *arguments*, so
@@ -338,42 +450,57 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     re-tracing a fresh closure each call.  With ``intermittent`` the run
     signature gains the stacked lane state, the global slot indices and the
     auxiliary-head params; without it the legacy signature (and computation)
-    is unchanged.
+    is unchanged.  With ``telemetry`` the scan carry (and the return tuple)
+    gains the registry-lane pytree, always starting from ZERO — the run
+    computes a telemetry *delta*, merged with any resumed
+    ``telemetry_state0`` host-side, which is what keeps the sharded engine
+    from double-counting a replicated carry-in on psum.
     """
 
     if intermittent is None:
         def run(state0, keys0, browned0, xs_w, xs_h, xs_alive, signatures,
                 qdnn_params, host_params, gen_params, aac_table):
+            compile_event("fleet.run")
+            obs_trace.instant("compile:fleet.run")
             t = xs_w.shape[-2]
             step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
                                     m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout)
-            (state, keys, browned), traces = jax.lax.scan(
+                                    t, node_block, brownout,
+                                    telemetry=telemetry)
+            carry0 = (state0, keys0, browned0)
+            if telemetry is not None:
+                carry0 = carry0 + (metrics_init(telemetry),)
+            final, traces = jax.lax.scan(
                 lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                                   gen_params, aac_table),
-                (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
+                carry0, (xs_w, xs_h, xs_alive))
             # the evolved keys (and the brown-out flag) are returned so a
             # resumed run (state0=final_state, node_keys=final_keys,
             # brownout_state0=final_brownout) continues each node's PRNG
             # stream and hysteresis state instead of replaying segment 1's
-            return traces, state, keys, browned
+            return (traces,) + final
     else:
         def run(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive, xs_slots,
                 signatures, qdnn_params, host_params, gen_params, aac_table,
                 aux_params):
+            compile_event("fleet.run")
+            obs_trace.instant("compile:fleet.run")
             t = xs_w.shape[-2]
             step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
                                     m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout, intermittent)
-            (state, keys, browned, it), traces = jax.lax.scan(
+                                    t, node_block, brownout, intermittent,
+                                    telemetry=telemetry)
+            carry0 = (state0, keys0, browned0, it0)
+            if telemetry is not None:
+                carry0 = carry0 + (metrics_init(telemetry),)
+            final, traces = jax.lax.scan(
                 lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                                   gen_params, aac_table, aux_params),
-                (state0, keys0, browned0, it0),
-                (xs_w, xs_h, xs_alive, xs_slots))
+                carry0, (xs_w, xs_h, xs_alive, xs_slots))
             # final_intermittent joins the resume contract: a resumed run
             # (intermittent_state0=final_intermittent, slot0=slots run so
             # far) continues suspended inferences instead of dropping them
-            return traces, state, keys, browned, it
+            return (traces,) + final
 
     # donate the stacked node state (it is returned, so XLA can alias it)
     return jax.jit(run, donate_argnums=(0,) if donate else ())
@@ -387,10 +514,13 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                              per_node_labels: bool,
                              node_block: int | None,
                              brownout: BrownoutConfig | None, donate: bool,
-                             intermittent: IntermittentConfig | None = None):
+                             intermittent: IntermittentConfig | None = None,
+                             telemetry: MetricsSpec | None = None):
     """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
     ``shard_map`` manual region, each shard scanning its local node tile;
-    only the masked fleet aggregates are ``psum``-ed over ``axis_names``.
+    only the masked fleet aggregates (and, with ``telemetry``, the registry
+    lanes via :func:`repro.obs.metrics_psum`) are ``psum``-ed over
+    ``axis_names``.
 
     ``per_node_labels`` switches the accuracy aggregate between one shared
     (S,) label track (replicated) and per-node (S, N) tracks (sharded over
@@ -422,9 +552,7 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
         wire_pair = jax.lax.psum(
             _wire_byte_pair(traces["payload"], act), axis_names)
         hist = jax.lax.psum(
-            jnp.sum(jax.nn.one_hot(traces["decision"], n_bins,
-                                   dtype=jnp.int32)
-                    * act[..., None].astype(jnp.int32), axis=(0, 1)),
+            categorical_counts(traces["decision"], n_bins, act),
             axis_names)                                     # (n_bins,)
         completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
         alive_slots = jax.lax.psum(jnp.sum(act.astype(jnp.int32)),
@@ -490,20 +618,35 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
         })
         return aggs
 
+    # registry lanes are summed per shard then psum'd component-wise; the
+    # psum'd delta is replicated, so its out-spec is P() per lane
+    tel_out = ({name: repl for name in telemetry.names()}
+               if telemetry is not None else None)
+
     if intermittent is None:
         def shard_body(state0, keys0, browned0, xs_w, xs_h, xs_alive, mask,
                        labels, signatures, qdnn_params, host_params,
                        gen_params, aac_table):
+            compile_event("fleet.run_sharded")
+            obs_trace.instant("compile:fleet.run_sharded")
             t = xs_w.shape[-2]
             step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
                                     m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout)
-            (state, keys, browned), traces = jax.lax.scan(
+                                    t, node_block, brownout,
+                                    telemetry=telemetry)
+            carry0 = (state0, keys0, browned0)
+            if telemetry is not None:
+                carry0 = carry0 + (metrics_init(telemetry),)
+            final, traces = jax.lax.scan(
                 lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                                   gen_params, aac_table),
-                (state0, keys0, browned0), (xs_w, xs_h, xs_alive))
+                carry0, (xs_w, xs_h, xs_alive))
+            state, keys, browned = final[:3]
             aggs = _aggregates(traces, xs_alive, mask, labels, None)
-            return traces, state, keys, browned, aggs
+            out = (traces, state, keys, browned, aggs)
+            if telemetry is not None:
+                out = out + (metrics_psum(telemetry, final[3], axis_names),)
+            return out
 
         in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
                     repl if shared_stream else time_nodes,   # xs_w
@@ -513,23 +656,34 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                     time_nodes if per_node_labels else repl,  # labels
                     repl, repl, repl, repl, repl)
         out_specs = (time_nodes, nodes, nodes, nodes, repl)
+        if telemetry is not None:
+            out_specs = out_specs + (tel_out,)
     else:
         it_nodes = IntermittentState(nodes, nodes, nodes, nodes)
 
         def shard_body(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive,
                        xs_slots, mask, labels, signatures, qdnn_params,
                        host_params, gen_params, aac_table, aux_params):
+            compile_event("fleet.run_sharded")
+            obs_trace.instant("compile:fleet.run_sharded")
             t = xs_w.shape[-2]
             step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
                                     m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout, intermittent)
-            (state, keys, browned, it), traces = jax.lax.scan(
+                                    t, node_block, brownout, intermittent,
+                                    telemetry=telemetry)
+            carry0 = (state0, keys0, browned0, it0)
+            if telemetry is not None:
+                carry0 = carry0 + (metrics_init(telemetry),)
+            final, traces = jax.lax.scan(
                 lambda c, i: step(c, i, signatures, qdnn_params, host_params,
                                   gen_params, aac_table, aux_params),
-                (state0, keys0, browned0, it0),
-                (xs_w, xs_h, xs_alive, xs_slots))
+                carry0, (xs_w, xs_h, xs_alive, xs_slots))
+            state, keys, browned, it = final[:4]
             aggs = _aggregates(traces, xs_alive, mask, labels, xs_slots[0])
-            return traces, state, keys, browned, it, aggs
+            out = (traces, state, keys, browned, it, aggs)
+            if telemetry is not None:
+                out = out + (metrics_psum(telemetry, final[4], axis_names),)
+            return out
 
         in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
                     it_nodes,                         # it0 (lane state)
@@ -541,6 +695,8 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                     time_nodes if per_node_labels else repl,  # labels
                     repl, repl, repl, repl, repl, repl)
         out_specs = (time_nodes, nodes, nodes, nodes, it_nodes, repl)
+        if telemetry is not None:
+            out_specs = out_specs + (tel_out,)
 
     fn = shard_map_compat(
         shard_body, mesh, in_specs=in_specs, out_specs=out_specs,
@@ -623,9 +779,9 @@ def _wire_byte_pair(payload: jnp.ndarray, act: jnp.ndarray) -> jnp.ndarray:
     exceed 2**16); combine with :func:`wire_bytes_exact`.
     """
     p = jnp.where(act, jnp.round(payload).astype(jnp.int32), 0)
-    per_node = jnp.sum(p, axis=0)                         # (N,) int32
-    return jnp.stack([jnp.sum(per_node >> 16),
-                      jnp.sum(per_node & 0xFFFF)]).astype(jnp.int32)
+    # hierarchical: per-node totals stay exact in int32, then the digit
+    # split + reduction is the registry's shared primitive
+    return int_pair_sum(jnp.sum(p, axis=0))               # (N,) -> (2,)
 
 
 def wire_bytes_exact(res: dict) -> int:
@@ -633,10 +789,7 @@ def wire_bytes_exact(res: dict) -> int:
     total bytes the fleet put on the wire, as an arbitrary-precision Python
     int (the float32 ``bytes_on_wire`` is kept for compatibility but is
     only approximate past 2**24)."""
-    import numpy as np
-
-    hi, lo = (int(v) for v in np.asarray(res["bytes_on_wire_i32"]))
-    return (hi << 16) + lo
+    return int_pair_total(res["bytes_on_wire_i32"])
 
 
 def _resolve_brownout0(brownout_state0, state0: SeekerNodeState,
@@ -710,9 +863,8 @@ def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
     aggs = {
         "bytes_on_wire": jnp.sum(jnp.where(act, traces["payload"], 0.0)),
         "bytes_on_wire_i32": _wire_byte_pair(traces["payload"], act),
-        "decision_histogram": jnp.sum(
-            jax.nn.one_hot(traces["decision"], n_bins, dtype=jnp.int32)
-            * act[..., None].astype(jnp.int32), axis=(0, 1)),
+        "decision_histogram": categorical_counts(
+            traces["decision"], n_bins, act),
         "completed": jnp.sum(sent.astype(jnp.int32)),
         "alive_slots": jnp.sum(act.astype(jnp.int32)),
         "brownout_slots": jnp.sum(
@@ -771,7 +923,9 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           intermittent: IntermittentConfig | None = None,
                           intermittent_state0: IntermittentState | None = None,
                           aux_params: dict | None = None,
-                          slot0: int = 0):
+                          slot0: int = 0,
+                          telemetry=None,
+                          telemetry_state0: dict | None = None):
     """Simulate N independent Seeker nodes over S time slots in one scan.
 
     Args:
@@ -837,6 +991,16 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
             driver passes its segment offset so ``it_src`` emission sources
             stay globally indexed and segment chains stay bitwise equal to
             one long run.
+        telemetry: ``True`` (the default :func:`fleet_telemetry_spec` lane
+            set) or a :class:`repro.obs.MetricsSpec` — registry lanes ride
+            the scan carry and come back under ``res["telemetry"]`` (all
+            int32; bitwise-equal across the three engines).  ``None``
+            (default) keeps the engine bitwise-identical to the
+            untelemetered path.
+        telemetry_state0: a previous run's ``res["telemetry"]`` to resume
+            from — merged host-side (:func:`repro.obs.metrics_merge`) after
+            the run, so counters/histograms accumulate exactly across
+            segments and gauges keep the latest level.
 
     Returns a dict of per-node traces, time-major:
         ``decisions``/``payload_bytes``/``stored_uj``/``k_trace``: (S, N),
@@ -886,23 +1050,30 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
     browned0 = _resolve_brownout0(brownout_state0, state0, brownout, n)
     _validate_intermittent_args(intermittent, intermittent_state0,
                                 aux_params, n)
+    tel_spec = _resolve_telemetry(telemetry, intermittent)
     run_fn = _build_fleet_run(har_cfg, costs, quant_bits, k_max, m_samples,
                               corr_threshold, shared_stream, node_block,
-                              brownout, donate, intermittent)
-    final_intermittent = None
+                              brownout, donate, intermittent, tel_spec)
+    final_intermittent = tel_delta = None
     if intermittent is None:
-        traces, final_state, final_keys, final_brownout = run_fn(
+        res_t = run_fn(
             state0, keys0, browned0, xs_windows, harvest.T, alive_t,
             signatures, qdnn_params, host_params, gen_params, aac_table)
+        traces, final_state, final_keys, final_brownout = res_t[:4]
+        if tel_spec is not None:
+            tel_delta = res_t[4]
     else:
         it0 = (intermittent_state0 if intermittent_state0 is not None
                else intermittent_fleet_init(n, har_cfg))
         xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
-        (traces, final_state, final_keys, final_brownout,
-         final_intermittent) = run_fn(
+        res_t = run_fn(
             state0, keys0, browned0, it0, xs_windows, harvest.T, alive_t,
             xs_slots, signatures, qdnn_params, host_params, gen_params,
             aac_table, aux_params)
+        (traces, final_state, final_keys, final_brownout,
+         final_intermittent) = res_t[:5]
+        if tel_spec is not None:
+            tel_delta = res_t[5]
 
     aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels,
                              intermittent, slot0)
@@ -930,6 +1101,10 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
         "final_keys": final_keys,
         "final_brownout": final_brownout,
     }
+    if tel_spec is not None:
+        out["telemetry"] = metrics_merge(tel_spec, telemetry_state0,
+                                         tel_delta)
+        out["telemetry_spec"] = tel_spec
     if intermittent is not None:
         out.update({
             "it_emit": traces["it_emit"],                     # (S, N)
@@ -971,7 +1146,9 @@ def seeker_fleet_simulate_sharded(
         intermittent: IntermittentConfig | None = None,
         intermittent_state0: IntermittentState | None = None,
         aux_params: dict | None = None,
-        slot0: int = 0):
+        slot0: int = 0,
+        telemetry=None,
+        telemetry_state0: dict | None = None):
     """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
 
     The fleet's node dim is split over the mesh axes the ``"nodes"`` logical
@@ -1071,16 +1248,20 @@ def seeker_fleet_simulate_sharded(
         (0, pad))
     _validate_intermittent_args(intermittent, intermittent_state0,
                                 aux_params, n)
+    tel_spec = _resolve_telemetry(telemetry, intermittent)
     run_fn = _build_fleet_run_sharded(
         mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
         corr_threshold, shared_stream, per_node_labels, node_block,
-        brownout, donate, intermittent)
-    final_intermittent = None
+        brownout, donate, intermittent, tel_spec)
+    final_intermittent = tel_delta = None
     if intermittent is None:
-        traces, final_state, final_keys, final_brownout, aggs = run_fn(
+        res_t = run_fn(
             state_full, keys0, browned0, xs_windows, harvest_t, alive_t,
             mask, labels_arr, signatures, qdnn_params, host_params,
             gen_params, aac_table)
+        traces, final_state, final_keys, final_brownout, aggs = res_t[:5]
+        if tel_spec is not None:
+            tel_delta = res_t[5]
     else:
         it0 = (intermittent_state0 if intermittent_state0 is not None
                else intermittent_fleet_init(n, har_cfg))
@@ -1089,11 +1270,14 @@ def seeker_fleet_simulate_sharded(
             it0 = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b], axis=0), it0, filler)
         xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
-        (traces, final_state, final_keys, final_brownout, final_intermittent,
-         aggs) = run_fn(
+        res_t = run_fn(
             state_full, keys0, browned0, it0, xs_windows, harvest_t, alive_t,
             xs_slots, mask, labels_arr, signatures, qdnn_params, host_params,
             gen_params, aac_table, aux_params)
+        (traces, final_state, final_keys, final_brownout, final_intermittent,
+         aggs) = res_t[:6]
+        if tel_spec is not None:
+            tel_delta = res_t[6]
 
     out = {
         "decisions": traces["decision"][:, :n],               # (S, N)
@@ -1121,6 +1305,10 @@ def seeker_fleet_simulate_sharded(
         "padded_nodes": pad,
         "node_axes": axis_names,
     }
+    if tel_spec is not None:
+        out["telemetry"] = metrics_merge(tel_spec, telemetry_state0,
+                                         tel_delta)
+        out["telemetry_spec"] = tel_spec
     if intermittent is not None:
         out.update({
             "it_emit": traces["it_emit"][:, :n],              # (S, N)
@@ -1162,7 +1350,9 @@ def seeker_fleet_simulate_streamed(
         node_block: int | None = None, donate: bool = True,
         intermittent: IntermittentConfig | None = None,
         intermittent_state0: IntermittentState | None = None,
-        aux_params: dict | None = None):
+        aux_params: dict | None = None,
+        telemetry=None,
+        telemetry_state0: dict | None = None):
     """Feed the fleet scan in ``chunk``-slot window segments instead of
     materializing the whole (N, S, T, C) stream up front.
 
@@ -1195,6 +1385,10 @@ def seeker_fleet_simulate_streamed(
             rescored over the CONCATENATED traces (a segment cannot see the
             labels of windows captured before its first slot), so
             ``correct``/``fleet_accuracy`` again exactly match one long run.
+        telemetry: registry lanes (see :func:`seeker_fleet_simulate`) — each
+            segment resumes from the previous segment's ``res["telemetry"]``
+            (the :func:`repro.obs.metrics_merge` chain), so the final lanes
+            are bitwise-equal to one long telemetered run.
 
     Returns the engine dict with traces concatenated over time, counter
     aggregates (``decision_histogram``, ``completed``, ``alive_slots``,
@@ -1229,7 +1423,8 @@ def seeker_fleet_simulate_streamed(
               corr_threshold=corr_threshold,
               predictor_window=predictor_window, initial_uj=initial_uj,
               brownout=brownout, node_block=node_block, donate=donate,
-              intermittent=intermittent, aux_params=aux_params)
+              intermittent=intermittent, aux_params=aux_params,
+              telemetry=telemetry)
     if mesh is not None:
         kw["mesh"] = mesh
     engine = (seeker_fleet_simulate if mesh is None
@@ -1244,8 +1439,10 @@ def seeker_fleet_simulate_streamed(
                        "it_stage"]
         counter_keys += ["it_full", "it_early", "correct_ladder"]
 
+    tel_spec = _resolve_telemetry(telemetry, intermittent)
     state, keys, browned = state0, node_keys, brownout_state0
     it_state = intermittent_state0
+    tel_state = telemetry_state0
     parts: list[dict] = []
     counters: dict = {}
     bytes_on_wire = jnp.zeros((), jnp.float32)
@@ -1260,13 +1457,20 @@ def seeker_fleet_simulate_streamed(
         if intermittent is not None:
             seg_kw["intermittent_state0"] = it_state
             seg_kw["slot0"] = start
-        res = engine(window_fn(start, stop), harvest[:, start:stop],
-                     state0=state, node_keys=keys, brownout_state0=browned,
-                     **seg_kw)
+        if tel_spec is not None:
+            seg_kw["telemetry_state0"] = tel_state
+        with obs_trace.span("fleet.segment", cat="fleet",
+                            args={"start": start, "stop": stop},
+                            flush=lambda: res["decisions"]):
+            res = engine(window_fn(start, stop), harvest[:, start:stop],
+                         state0=state, node_keys=keys,
+                         brownout_state0=browned, **seg_kw)
         state, keys = res["final_state"], res["final_keys"]
         browned = res["final_brownout"]
         if intermittent is not None:
             it_state = res["final_intermittent"]
+        if tel_spec is not None:
+            tel_state = res["telemetry"]
         parts.append({k: res[k] for k in trace_keys})
         for k in counter_keys:
             if k in res:
@@ -1296,6 +1500,9 @@ def seeker_fleet_simulate_streamed(
         "final_brownout": browned,
         "n_chunks": -(-s // chunk),
     })
+    if tel_spec is not None:
+        out["telemetry"] = tel_state
+        out["telemetry_spec"] = tel_spec
     if intermittent is not None:
         out["final_intermittent"] = it_state
     if "correct" in counters:

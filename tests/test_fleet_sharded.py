@@ -397,6 +397,73 @@ print("OK")
 """
 
 
+_TELEMETRY_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core import BrownoutConfig, fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.obs import counter_value
+from repro.serving import (seeker_fleet_simulate,
+                           seeker_fleet_simulate_sharded,
+                           seeker_fleet_simulate_streamed, wire_bytes_exact)
+from repro.sharding import make_mesh_compat
+
+assert jax.device_count() == 8, jax.device_count()
+S, N, BLOCK = 6, 13, 4
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+gen = init_generator(key, HAR.window, HAR.channels)
+wins, labels = har_stream(key, S)
+harvest = fleet_harvest_traces(key, N, S)
+mesh = make_mesh_compat((8,), ("data",))
+kw = dict(signatures=class_signatures(), qdnn_params=params,
+          host_params=params, gen_params=gen, har_cfg=HAR, labels=labels,
+          node_block=BLOCK, donate=False,
+          brownout=BrownoutConfig(off_uj=8.0, restart_uj=28.0),
+          initial_uj=10.0)
+
+# --- registry lanes: single-device == sharded == streamed, bitwise --------
+ref = seeker_fleet_simulate(wins, harvest, telemetry=True, **kw)
+sh = seeker_fleet_simulate_sharded(wins, harvest, mesh=mesh, telemetry=True,
+                                   **kw)
+stream = seeker_fleet_simulate_streamed(wins, harvest, chunk=4, mesh=mesh,
+                                        telemetry=True, **kw)
+spec = ref["telemetry_spec"]
+assert sh["telemetry_spec"] is spec and stream["telemetry_spec"] is spec
+for name in spec.names():
+    np.testing.assert_array_equal(np.asarray(sh["telemetry"][name]),
+                                  np.asarray(ref["telemetry"][name]),
+                                  err_msg="sharded " + name)
+    np.testing.assert_array_equal(np.asarray(stream["telemetry"][name]),
+                                  np.asarray(ref["telemetry"][name]),
+                                  err_msg="streamed " + name)
+# counters are exact ints, equal to the engine's own psum'd aggregates
+tel = sh["telemetry"]
+assert counter_value(tel, "fleet.wire_bytes") == wire_bytes_exact(sh)
+assert counter_value(tel, "fleet.completed") == int(sh["completed"])
+assert counter_value(tel, "fleet.alive_slots") == int(sh["alive_slots"])
+assert counter_value(tel, "fleet.brownout_slots") == int(sh["brownout_slots"])
+assert counter_value(tel, "fleet.brownout_events") \\
+    == int(sh["brownout_events"])
+np.testing.assert_array_equal(np.asarray(tel["fleet.decisions"]),
+                              np.asarray(sh["decision_histogram"]))
+print("telemetry lanes OK")
+
+# --- telemetry=None leaves the sharded engine bitwise untouched ------------
+off = seeker_fleet_simulate_sharded(wins, harvest, mesh=mesh, **kw)
+assert "telemetry" not in off
+for k in ("decisions", "payload_bytes", "stored_uj", "logits", "alive",
+          "brownout"):
+    np.testing.assert_array_equal(np.asarray(off[k]), np.asarray(sh[k]),
+                                  err_msg="off " + k)
+print("telemetry=None OK")
+print("OK")
+"""
+
+
 _PER_SHARD_HOST_CODE = """
 import numpy as np
 import jax, jax.numpy as jnp
@@ -499,6 +566,17 @@ def test_sharded_intermittent_parity_8dev():
     chained through the resume contract, and padding nodes (N=13 on 8
     devices) never entering any lane aggregate."""
     assert "OK" in _run(_INTERMITTENT_CODE, devices=8)
+
+
+@pytest.mark.slow
+def test_sharded_telemetry_lane_parity_8dev():
+    """ISSUE 8 acceptance on the mesh: every registry lane (exact int-pair
+    counters, gauges, histograms) is bitwise identical single-device vs
+    sharded (psum inside shard_map) vs streamed (metrics_merge across
+    segments) under brown-out churn with N=13 padding, counters equal the
+    engine's own aggregates, and ``telemetry=None`` leaves the sharded
+    engine bitwise untouched."""
+    assert "OK" in _run(_TELEMETRY_CODE, devices=8)
 
 
 @pytest.mark.slow
