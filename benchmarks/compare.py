@@ -10,7 +10,9 @@ Reads two ``benchmarks.run`` result JSONs (lists of row dicts keyed by
   ``fleet_accuracy``, byte counts, lane totals, ``bitwise_equal`` ...) must
   match the baseline within ``--rtol`` (default 1e-6) — these are pure
   functions of the seeded simulation, so any drift is a real behaviour
-  change, not noise;
+  change, not noise; numeric LISTS (the mixed-fleet per-task splits such as
+  ``completed_by_task``/``accuracy_by_task``) are compared element-wise at
+  the same tolerance;
 * **timing metrics** (``us_per_call``, ``windows_per_s``,
   ``payloads_per_s``, ``speedup_x``, ``wall_s``) are noisy and only checked
   *directionally*: a slowdown beyond ``--timing-rtol`` (default 0.5, i.e.
@@ -67,6 +69,22 @@ def compare(current: dict[str, dict], baseline: dict[str, dict],
             if isinstance(base, bool) or isinstance(cur, bool):
                 if bool(cur) != bool(base):
                     problems.append(f"{name}.{key}: {cur} != {base}")
+                continue
+            if (isinstance(base, list)
+                    and all(isinstance(x, (int, float))
+                            and not isinstance(x, bool) for x in base)):
+                # per-task vectors (completed_by_task, accuracy_by_task, ...)
+                # compare element-wise at the deterministic tolerance
+                if not isinstance(cur, list) or len(cur) != len(base):
+                    problems.append(
+                        f"{name}.{key}: shape changed, {cur!r} vs {base!r}")
+                    continue
+                for i, (c, b) in enumerate(zip(cur, base)):
+                    tol = rtol * max(abs(b), 1.0)
+                    if abs(c - b) > tol:
+                        problems.append(
+                            f"{name}.{key}[{i}]: {c!r} != baseline {b!r} "
+                            f"(|diff| {abs(c - b):.4g} > rtol {rtol:g})")
                 continue
             if not isinstance(base, (int, float)):
                 if cur != base:

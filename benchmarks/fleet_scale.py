@@ -42,7 +42,7 @@ from repro.core import (DEFER, EH_SOURCES, BrownoutConfig, D6_PARTIAL,
 from repro.core.recovery import init_generator
 from repro.data.sensors import class_signatures, har_stream
 from repro.models.har import har_aux_init, har_init
-from repro.serving import (seeker_fleet_simulate,
+from repro.serving import (TaskLaneConfig, seeker_fleet_simulate,
                            seeker_fleet_simulate_sharded,
                            seeker_fleet_simulate_streamed, wire_bytes_exact)
 from repro.sharding import make_mesh_compat
@@ -72,6 +72,15 @@ INTERMITTENT_SLOTS, QUICK_INTERMITTENT_SLOTS = 32, 8
 # where freeze-and-lose DEFER throws work away and staged progress pays
 INTERMITTENT_SCARCITY = 0.04
 INTERMITTENT_CFG = IntermittentConfig(min_exit_stage=1, exit_threshold=0.0)
+
+# staged-lane early-exit threshold sweep: 0.0 exits whenever affordable,
+# 1.01 disables early exit entirely (full-depth-only lane) — the knee
+# between them is the confidence/completion trade the lane exposes
+EXIT_THRESHOLD_SWEEP = (0.0, 0.35, 0.7, 1.01)
+
+# mixed HAR + bearing-vibration fleet (the heterogeneous-task lane):
+# round-robin task assignment, bearing nodes pay the scaled ladder
+MIXED_TASK_CFG = TaskLaneConfig()
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -127,6 +136,8 @@ def run(quick: bool = False) -> list[dict]:
     rows.extend(_streaming_rows(key, params, gen, sigs, quick))
     rows.extend(_brownout_rows(key, params, gen, sigs, quick))
     rows.extend(_intermittent_rows(key, params, gen, sigs, quick))
+    rows.extend(_exit_threshold_rows(key, params, gen, sigs, quick))
+    rows.extend(_mixed_fleet_rows(key, params, gen, sigs, quick))
     return rows
 
 
@@ -310,6 +321,105 @@ def _intermittent_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
     return rows
 
 
+def _exit_threshold_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
+    """Early-exit confidence threshold vs completion/accuracy (PR 7's open
+    sweep).
+
+    Same scarce-harvest regime as the intermittent rows; only
+    ``exit_threshold`` varies.  Raising it converts early exits into either
+    full-depth completions (the inference keeps accumulating stages) or
+    losses (the node never gathers the energy), so ``completed_frac`` can
+    only fall while per-emission confidence rises — the knee of that trade
+    is the deployment knob this sweep documents.  The >1.0 row is the
+    degenerate full-depth-only lane and must emit zero early exits.
+    """
+    n = QUICK_INTERMITTENT_N if quick else INTERMITTENT_N
+    s = QUICK_INTERMITTENT_SLOTS if quick else INTERMITTENT_SLOTS
+    wins, labels = har_stream(key, s)
+    harvest = fleet_harvest_traces(key, n, s) * INTERMITTENT_SCARCITY
+    aux = har_aux_init(jax.random.fold_in(key, 7), HAR)
+    kw = dict(signatures=sigs, qdnn_params=params, host_params=params,
+              gen_params=gen, har_cfg=HAR, labels=labels,
+              brownout=BROWNOUT_CFG, initial_uj=BROWNOUT_INITIAL_UJ,
+              aux_params=aux)
+
+    rows = []
+    for thr in EXIT_THRESHOLD_SWEEP:
+        cfg = IntermittentConfig(
+            min_exit_stage=INTERMITTENT_CFG.min_exit_stage,
+            exit_threshold=thr)
+        t0 = time.perf_counter()
+        res = seeker_fleet_simulate(wins, harvest, intermittent=cfg, **kw)
+        jax.block_until_ready(res["decisions"])
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"fleet_scale/exit_threshold_n{n}_t{thr:g}",
+            "us_per_call": wall * 1e6,
+            "windows_per_s": n * s / wall,
+            "exit_threshold": thr,
+            "completed_frac": float(res["completed"]) / (n * s),
+            "fleet_accuracy": float(res["fleet_accuracy"]),
+            "it_full": int(res["it_full"]),
+            "it_early": int(res["it_early"]),
+            "it_correct_early": int(res["it_correct_early"]),
+            "slots": s,
+            "scarcity": INTERMITTENT_SCARCITY,
+        })
+    assert rows[-1]["it_early"] == 0, \
+        f"exit_threshold {EXIT_THRESHOLD_SWEEP[-1]} > 1.0 must disable " \
+        f"early exit, got {rows[-1]['it_early']} early emissions"
+    assert all(a["it_early"] >= b["it_early"]
+               for a, b in zip(rows, rows[1:])), \
+        "raising exit_threshold must monotonically suppress early exits"
+    return rows
+
+
+def _mixed_fleet_rows(key, params, gen, sigs, quick: bool) -> list[dict]:
+    """Heterogeneous multi-workload fleet: HAR wearables + bearing-vibration
+    monitors through ONE engine run (the task lane, ISSUE 9).
+
+    Round-robin task assignment over the fleet; bearing nodes pay the
+    scaled decision ladder (:data:`repro.core.energy.BEARING_COST_SCALE`),
+    so under the same harvest they complete fewer windows — the per-task
+    completion/deadline-miss/accuracy splits the row reports are the psum-
+    exact registry aggregates, and their sums must equal the fleet totals
+    (asserted: the split is an exact partition, not an estimate).
+    """
+    n = QUICK_INTERMITTENT_N if quick else INTERMITTENT_N
+    s = QUICK_INTERMITTENT_SLOTS if quick else INTERMITTENT_SLOTS
+    wins, labels = har_stream(key, s)
+    harvest = fleet_harvest_traces(key, n, s)
+
+    t0 = time.perf_counter()
+    res = seeker_fleet_simulate(
+        wins, harvest, signatures=sigs, qdnn_params=params,
+        host_params=params, gen_params=gen, har_cfg=HAR, labels=labels,
+        task=MIXED_TASK_CFG)
+    jax.block_until_ready(res["decisions"])
+    wall = time.perf_counter() - t0
+
+    completed_bt = [int(x) for x in np.asarray(res["completed_by_task"])]
+    miss_bt = [int(x) for x in np.asarray(res["deadline_miss_by_task"])]
+    assert sum(completed_bt) == int(res["completed"]), \
+        "per-task completions must partition the fleet total"
+    assert sum(completed_bt) + sum(miss_bt) == int(res["alive_slots"]), \
+        "per-task completions + misses must partition the alive slots"
+    return [{
+        "name": f"fleet_scale/mixed_har_bearing_n{n}",
+        "us_per_call": wall * 1e6,
+        "windows_per_s": n * s / wall,
+        "task_names": list(res["task_names"]),
+        "completed_by_task": completed_bt,
+        "deadline_miss_by_task": miss_bt,
+        "accuracy_by_task": [round(float(x), 6)
+                             for x in np.asarray(res["accuracy_by_task"])],
+        "completed_frac": float(res["completed_frac"]),
+        "fleet_accuracy": float(res["fleet_accuracy"]),
+        "bytes_on_wire": float(wire_bytes_exact(res)),
+        "slots": s,
+    }]
+
+
 if __name__ == "__main__":
     for row in run():
         if "scarcity" in row:
@@ -323,6 +433,14 @@ if __name__ == "__main__":
                   f"{row['bytes_on_wire']:>12.0f} B on wire  "
                   f"({row['reduction_x']:.1f}x under raw, "
                   f"{100 * row['completed_frac']:.0f}% completed)")
+        elif "task_names" in row:
+            split = ", ".join(
+                f"{t}: {c} done / {m} missed (acc {a:.3f})"
+                for t, c, m, a in zip(row["task_names"],
+                                      row["completed_by_task"],
+                                      row["deadline_miss_by_task"],
+                                      row["accuracy_by_task"]))
+            print(f"{row['name']:>34s}  {split}")
         elif "brownout_frac" in row:
             print(f"{row['name']:>26s}  "
                   f"{100 * row['brownout_frac']:>5.1f}% slots browned out")

@@ -108,7 +108,8 @@ def choose_decision(max_corr: jnp.ndarray, stored_uj: jnp.ndarray,
                     forecast_uj: jnp.ndarray, costs: EnergyCosts,
                     corr_threshold: float = 0.95,
                     allow_full_dnn: bool = False,
-                    harvested_uj: jnp.ndarray | None = None
+                    harvested_uj: jnp.ndarray | None = None,
+                    cost_scale: jnp.ndarray | None = None
                     ) -> DecisionOutcome:
     """Fig. 8 walk: memo gate -> local DNN if affordable -> cluster coreset ->
     sampling coreset -> defer.
@@ -130,6 +131,11 @@ def choose_decision(max_corr: jnp.ndarray, stored_uj: jnp.ndarray,
     strict = harvested_uj is not None
     budget = stored_uj + (harvested_uj if strict else forecast_uj)
     cost = decision_energy(costs)
+    # heterogeneous fleets: scale the WHOLE ladder per task (a bearing
+    # node's front-end pays BEARING_COST_SCALE per window); None leaves the
+    # table untouched — identical jaxpr to the pre-lane scheduler
+    if cost_scale is not None:
+        cost = cost * cost_scale
 
     memo_hit = max_corr >= corr_threshold
     if strict:

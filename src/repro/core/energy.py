@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "EnergyCosts", "TABLE2_COSTS", "D5_RAW", "harvest_trace", "EH_SOURCES",
+    "EnergyCosts", "TABLE2_COSTS", "BEARING_COST_SCALE", "D5_RAW",
+    "harvest_trace", "EH_SOURCES",
     "fleet_source_assignment", "fleet_harvest_traces", "supercap_step",
     "supercap_step_direct", "SUPERCAP_CAP_UJ", "SUPERCAP_CHARGE_EFF",
     "BrownoutConfig", "fleet_phase_offsets", "fleet_alive_traces",
@@ -134,6 +135,17 @@ class EnergyCosts:
 
 
 TABLE2_COSTS = EnergyCosts()
+
+# Heterogeneous-fleet cost scale for bearing-vibration monitors relative to
+# the HAR wearable ladder above.  Table 2 prices a 50 Hz / 3-channel IMU
+# window; a predictive-maintenance node samples vibration at kHz rates, so
+# every stage of its ladder (sensing front-end, MACs over the longer window,
+# payload bytes on the wire) costs proportionally more per scheduling slot.
+# 1.5x is the ratio of the bearing window's MAC count to HAR's once the
+# stream is resampled onto the shared (T, C) grid the mixed fleet runs —
+# deliberately a single scalar on the WHOLE ladder so the decision structure
+# (which rung is affordable when) is preserved, only shifted.
+BEARING_COST_SCALE = 1.5
 
 
 # ---------------------------------------------------------------------------

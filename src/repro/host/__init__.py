@@ -6,7 +6,8 @@ from .queue import (  # noqa: F401
     queue_push_batch, queue_wait_slots,
 )
 from .scheduler import (  # noqa: F401
-    MicroBatch, batch_wait_slots, edf_pop_batch, expire_deadlines,
+    MicroBatch, batch_task_counts, batch_wait_slots, edf_pop_batch,
+    expire_deadlines,
 )
 from .cache import (  # noqa: F401
     RecoveryCache, cache_init, cache_insert_batch, cache_lookup_batch,

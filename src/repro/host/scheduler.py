@@ -28,8 +28,8 @@ import jax.numpy as jnp
 
 from .queue import NO_DEADLINE, PayloadQueue
 
-__all__ = ["MicroBatch", "batch_wait_slots", "expire_deadlines",
-           "edf_pop_batch"]
+__all__ = ["MicroBatch", "batch_task_counts", "batch_wait_slots",
+           "expire_deadlines", "edf_pop_batch"]
 
 
 class MicroBatch(NamedTuple):
@@ -78,6 +78,20 @@ def edf_pop_batch(q: PayloadQueue, batch_size: int,
         deadline=q.deadline[take],
         valid=taken_valid)
     return q._replace(valid=q.valid.at[take].set(False)), batch, missed
+
+
+def batch_task_counts(batch: MicroBatch, n_tasks: int) -> jnp.ndarray:
+    """(n_tasks,) int32 — how many valid rows of this microbatch belong to
+    each workload (the mixed-fleet service observable: which task is drawing
+    host capacity under EDF pressure).  Payloads without a ``task`` leaf
+    count as task 0; exact integer sums, so per-slot counts accumulate and
+    psum like every other counter."""
+    task = getattr(batch.payload, "task", None)
+    if task is None:
+        task = jnp.zeros(batch.valid.shape, jnp.int32)
+    oh = jax.nn.one_hot(jnp.clip(task.astype(jnp.int32), 0, n_tasks - 1),
+                        n_tasks, dtype=jnp.int32)
+    return jnp.sum(oh * batch.valid[:, None].astype(jnp.int32), axis=0)
 
 
 def batch_wait_slots(batch: MicroBatch, now: jnp.ndarray) -> jnp.ndarray:

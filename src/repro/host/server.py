@@ -83,6 +83,7 @@ class HostServeConfig:
     qos_slots: int = 4          # deadline = arrival + qos_slots (inclusive)
     batches_per_slot: int = 1   # host service rate per slot
     telemetry: bool = False     # registry lanes + latency histograms in-slot
+    n_tasks: int = 1            # mixed fleets: stacked per-task host DNNs
 
     def __post_init__(self):
         """Reject configurations that would silently corrupt service.
@@ -95,7 +96,8 @@ class HostServeConfig:
         is the call-time analogue: the lane can overflow every slot — see
         :func:`host_serve_slot`.)"""
         for field in ("channels", "k", "m", "t", "n_classes", "n_nodes",
-                      "batch_size", "queue_capacity", "cache_capacity"):
+                      "batch_size", "queue_capacity", "cache_capacity",
+                      "n_tasks"):
             v = getattr(self, field)
             if v < 1:
                 raise ValueError(
@@ -120,7 +122,14 @@ class HostServeConfig:
 class HostPayload(NamedTuple):
     """One queue entry's payload: the union of the two wire formats, with a
     ``kind`` discriminator (all branches traced, selection by mask — the
-    repo-wide pattern for static shapes).  Unused half is zeros."""
+    repo-wide pattern for static shapes).  Unused half is zeros.
+
+    ``task`` selects which workload's host DNN serves the entry in a
+    mixed-task fleet (``HostServeConfig.n_tasks > 1``); homogeneous
+    deployments leave it 0.  It is an ordinary payload leaf, so
+    :func:`repro.host.cache.payload_signature` hashes it with everything
+    else — the same coreset from a HAR node and a bearing node can never
+    collide in the recovery memo."""
 
     kind: jnp.ndarray       # () int8 — CLUSTER_KIND | SAMPLING_KIND
     # D3: quantized cluster coreset (codes + dequantization ranges)
@@ -137,6 +146,8 @@ class HostPayload(NamedTuple):
     s_hi: jnp.ndarray       # () float32
     s_mean: jnp.ndarray     # (C,) float32
     s_var: jnp.ndarray      # (C,) float32
+    # heterogeneous fleets: which workload's DNN answers this entry
+    task: jnp.ndarray       # () int8 — index into stacked per-task params
 
 
 class SlotOutput(NamedTuple):
@@ -174,12 +185,22 @@ def host_payload_example(cfg: HostServeConfig) -> HostPayload:
         c_codes=z((c, k, 2), jnp.int16), r_codes=z((c, k), jnp.int8),
         n_codes=z((c, k), jnp.int8), c_lo=z(()), c_hi=z(()), c_rhi=z(()),
         s_idx=z((m,), jnp.int8), s_codes=z((m, c), jnp.int16),
-        s_lo=z(()), s_hi=z(()), s_mean=z((c,)), s_var=z((c,)))
+        s_lo=z(()), s_hi=z(()), s_mean=z((c,)), s_var=z((c,)),
+        task=z((), jnp.int8))
 
 
-def cluster_entries(wire: WirePayload, m: int) -> HostPayload:
+def _entry_tasks(tasks, b: int) -> jnp.ndarray:
+    """(B,) int8 task column for a batch of entries; ``None`` = task 0."""
+    if tasks is None:
+        return jnp.zeros((b,), jnp.int8)
+    return jnp.asarray(tasks).reshape(b).astype(jnp.int8)
+
+
+def cluster_entries(wire: WirePayload, m: int,
+                    tasks: jnp.ndarray | None = None) -> HostPayload:
     """Batched D3 entries from a quantized cluster wire payload (the tensors
-    :func:`repro.serving.edge_host.fleet_serve_step` gathers)."""
+    :func:`repro.serving.edge_host.fleet_serve_step` gathers).  ``tasks`` is
+    the optional (B,) per-entry task id of a mixed fleet."""
     b, c, _, _ = wire.c_codes.shape
     z = jnp.zeros
     return HostPayload(
@@ -188,10 +209,12 @@ def cluster_entries(wire: WirePayload, m: int) -> HostPayload:
         c_lo=wire.lo.reshape(b), c_hi=wire.hi.reshape(b),
         c_rhi=wire.rhi.reshape(b),
         s_idx=z((b, m), jnp.int8), s_codes=z((b, m, c), jnp.int16),
-        s_lo=z((b,)), s_hi=z((b,)), s_mean=z((b, c)), s_var=z((b, c)))
+        s_lo=z((b,)), s_hi=z((b,)), s_mean=z((b, c)), s_var=z((b, c)),
+        task=_entry_tasks(tasks, b))
 
 
-def sampling_entries(swire: WireSamplePayload, k: int) -> HostPayload:
+def sampling_entries(swire: WireSamplePayload, k: int,
+                     tasks: jnp.ndarray | None = None) -> HostPayload:
     """Batched D4 entries from a quantized sampling wire payload."""
     b, m = swire.idx.shape
     c = swire.v_codes.shape[-1]
@@ -203,7 +226,8 @@ def sampling_entries(swire: WireSamplePayload, k: int) -> HostPayload:
         c_rhi=z((b,)),
         s_idx=swire.idx, s_codes=swire.v_codes,
         s_lo=swire.lo.reshape(b), s_hi=swire.hi.reshape(b),
-        s_mean=swire.mean, s_var=swire.var)
+        s_mean=swire.mean, s_var=swire.var,
+        task=_entry_tasks(tasks, b))
 
 
 @functools.lru_cache(maxsize=32)
@@ -436,7 +460,16 @@ def _slot_body(cfg: HostServeConfig, state: HostServerState,
         def compute(_):
             wins = _entry_windows(batch.payload, gen_params, keys, cfg.t,
                                   batch.valid)
-            return har_apply(host_params, wins)
+            if cfg.n_tasks == 1:
+                return har_apply(host_params, wins)
+            # mixed fleets: run every task's DNN over the batch at fixed
+            # shape (host_params arrives stacked leaf-wise, leading axis
+            # n_tasks — the kind-switch pattern, one level up), then gather
+            # each entry's own task row
+            per_task = jax.vmap(lambda p: har_apply(p, wins))(host_params)
+            tid = jnp.clip(batch.payload.task.astype(jnp.int32),
+                           0, cfg.n_tasks - 1)
+            return per_task[tid, jnp.arange(tid.shape[0])]
 
         # a fully-memoized batch skips recovery + DNN (the host-side D0 skip)
         all_hit = jnp.all(hit | ~batch.valid)
@@ -546,6 +579,7 @@ def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
                          host_params: dict, gen_params: GeneratorParams,
                          base_key: jax.Array,
                          mask: jnp.ndarray | None = None,
+                         node_tasks: jnp.ndarray | None = None,
                          donate: bool = False
                          ) -> tuple[HostServerState, SlotOutput]:
     """Ingest one fleet round of gathered cluster payloads (what
@@ -555,8 +589,12 @@ def serve_fleet_payloads(state: HostServerState, wire: WirePayload,
     ``mask`` is the round's alive mask (B,) — a churny fleet's dead nodes
     produce no radio frame, so their lane rows never enqueue (the lane stays
     at the FIXED fleet width; only the mask varies, which never re-traces).
+
+    ``node_tasks`` is the round's (B,) per-node task ids for a mixed fleet
+    (``cfg.n_tasks > 1`` + stacked ``host_params``): each payload is served
+    by its own workload's recovery DNN.
     """
-    entries = cluster_entries(wire, cfg.m)
+    entries = cluster_entries(wire, cfg.m, tasks=node_tasks)
     b = entries.kind.shape[0]
     if b > cfg.queue_capacity:
         raise ValueError(

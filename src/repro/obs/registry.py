@@ -41,7 +41,7 @@ __all__ = ["Lane", "MetricsSpec", "counter", "gauge", "histogram",
            "metrics_init", "counter_add", "gauge_set", "hist_observe",
            "metrics_psum", "metrics_merge", "counter_value", "int_pair_total",
            "int_pair_sum", "categorical_counts", "lane_edges",
-           "percentile_from_hist", "metrics_summary"]
+           "percentile_from_hist", "metrics_summary", "spec_union"]
 
 COUNTER = "counter"
 GAUGE = "gauge"
@@ -122,6 +122,22 @@ class MetricsSpec:
 
     def names(self) -> tuple[str, ...]:
         return tuple(ln.name for ln in self.lanes)
+
+
+def spec_union(*lane_groups) -> MetricsSpec:
+    """A :class:`MetricsSpec` from several lane groups (tuples of
+    :class:`Lane` or whole :class:`MetricsSpec` s), concatenated in order.
+    This is how registries composed of per-subsystem lane OWNERS build one
+    spec (the fleet engines union each carry lane's declared telemetry);
+    duplicate names across groups fail the spec's own post-init check —
+    two owners cannot silently claim one lane."""
+    lanes: list[Lane] = []
+    for group in lane_groups:
+        if isinstance(group, MetricsSpec):
+            lanes.extend(group.lanes)
+        else:
+            lanes.extend(group)
+    return MetricsSpec(tuple(lanes))
 
 
 @functools.lru_cache(maxsize=256)

@@ -10,7 +10,12 @@ from .edge_host import (  # noqa: F401
     intermittent_fleet_init, IntermittentLaneOut, intermittent_lane_step,
 )
 from .fleet import (  # noqa: F401
-    fleet_node_init, fleet_telemetry_spec, seeker_fleet_simulate,
-    seeker_fleet_simulate_sharded, seeker_fleet_simulate_streamed,
-    wire_bytes_exact,
+    fleet_node_init, fleet_node_keys, fleet_telemetry_spec,
+    seeker_fleet_simulate, seeker_fleet_simulate_sharded,
+    seeker_fleet_simulate_streamed, wire_bytes_exact,
+)
+from .fleet_lanes import (  # noqa: F401
+    FLEET_LANES, FleetCarry, FleetLane, TaskLaneConfig, fleet_counter_keys,
+    fleet_lane, fleet_task_assignment, fleet_telemetry_lanes,
+    fleet_trace_keys, stack_task_params,
 )

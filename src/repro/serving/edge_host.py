@@ -113,7 +113,8 @@ def seeker_sensor_step_given_corr(
         har_cfg: HARConfig, aac_table: AACTable | None, costs: EnergyCosts,
         key: jax.Array, k_max: int = 12, m_samples: int = 20,
         quant_bits: int = 16, corr_threshold: float = 0.95,
-        strict_energy: bool = False) -> SensorStepOut:
+        strict_energy: bool = False,
+        cost_scale: jnp.ndarray | None = None) -> SensorStepOut:
     """Sensor step with the signature correlations precomputed.
 
     The fleet engine computes ``corr`` for ALL nodes at once through the
@@ -125,6 +126,10 @@ def seeker_sensor_step_given_corr(
     forecast still ranks AAC's k but cannot mint energy), and the storage
     update uses :func:`repro.core.energy.supercap_step_direct` so debt is
     never clip-forgiven.  ``False`` keeps the legacy path bitwise.
+
+    ``cost_scale`` is the heterogeneous-task lane's per-node ladder scale
+    (see :class:`repro.serving.fleet_lanes.TaskLaneConfig`); ``None`` keeps
+    the homogeneous-fleet jaxpr bitwise.
     """
     max_corr = jnp.max(corr)
     memo_label = jnp.argmax(corr).astype(jnp.int32)
@@ -134,7 +139,8 @@ def seeker_sensor_step_given_corr(
     outcome = choose_decision(
         max_corr, state.stored_uj, forecast, costs,
         corr_threshold=corr_threshold,
-        harvested_uj=harvested_uj if strict_energy else None)
+        harvested_uj=harvested_uj if strict_energy else None,
+        cost_scale=cost_scale)
     decision = outcome.decision
 
     # --- D2: quantized DNN on-node (executed unconditionally, masked out) ---
@@ -283,7 +289,9 @@ def intermittent_lane_step(window: jnp.ndarray, state: SeekerNodeState,
                            qp: dict, aux_params: dict, har_cfg: HARConfig,
                            costs: EnergyCosts, quant_bits: int,
                            cfg: IntermittentConfig,
-                           reserve_uj: float = 0.0) -> IntermittentLaneOut:
+                           reserve_uj: float = 0.0,
+                           cost_scale: jnp.ndarray | None = None
+                           ) -> IntermittentLaneOut:
     """One slot of the energy-adaptive partial-inference lane (paper-adjacent
     intermittent computing: Islam et al. 2503.06663, Gobieski et al.
     1810.07751), for ONE node — the fleet engines vmap this after the ladder
@@ -323,6 +331,13 @@ def intermittent_lane_step(window: jnp.ndarray, state: SeekerNodeState,
     tx = costs.tx_result
     aux_c = costs.aux_head
     stage_cost = costs.stage_costs(quant_bits)
+    if cost_scale is not None:
+        # heterogeneous-task lane: the whole staged ladder scales per node,
+        # mirroring choose_decision's scaled D0-D4 table
+        sense = sense * cost_scale
+        tx = tx * cost_scale
+        aux_c = aux_c * cost_scale
+        stage_cost = jnp.asarray(stage_cost, jnp.float32) * cost_scale
 
     engaged = it.active | (ladder_decision == DEFER)
     budget = state.stored_uj + harvested_uj

@@ -96,6 +96,31 @@ from the auxiliary head (D7) replaces the freeze-and-lose DEFER.  The lane
 requires ``aux_params`` (:func:`repro.models.har.har_aux_init`) and
 switches the ladder to strict store-and-execute accounting like
 ``brownout`` does.  ``intermittent=None`` keeps all three engines bitwise.
+
+**One scan body, registered lanes** (:data:`repro.serving.FLEET_LANES`):
+everything above rides a single typed carry
+(:class:`repro.serving.FleetCarry`) whose fields are owned by lane
+registrations in ``fleet_lanes.py`` — each lane declares its init, freeze
+kind, resume keys, trace/counter/aggregate outputs and telemetry in ONE
+place, and all three drivers are thin shells over the same registered scan
+body (``_build_fleet_run``).  A disabled lane contributes an *empty*
+pytree to the carry, so ``lane=None`` is the lane-less engine by
+construction; the streamed driver derives the keys it concatenates/sums
+from the registry rather than hand-listing them.  The contract is stated
+in docs/RESUME_CONTRACT.md and enforced by ``tests/test_lane_conformance``
++ ``tests/test_resume_contract``.
+
+**Heterogeneous task fleets** (``task=TaskLaneConfig(...)`` or an explicit
+``tasks`` (N,) id array): the first lane shipped *through* the registry.
+One fleet mixes workloads — HAR wearables and bearing-vibration monitors —
+with static per-node task ids that scale the ladder's per-stage energy
+costs, select stacked per-task host weights
+(:func:`repro.serving.fleet_lanes.stack_task_params`, gathered per node),
+and split the psum'd aggregates into ``completed_by_task`` /
+``deadline_miss_by_task`` / ``correct_by_task`` (+ ``accuracy_by_task``
+when labels are given).  Task ids are static per node, so XLA
+constant-folds the switches; ``task=None`` keeps all three engines
+bitwise.
 """
 from __future__ import annotations
 
@@ -114,61 +139,85 @@ from ..core.energy import (BrownoutConfig, EnergyCosts, predictor_init,
 from ..kernels.ops import signature_corr_op
 from ..models.har import HARConfig, quantize_params
 from ..obs import (MetricsSpec, categorical_counts, compile_event,
-                   counter, counter_add, gauge, gauge_set, hist_observe,
-                   histogram, int_pair_sum, int_pair_total, metrics_init,
-                   metrics_merge, metrics_psum)
+                   int_pair_sum, int_pair_total, metrics_init,
+                   metrics_merge, metrics_psum, spec_union)
 from ..obs import trace as obs_trace
 from ..sharding import make_mesh_compat, node_mesh_axes, shard_map_compat
 from .edge_host import (IntermittentState, SeekerNodeState,
                         intermittent_fleet_init, intermittent_lane_step,
                         seeker_host_step, seeker_sensor_step_given_corr)
+from .fleet_lanes import (FLEET_LANES, FleetCarry, TaskLaneConfig,
+                          fleet_counter_keys, fleet_task_assignment,
+                          fleet_telemetry_lanes, fleet_trace_keys,
+                          stack_task_params)
 
-__all__ = ["fleet_node_init", "fleet_telemetry_spec",
+__all__ = ["fleet_node_init", "fleet_node_keys", "fleet_telemetry_spec",
            "seeker_fleet_simulate", "seeker_fleet_simulate_sharded",
            "seeker_fleet_simulate_streamed", "wire_bytes_exact"]
 
 N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the fleet histogram
 
 
-@functools.lru_cache(maxsize=8)
-def fleet_telemetry_spec(intermittent: bool = False) -> MetricsSpec:
-    """The fleet engines' registry lanes (:mod:`repro.obs.registry`).
+def _active_lanes(intermittent: IntermittentConfig | None = None,
+                  task: TaskLaneConfig | None = None,
+                  brownout: BrownoutConfig | None = None) -> frozenset:
+    """The engine build's active-lane tag set, from its lane configs.  The
+    ``task:K`` tag carries the task count so pure functions of the set (the
+    telemetry spec) can size per-task lanes."""
+    active = set()
+    if brownout is not None:
+        active.add("brownout")
+    if intermittent is not None:
+        active.add("intermittent")
+    if task is not None:
+        active.update({"task", f"task:{task.n_tasks}"})
+    return frozenset(active)
 
-    Declared once and shared by all three engines, so a lane name means the
-    same masked quantity everywhere: ``fleet.wire_bytes`` mirrors the exact
-    ``bytes_on_wire_i32`` pair, ``fleet.decisions`` the decision histogram,
-    ``fleet.completed``/``fleet.alive_slots``/``fleet.brownout_*`` the psum'd
-    counters, and ``fleet.stored_uj`` is a gauge of the fleet's total stored
-    energy (floor-µJ over alive nodes) at the latest slot.  All lanes are
-    int32 — counter pairs and categorical histograms are associative, which
-    is what makes them *bitwise-equal* across single-device, sharded and
-    streamed runs (float sums are not order-independent and stay out of the
-    parity set)."""
-    n_bins = N_INTERMITTENT_DECISIONS if intermittent else N_DECISIONS
-    lanes = [
-        counter("fleet.wire_bytes", "B"),
-        counter("fleet.completed", "windows"),
-        counter("fleet.alive_slots", "slots"),
-        counter("fleet.brownout_slots", "slots"),
-        counter("fleet.brownout_events", "events"),
-        gauge("fleet.stored_uj", "uJ"),
-        histogram("fleet.decisions", n_bins, log=False, unit="decisions"),
-    ]
+
+def fleet_telemetry_spec(intermittent: bool = False,
+                         n_tasks: int = 0) -> MetricsSpec:
+    """The fleet engines' registry lanes (:mod:`repro.obs.registry`),
+    DERIVED from the lane registry: each :class:`~repro.serving.fleet_lanes.
+    FleetLane` declares the telemetry lanes it owns (node state owns
+    ``fleet.wire_bytes``/``fleet.completed``/``fleet.alive_slots``/
+    ``fleet.stored_uj``/``fleet.decisions``, brown-out owns
+    ``fleet.brownout_*``, the intermittent lane ``fleet.it_*``, the task
+    lane ``fleet.task_completed``), and this spec is their
+    :func:`repro.obs.spec_union` — spec and carry cannot drift apart.
+
+    Shared by all three engines, so a lane name means the same masked
+    quantity everywhere; all lanes are int32 — counter pairs and categorical
+    histograms are associative, which is what makes them *bitwise-equal*
+    across single-device, sharded and streamed runs (float sums are not
+    order-independent and stay out of the parity set)."""
+    active = set()
     if intermittent:
-        lanes += [counter("fleet.it_full", "windows"),
-                  counter("fleet.it_early", "windows")]
-    return MetricsSpec(tuple(lanes))
+        active.add("intermittent")
+    if n_tasks:
+        active.update({"task", f"task:{n_tasks}"})
+    return _fleet_telemetry_spec_cached(frozenset(active))
+
+
+@functools.lru_cache(maxsize=8)
+def _fleet_telemetry_spec_cached(active: frozenset) -> MetricsSpec:
+    # memoized on the NORMALIZED lane set, so fleet_telemetry_spec(False)
+    # and fleet_telemetry_spec(False, 0) return the identical object — the
+    # engines' result["telemetry_spec"] is comparable by `is`
+    return spec_union(fleet_telemetry_lanes(active))
 
 
 def _resolve_telemetry(telemetry,
-                       intermittent: IntermittentConfig | None
+                       intermittent: IntermittentConfig | None,
+                       task: TaskLaneConfig | None = None
                        ) -> MetricsSpec | None:
-    """``True`` -> the default lane set; a :class:`MetricsSpec` passes
-    through (it must declare the fleet lanes); ``None`` stays off."""
+    """``True`` -> the registry-derived lane set for this build's active
+    lanes; a :class:`MetricsSpec` passes through (it must declare the fleet
+    lanes); ``None`` stays off."""
     if telemetry is None or telemetry is False:
         return None
     if telemetry is True:
-        return fleet_telemetry_spec(intermittent is not None)
+        return fleet_telemetry_spec(intermittent is not None,
+                                    task.n_tasks if task is not None else 0)
     if not isinstance(telemetry, MetricsSpec):
         raise TypeError(f"telemetry must be None/True/MetricsSpec, "
                         f"got {type(telemetry).__name__}")
@@ -176,35 +225,22 @@ def _resolve_telemetry(telemetry,
 
 
 def _update_fleet_lanes(spec: MetricsSpec, metrics: dict, out_trace: dict,
-                        exo_alive_t: jnp.ndarray,
-                        intermittent: IntermittentConfig | None) -> dict:
-    """Advance every registry lane by one slot, from the engine's MASKED
-    ``out_trace`` quantities — the same post-mask values the post-scan
-    aggregates reduce, so carry lanes and aggregates cannot drift apart.
-    Padding nodes are exogenously dead (``alive`` False, ``brownout`` flag
-    frozen False), so they contribute to no lane without any extra mask."""
-    act = out_trace["alive"]
-    dec = out_trace["decision"]
-    if intermittent is None:
-        sent = (dec != DEFER) & act
-    else:
-        sent = (dec != DEFER) & (dec != D6_PARTIAL) & act
-    m = counter_add(spec, metrics, "fleet.wire_bytes",
-                    out_trace["payload"], act)
-    m = counter_add(spec, m, "fleet.completed", sent)
-    m = counter_add(spec, m, "fleet.alive_slots", act)
-    m = counter_add(spec, m, "fleet.brownout_slots",
-                    out_trace["brownout"] & exo_alive_t)
-    m = counter_add(spec, m, "fleet.brownout_events", out_trace["bo_event"])
-    m = gauge_set(spec, m, "fleet.stored_uj",
-                  jnp.sum(jnp.where(
-                      act, jnp.floor(out_trace["stored"]).astype(jnp.int32),
-                      0)))
-    m = hist_observe(spec, m, "fleet.decisions", dec, act)
-    if intermittent is not None:
-        emit = out_trace["it_emit"]
-        m = counter_add(spec, m, "fleet.it_full", (emit == 2) & act)
-        m = counter_add(spec, m, "fleet.it_early", (emit == 1) & act)
+                        exo_alive_t: jnp.ndarray, active: frozenset,
+                        tasks: jnp.ndarray | None = None) -> dict:
+    """Advance every registry lane by one slot by folding each registered
+    lane's ``telemetry_update`` over the metrics pytree, from the engine's
+    MASKED ``out_trace`` quantities — the same post-mask values the
+    post-scan aggregates reduce, so carry lanes and aggregates cannot drift
+    apart.  Lane updates touch disjoint name-keyed entries, so registration
+    order never changes values.  Padding nodes are exogenously dead
+    (``alive`` False, ``brownout`` flag frozen False), so they contribute
+    to no lane without any extra mask."""
+    m = metrics
+    for ln in FLEET_LANES:
+        if ln.telemetry_update is not None and ln.active(active):
+            m = ln.telemetry_update(spec, m, out_trace,
+                                    exo_alive_t=exo_alive_t, active=active,
+                                    tasks=tasks)
     return m
 
 
@@ -217,12 +253,21 @@ def fleet_node_init(n_nodes: int, predictor_window: int = 8,
         prev_label=jnp.zeros((n_nodes,), jnp.int32))
 
 
+def fleet_node_keys(key: jax.Array, n_nodes: int) -> jnp.ndarray:
+    """The PRNG lane's init: node ``i``'s stream is ``fold_in(key, i)``, so
+    a fleet of N nodes is bit-compatible with N independent single-node
+    runs (and with any shard layout of the same fleet)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_nodes))
+
+
 def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      k_max: int, m_samples: int, corr_threshold: float,
                      shared_stream: bool, t: int, node_block: int | None,
                      brownout: BrownoutConfig | None,
                      intermittent: IntermittentConfig | None = None,
-                     telemetry: MetricsSpec | None = None):
+                     telemetry: MetricsSpec | None = None,
+                     task: TaskLaneConfig | None = None):
     """One fleet time slot, shared VERBATIM by the single-device scan and the
     per-shard scan inside ``shard_map`` — the sharded engine sees exactly this
     computation on its local node tile.
@@ -246,7 +291,9 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
     activations survive untouched until it rejoins, which is exactly the
     suspend-across-brown-out semantics."""
 
-    def block_body(state, keys, it, win_t, harv_t, slot, signatures,
+    strict = brownout is not None or intermittent is not None
+
+    def block_body(state, keys, it, tasks_b, win_t, harv_t, slot, signatures,
                    qdnn_params, host_params, gen_params, aac_table,
                    aux_params):
         # same split discipline as the single-node scan:
@@ -258,28 +305,49 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
         # tile, so the Pallas/ref kernel runs per-shard with no collectives
         corr = signature_corr_op(win_t, signatures)       # (B, L)
 
-        out = jax.vmap(
-            lambda w, st, h, co, kk: seeker_sensor_step_given_corr(
-                w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
-                aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
-                m_samples=m_samples, quant_bits=quant_bits,
-                corr_threshold=corr_threshold,
-                strict_energy=(brownout is not None
-                               or intermittent is not None))
-        )(win_t, state, harv_t, corr, ks[:, 1])
+        if task is None:
+            out = jax.vmap(
+                lambda w, st, h, co, kk: seeker_sensor_step_given_corr(
+                    w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
+                    aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
+                    m_samples=m_samples, quant_bits=quant_bits,
+                    corr_threshold=corr_threshold, strict_energy=strict)
+            )(win_t, state, harv_t, corr, ks[:, 1])
+        else:
+            # task lane: each node's WHOLE cost ladder scales by its task's
+            # declared factor — a separate vmap variant so ``task=None``
+            # keeps the exact pre-lane jaxpr
+            scale = jnp.asarray(task.cost_scale, jnp.float32)[tasks_b]
+            out = jax.vmap(
+                lambda w, st, h, co, kk, cs: seeker_sensor_step_given_corr(
+                    w, st, h, co, qdnn_params=qdnn_params, har_cfg=har_cfg,
+                    aac_table=aac_table, costs=costs, key=kk, k_max=k_max,
+                    m_samples=m_samples, quant_bits=quant_bits,
+                    corr_threshold=corr_threshold, strict_energy=strict,
+                    cost_scale=cs)
+            )(win_t, state, harv_t, corr, ks[:, 1], scale)
         if intermittent is not None:
             # the lane overrides engaged slots AFTER the ladder: in-flight
             # inferences resume before new work, DEFER slots become staged
             # progress / early exits.  Quantize the backbone once per slot.
             qp = quantize_params(qdnn_params, quant_bits)
-            lane = jax.vmap(
-                lambda w, st, h, dec, itn: intermittent_lane_step(
-                    w, st, h, dec, itn, slot, qp=qp, aux_params=aux_params,
-                    har_cfg=har_cfg, costs=costs, quant_bits=quant_bits,
-                    cfg=intermittent,
-                    reserve_uj=(brownout.off_uj if brownout is not None
-                                else 0.0))
-            )(win_t, state, harv_t, out.decision, it)
+            reserve = brownout.off_uj if brownout is not None else 0.0
+            if task is None:
+                lane = jax.vmap(
+                    lambda w, st, h, dec, itn: intermittent_lane_step(
+                        w, st, h, dec, itn, slot, qp=qp,
+                        aux_params=aux_params, har_cfg=har_cfg, costs=costs,
+                        quant_bits=quant_bits, cfg=intermittent,
+                        reserve_uj=reserve)
+                )(win_t, state, harv_t, out.decision, it)
+            else:
+                lane = jax.vmap(
+                    lambda w, st, h, dec, itn, cs: intermittent_lane_step(
+                        w, st, h, dec, itn, slot, qp=qp,
+                        aux_params=aux_params, har_cfg=har_cfg, costs=costs,
+                        quant_bits=quant_bits, cfg=intermittent,
+                        reserve_uj=reserve, cost_scale=cs)
+                )(win_t, state, harv_t, out.decision, it, scale)
             eng = lane.engaged
             lane_state = SeekerNodeState(
                 stored_uj=jnp.where(eng, lane.stored_uj,
@@ -300,11 +368,23 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             new_it = lane.state
         else:
             new_it = None
-        host_logits = jax.vmap(
-            lambda o, kk: seeker_host_step(
-                o, host_params=host_params, gen_params=gen_params,
-                har_cfg=har_cfg, key=kk, t=t)
-        )(out, ks[:, 2])
+        if task is not None and task.per_task_host:
+            # kind-switched host recovery/DNN: host_params arrives STACKED
+            # on a leading task axis (stack_task_params); each node's host
+            # step gathers its task's tree inside the vmap, so the compiled
+            # shapes stay task-independent
+            host_logits = jax.vmap(
+                lambda o, kk, tid: seeker_host_step(
+                    o, host_params=jax.tree_util.tree_map(
+                        lambda p: p[tid], host_params),
+                    gen_params=gen_params, har_cfg=har_cfg, key=kk, t=t)
+            )(out, ks[:, 2], tasks_b)
+        else:
+            host_logits = jax.vmap(
+                lambda o, kk: seeker_host_step(
+                    o, host_params=host_params, gen_params=gen_params,
+                    har_cfg=har_cfg, key=kk, t=t)
+            )(out, ks[:, 2])
         trace = {"decision": out.decision, "payload": out.payload_bytes,
                  "stored": out.state.stored_uj, "k": out.coreset_k,
                  "logits": host_logits}
@@ -314,23 +394,18 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                           "it_stage": lane.emit_stage})
         return out.state, ks[:, 0], new_it, trace
 
-    def step(carry, inp, signatures, qdnn_params, host_params, gen_params,
-             aac_table, aux_params=None):
-        if telemetry is not None:
-            # telemetry rides as the TRAILING carry lane (a dict of int32
-            # lane arrays) — never passed through keep(): lanes accumulate
-            # fleet-level masked counts, not per-node state
-            *carry, metrics = carry
-            carry = tuple(carry)
-        else:
-            metrics = None
-        if intermittent is None:
-            state, keys, browned = carry
-            win_t, harv_t, alive_t = inp
-            it = slot = None
-        else:
-            state, keys, browned, it = carry
-            win_t, harv_t, alive_t, slot = inp
+    active = _active_lanes(intermittent, task, brownout)
+
+    def step(carry, inp, tasks, signatures, qdnn_params, host_params,
+             gen_params, aac_table, aux_params=None):
+        # the typed carry: one field per registered lane, None for absent
+        # lanes (an empty pytree — no scan slots, no ops), which is what
+        # keeps ``lane=None`` engines bitwise-identical to engines built
+        # before the lane existed.  The telemetry field is the fleet-level
+        # accumulator lane — never passed through keep(): it holds masked
+        # counts, not per-node state.
+        state, keys, browned, it, metrics = carry
+        win_t, harv_t, alive_t, slot = inp
         n = keys.shape[0]
         # the per-slot alive lane: the exogenous trace composed with the
         # endogenous brown-out flag carried through the scan — a node runs
@@ -341,7 +416,7 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
 
         if node_block is None or node_block == n:
             new_state, new_keys, new_it, trace = block_body(
-                state, keys, it, win_t, harv_t, slot, signatures,
+                state, keys, it, tasks, win_t, harv_t, slot, signatures,
                 qdnn_params, host_params, gen_params, aac_table, aux_params)
         else:
             # fixed-shape microbatches: pad the node axis to the block
@@ -359,16 +434,16 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             def ungroup(x):
                 return x.reshape((grp * node_block,) + x.shape[2:])[:n]
 
-            st_g, ks_g, it_g, w_g, h_g = jax.tree_util.tree_map(
-                regroup, (state, keys, it, win_t, harv_t))
+            st_g, ks_g, it_g, tk_g, w_g, h_g = jax.tree_util.tree_map(
+                regroup, (state, keys, it, tasks, win_t, harv_t))
             new_state, new_keys, new_it, trace = jax.tree_util.tree_map(
                 ungroup,
                 jax.lax.map(
-                    lambda a: block_body(a[0], a[1], a[2], a[3], a[4], slot,
-                                         signatures, qdnn_params,
+                    lambda a: block_body(a[0], a[1], a[2], a[3], a[4], a[5],
+                                         slot, signatures, qdnn_params,
                                          host_params, gen_params, aac_table,
                                          aux_params),
-                    (st_g, ks_g, it_g, w_g, h_g)))
+                    (st_g, ks_g, it_g, tk_g, w_g, h_g)))
 
         # --- churn lane: a dead node harvests nothing, freezes its whole
         # carry (charge, predictor, AAC continuity AND its PRNG stream — on
@@ -413,9 +488,7 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
             "brownout": browned,         # the flag the slot was entered with
             "bo_event": next_browned & ~browned,   # brown-out onsets
         }
-        if intermittent is None:
-            new_carry = (new_state, new_keys, next_browned)
-        else:
+        if intermittent is not None:
             # a dead/browned-out node ran no lane this slot: its emission
             # lane is masked like the decision lane (the label/conf/src
             # fields are only meaningful where it_emit > 0)
@@ -426,11 +499,11 @@ def _make_fleet_step(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                 "it_src": trace["it_src"],
                 "it_stage": trace["it_stage"],
             })
-            new_carry = (new_state, new_keys, next_browned, new_it)
-        if telemetry is not None:
-            new_carry = new_carry + (_update_fleet_lanes(
-                telemetry, metrics, out_trace, alive_t, intermittent),)
-        return new_carry, out_trace
+        new_metrics = (None if telemetry is None else _update_fleet_lanes(
+            telemetry, metrics, out_trace, alive_t, active, tasks))
+        return FleetCarry(node=new_state, keys=new_keys,
+                          brownout=next_browned, intermittent=new_it,
+                          telemetry=new_metrics), out_trace
 
     return step
 
@@ -441,66 +514,52 @@ def _build_fleet_run(har_cfg: HARConfig, costs: EnergyCosts, quant_bits: int,
                      shared_stream: bool, node_block: int | None,
                      brownout: BrownoutConfig | None, donate: bool,
                      intermittent: IntermittentConfig | None = None,
-                     telemetry: MetricsSpec | None = None):
+                     telemetry: MetricsSpec | None = None,
+                     task: TaskLaneConfig | None = None):
     """Compile-cached fleet scan, keyed on the static configuration.
 
     All arrays (params, signatures, windows, state) are jit *arguments*, so
     repeated simulations with the same config — the benchmark's timed
     iterations, a serving loop — reuse the compiled executable instead of
-    re-tracing a fresh closure each call.  With ``intermittent`` the run
-    signature gains the stacked lane state, the global slot indices and the
-    auxiliary-head params; without it the legacy signature (and computation)
-    is unchanged.  With ``telemetry`` the scan carry (and the return tuple)
-    gains the registry-lane pytree, always starting from ZERO — the run
-    computes a telemetry *delta*, merged with any resumed
+    re-tracing a fresh closure each call.
+
+    ONE signature for every lane combination: absent lanes pass ``None``
+    (an empty pytree contributing no jit inputs and no scan slots), so
+    ``lane=None`` stays bitwise-off without per-combination run variants —
+    the scan body is the same registered :class:`FleetCarry` step for every
+    driver.  ``xs_slots`` is always an input (the intermittent lane's
+    global slot indices; unused — and dead-code-eliminated — without the
+    lane).  With ``telemetry`` the carry's telemetry field starts from
+    ZERO — the run computes a telemetry *delta*, merged with any resumed
     ``telemetry_state0`` host-side, which is what keeps the sharded engine
     from double-counting a replicated carry-in on psum.
     """
 
-    if intermittent is None:
-        def run(state0, keys0, browned0, xs_w, xs_h, xs_alive, signatures,
-                qdnn_params, host_params, gen_params, aac_table):
-            compile_event("fleet.run")
-            obs_trace.instant("compile:fleet.run")
-            t = xs_w.shape[-2]
-            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
-                                    m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout,
-                                    telemetry=telemetry)
-            carry0 = (state0, keys0, browned0)
-            if telemetry is not None:
-                carry0 = carry0 + (metrics_init(telemetry),)
-            final, traces = jax.lax.scan(
-                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                                  gen_params, aac_table),
-                carry0, (xs_w, xs_h, xs_alive))
-            # the evolved keys (and the brown-out flag) are returned so a
-            # resumed run (state0=final_state, node_keys=final_keys,
-            # brownout_state0=final_brownout) continues each node's PRNG
-            # stream and hysteresis state instead of replaying segment 1's
-            return (traces,) + final
-    else:
-        def run(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive, xs_slots,
-                signatures, qdnn_params, host_params, gen_params, aac_table,
-                aux_params):
-            compile_event("fleet.run")
-            obs_trace.instant("compile:fleet.run")
-            t = xs_w.shape[-2]
-            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
-                                    m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout, intermittent,
-                                    telemetry=telemetry)
-            carry0 = (state0, keys0, browned0, it0)
-            if telemetry is not None:
-                carry0 = carry0 + (metrics_init(telemetry),)
-            final, traces = jax.lax.scan(
-                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                                  gen_params, aac_table, aux_params),
-                carry0, (xs_w, xs_h, xs_alive, xs_slots))
-            # final_intermittent joins the resume contract: a resumed run
-            # (intermittent_state0=final_intermittent, slot0=slots run so
-            # far) continues suspended inferences instead of dropping them
-            return (traces,) + final
+    def run(state0, keys0, browned0, it0, tasks, xs_w, xs_h, xs_alive,
+            xs_slots, signatures, qdnn_params, host_params, gen_params,
+            aac_table, aux_params):
+        compile_event("fleet.run")
+        obs_trace.instant("compile:fleet.run")
+        t = xs_w.shape[-2]
+        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                m_samples, corr_threshold, shared_stream,
+                                t, node_block, brownout, intermittent,
+                                telemetry=telemetry, task=task)
+        carry0 = FleetCarry(
+            node=state0, keys=keys0, brownout=browned0, intermittent=it0,
+            telemetry=None if telemetry is None else metrics_init(telemetry))
+        final, traces = jax.lax.scan(
+            lambda c, i: step(c, i, tasks, signatures, qdnn_params,
+                              host_params, gen_params, aac_table,
+                              aux_params),
+            carry0, (xs_w, xs_h, xs_alive, xs_slots))
+        # the final carry IS the resume contract: a resumed run
+        # (state0=final_state, node_keys=final_keys,
+        # brownout_state0=final_brownout,
+        # intermittent_state0=final_intermittent, slot0=slots run so far,
+        # telemetry_state0=res["telemetry"]) continues each lane exactly
+        # where it stopped instead of replaying segment 1
+        return traces, final
 
     # donate the stacked node state (it is returned, so XLA can alias it)
     return jax.jit(run, donate_argnums=(0,) if donate else ())
@@ -515,188 +574,71 @@ def _build_fleet_run_sharded(mesh, axis_names: tuple[str, ...],
                              node_block: int | None,
                              brownout: BrownoutConfig | None, donate: bool,
                              intermittent: IntermittentConfig | None = None,
-                             telemetry: MetricsSpec | None = None):
+                             telemetry: MetricsSpec | None = None,
+                             task: TaskLaneConfig | None = None):
     """Compile-cached SHARDED fleet scan: the whole time scan runs inside the
-    ``shard_map`` manual region, each shard scanning its local node tile;
-    only the masked fleet aggregates (and, with ``telemetry``, the registry
-    lanes via :func:`repro.obs.metrics_psum`) are ``psum``-ed over
+    ``shard_map`` manual region, each shard scanning its local node tile
+    with the SAME registered :class:`FleetCarry` step as the single-device
+    driver; only the masked fleet aggregates (and, with ``telemetry``, the
+    registry lanes via :func:`repro.obs.metrics_psum`) are ``psum``-ed over
     ``axis_names``.
 
-    ``per_node_labels`` switches the accuracy aggregate between one shared
-    (S,) label track (replicated) and per-node (S, N) tracks (sharded over
-    the node axes like every other per-node array).  With ``intermittent``
-    the body gains the sharded lane state, the replicated slot indices and
-    the replicated aux params, and the psum'd aggregate set grows the
-    emission counters; without it the legacy body is unchanged."""
+    Like :func:`_build_fleet_run`, ONE signature covers every lane
+    combination — absent lanes pass ``None``, whose shard specs broadcast
+    over zero leaves.  ``per_node_labels`` switches the accuracy aggregate
+    between one shared (S,) label track (replicated) and per-node (S, N)
+    tracks (sharded over the node axes like every other per-node array);
+    the task lane's (N,) ids shard over the node axes and its per-task
+    splits join the psum'd aggregate set."""
     nodes = P(axis_names)                    # leading node dim over the mesh
     time_nodes = P(None, axis_names)         # (S, N, ...) time-major traces
     repl = P()                               # replicated (params, bank, mask)
 
-    def _aggregates(traces, xs_alive, mask, labels, slot0):
-        # --- fleet-level aggregates: the ONLY cross-shard traffic ----------
-        # the engine's EMITTED alive lane (exogenous trace ∧ ¬browned_out)
-        # composes with the static padding mask: inert padding nodes, dead
-        # slots and browned-out slots contribute nothing — a node that could
-        # not run made no scheduling decision
-        act = traces["alive"] & mask[None, :]               # (S, n_local)
-        if intermittent is None:
-            sent = (traces["decision"] != DEFER) & act
-            n_bins = N_DECISIONS
-        else:
-            # D6 suspends with nothing on the wire; D7/D8 are completions
-            sent = ((traces["decision"] != DEFER)
-                    & (traces["decision"] != D6_PARTIAL) & act)
-            n_bins = N_INTERMITTENT_DECISIONS
-        bytes_on_wire = jax.lax.psum(
-            jnp.sum(jnp.where(act, traces["payload"], 0.0)), axis_names)
-        wire_pair = jax.lax.psum(
-            _wire_byte_pair(traces["payload"], act), axis_names)
-        hist = jax.lax.psum(
-            categorical_counts(traces["decision"], n_bins, act),
-            axis_names)                                     # (n_bins,)
-        completed = jax.lax.psum(jnp.sum(sent.astype(jnp.int32)), axis_names)
-        alive_slots = jax.lax.psum(jnp.sum(act.astype(jnp.int32)),
-                                   axis_names)
-        # brown-out realism pair: slots suppressed by the hysteresis (the
-        # node was exogenously present but its supercap said no) and onset
-        # events — padding nodes are exogenously dead, so they never brown
-        # "in" and contribute to neither count
-        bo_slots = jax.lax.psum(jnp.sum(
-            (traces["brownout"] & xs_alive & mask[None, :]
-             ).astype(jnp.int32)), axis_names)
-        bo_events = jax.lax.psum(jnp.sum(
-            (traces["bo_event"] & mask[None, :]).astype(jnp.int32)),
-            axis_names)
-        aggs = {"bytes_on_wire": bytes_on_wire,
-                "bytes_on_wire_i32": wire_pair, "decision_histogram": hist,
-                "completed": completed, "alive_slots": alive_slots,
-                "brownout_slots": bo_slots, "brownout_events": bo_events}
-        if intermittent is not None:
-            emit = traces["it_emit"]
-            aggs["it_full"] = jax.lax.psum(
-                jnp.sum(((emit == 2) & act).astype(jnp.int32)), axis_names)
-            aggs["it_early"] = jax.lax.psum(
-                jnp.sum(((emit == 1) & act).astype(jnp.int32)), axis_names)
-        if labels is None:
-            return aggs
-        preds = jnp.argmax(traces["logits"], axis=-1)       # (S, n_local)
-        # per-node labels arrive as the shard's own (S, n_local) tile;
-        # a shared track is replicated and broadcast over the node axis
-        ok = (preds == labels) if per_node_labels else \
-            (preds == labels[:, None])
-        if intermittent is None:
-            aggs["correct"] = jax.lax.psum(
-                jnp.sum((ok & sent).astype(jnp.int32)), axis_names)
-            return aggs
-        # ladder accuracy scores the slot-aligned host logits; emissions
-        # score against the label of their SOURCE slot (gathered through
-        # it_src — the staged window's capture slot).  Sources before this
-        # run's slot0 (a resumed segment finishing a previous segment's
-        # inference) cannot see their labels here and are masked out; the
-        # streamed driver rescores them from the concatenated traces.
-        ladder_sent = sent & (traces["decision"] <= D4_SAMPLING)
-        correct_ladder = jax.lax.psum(
-            jnp.sum((ok & ladder_sent).astype(jnp.int32)), axis_names)
-        s = traces["decision"].shape[0]
-        rel = traces["it_src"] - slot0
-        valid = (traces["it_emit"] > 0) & act & (rel >= 0)
-        rel_c = jnp.clip(rel, 0, s - 1)
-        lab = (jnp.take_along_axis(labels, rel_c, axis=0) if per_node_labels
-               else labels[rel_c])
-        it_ok = (traces["it_label"] == lab) & valid
-        it_correct_full = jax.lax.psum(
-            jnp.sum((it_ok & (traces["it_emit"] == 2)).astype(jnp.int32)),
-            axis_names)
-        it_correct_early = jax.lax.psum(
-            jnp.sum((it_ok & (traces["it_emit"] == 1)).astype(jnp.int32)),
-            axis_names)
-        aggs.update({
-            "correct_ladder": correct_ladder,
-            "it_correct_full": it_correct_full,
-            "it_correct_early": it_correct_early,
-            "correct": correct_ladder + it_correct_full + it_correct_early,
-        })
-        return aggs
+    def shard_body(state0, keys0, browned0, it0, tasks, xs_w, xs_h,
+                   xs_alive, xs_slots, mask, labels, signatures,
+                   qdnn_params, host_params, gen_params, aac_table,
+                   aux_params):
+        compile_event("fleet.run_sharded")
+        obs_trace.instant("compile:fleet.run_sharded")
+        t = xs_w.shape[-2]
+        step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
+                                m_samples, corr_threshold, shared_stream,
+                                t, node_block, brownout, intermittent,
+                                telemetry=telemetry, task=task)
+        carry0 = FleetCarry(
+            node=state0, keys=keys0, brownout=browned0, intermittent=it0,
+            telemetry=None if telemetry is None else metrics_init(telemetry))
+        final, traces = jax.lax.scan(
+            lambda c, i: step(c, i, tasks, signatures, qdnn_params,
+                              host_params, gen_params, aac_table,
+                              aux_params),
+            carry0, (xs_w, xs_h, xs_alive, xs_slots))
+        aggs = _fleet_aggregates(
+            traces, xs_alive, labels, per_node_labels, intermittent,
+            xs_slots[0] if intermittent is not None else 0,
+            tasks=tasks, task=task, mask=mask,
+            reduce=lambda x: jax.lax.psum(x, axis_names))
+        # registry lanes are summed per shard then psum'd component-wise;
+        # the psum'd delta is replicated (out-spec P() per lane)
+        final = final._replace(
+            telemetry=None if telemetry is None else metrics_psum(
+                telemetry, final.telemetry, axis_names))
+        return traces, final, aggs
 
-    # registry lanes are summed per shard then psum'd component-wise; the
-    # psum'd delta is replicated, so its out-spec is P() per lane
-    tel_out = ({name: repl for name in telemetry.names()}
-               if telemetry is not None else None)
-
-    if intermittent is None:
-        def shard_body(state0, keys0, browned0, xs_w, xs_h, xs_alive, mask,
-                       labels, signatures, qdnn_params, host_params,
-                       gen_params, aac_table):
-            compile_event("fleet.run_sharded")
-            obs_trace.instant("compile:fleet.run_sharded")
-            t = xs_w.shape[-2]
-            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
-                                    m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout,
-                                    telemetry=telemetry)
-            carry0 = (state0, keys0, browned0)
-            if telemetry is not None:
-                carry0 = carry0 + (metrics_init(telemetry),)
-            final, traces = jax.lax.scan(
-                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                                  gen_params, aac_table),
-                carry0, (xs_w, xs_h, xs_alive))
-            state, keys, browned = final[:3]
-            aggs = _aggregates(traces, xs_alive, mask, labels, None)
-            out = (traces, state, keys, browned, aggs)
-            if telemetry is not None:
-                out = out + (metrics_psum(telemetry, final[3], axis_names),)
-            return out
-
-        in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
-                    repl if shared_stream else time_nodes,   # xs_w
-                    time_nodes,                       # xs_h (S, N)
-                    time_nodes,                       # xs_alive (S, N)
-                    nodes,                            # mask (N,)
-                    time_nodes if per_node_labels else repl,  # labels
-                    repl, repl, repl, repl, repl)
-        out_specs = (time_nodes, nodes, nodes, nodes, repl)
-        if telemetry is not None:
-            out_specs = out_specs + (tel_out,)
-    else:
-        it_nodes = IntermittentState(nodes, nodes, nodes, nodes)
-
-        def shard_body(state0, keys0, browned0, it0, xs_w, xs_h, xs_alive,
-                       xs_slots, mask, labels, signatures, qdnn_params,
-                       host_params, gen_params, aac_table, aux_params):
-            compile_event("fleet.run_sharded")
-            obs_trace.instant("compile:fleet.run_sharded")
-            t = xs_w.shape[-2]
-            step = _make_fleet_step(har_cfg, costs, quant_bits, k_max,
-                                    m_samples, corr_threshold, shared_stream,
-                                    t, node_block, brownout, intermittent,
-                                    telemetry=telemetry)
-            carry0 = (state0, keys0, browned0, it0)
-            if telemetry is not None:
-                carry0 = carry0 + (metrics_init(telemetry),)
-            final, traces = jax.lax.scan(
-                lambda c, i: step(c, i, signatures, qdnn_params, host_params,
-                                  gen_params, aac_table, aux_params),
-                carry0, (xs_w, xs_h, xs_alive, xs_slots))
-            state, keys, browned, it = final[:4]
-            aggs = _aggregates(traces, xs_alive, mask, labels, xs_slots[0])
-            out = (traces, state, keys, browned, it, aggs)
-            if telemetry is not None:
-                out = out + (metrics_psum(telemetry, final[4], axis_names),)
-            return out
-
-        in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
-                    it_nodes,                         # it0 (lane state)
-                    repl if shared_stream else time_nodes,   # xs_w
-                    time_nodes,                       # xs_h (S, N)
-                    time_nodes,                       # xs_alive (S, N)
-                    repl,                             # xs_slots (S,)
-                    nodes,                            # mask (N,)
-                    time_nodes if per_node_labels else repl,  # labels
-                    repl, repl, repl, repl, repl, repl)
-        out_specs = (time_nodes, nodes, nodes, nodes, it_nodes, repl)
-        if telemetry is not None:
-            out_specs = out_specs + (tel_out,)
+    in_specs = (nodes, nodes, nodes,   # state0 (pytree), keys0, browned0
+                nodes,                            # it0 (lane state | None)
+                nodes,                            # tasks (N,) | None
+                repl if shared_stream else time_nodes,   # xs_w
+                time_nodes,                       # xs_h (S, N)
+                time_nodes,                       # xs_alive (S, N)
+                repl,                             # xs_slots (S,)
+                nodes,                            # mask (N,)
+                time_nodes if per_node_labels else repl,  # labels
+                repl, repl, repl, repl, repl, repl)
+    out_specs = (time_nodes,                      # traces
+                 FleetCarry(node=nodes, keys=nodes, brownout=nodes,
+                            intermittent=nodes, telemetry=repl),
+                 repl)                            # psum'd aggregates
 
     fn = shard_map_compat(
         shard_body, mesh, in_specs=in_specs, out_specs=out_specs,
@@ -735,21 +677,25 @@ def _resolve_labels(labels, s: int, n: int, shared_stream: bool
     if labels is None:
         return None, False
     labels = jnp.asarray(labels)
+    accepted = (f"accepted forms: (S,)=({s},) shared-stream track, or "
+                f"(S, N)=({s}, {n}) per-node tracks (padded/sharded like "
+                f"harvest; mixed-task fleets score each node's track "
+                f"against its own task)")
     if labels.shape == (s, n):
         return labels.astype(jnp.int32), True
     if labels.shape == (s,):
         if not shared_stream and n != 1:
             raise ValueError(
-                f"(S,)={labels.shape} labels with per-node (N, S, T, C) "
-                f"window streams is ambiguous: each node plays its own "
-                f"stream, so accuracy against one shared label track is "
-                f"meaningless.  Pass per-node (S, N)=({s}, {n}) labels "
-                f"(padded/sharded like harvest) or a shared (S, T, C) "
-                f"window stream.")
+                f"labels shape {labels.shape} is ambiguous with per-node "
+                f"(N, S, T, C) window streams: each of the {n} nodes plays "
+                f"its own stream, so accuracy against one shared "
+                f"(S,)=({s},) label track is meaningless.  Pass per-node "
+                f"(S, N)=({s}, {n}) labels or a shared (S, T, C) window "
+                f"stream; {accepted}.")
         return labels.astype(jnp.int32), False
     raise ValueError(
-        f"labels must be (S,)=({s},) for a shared stream or "
-        f"(S, N)=({s}, {n}) per-node tracks, got {labels.shape}")
+        f"labels must be one of the accepted forms, got shape "
+        f"{labels.shape}; {accepted}.")
 
 
 def _resolve_alive(alive, n: int, s: int) -> jnp.ndarray:
@@ -834,16 +780,69 @@ def _validate_intermittent_args(intermittent, intermittent_state0,
                 f"fleet has {n}")
 
 
+def _resolve_tasks(tasks, task: TaskLaneConfig | None, n: int
+                   ) -> tuple[jnp.ndarray | None, TaskLaneConfig | None]:
+    """Resolve the heterogeneous-task lane's per-node ids + config.
+
+    ``task`` alone defaults to the round-robin
+    :func:`repro.serving.fleet_lanes.fleet_task_assignment`; ``tasks``
+    alone gets the default two-task :class:`TaskLaneConfig`.  Ids are
+    validated against the config's task count host-side (they are static
+    per-node run arguments, not traced)."""
+    if tasks is None and task is None:
+        return None, None
+    if task is None:
+        task = TaskLaneConfig()
+    if tasks is None:
+        tasks = fleet_task_assignment(n, task.n_tasks)
+    tasks = jnp.asarray(tasks, jnp.int32)
+    if tasks.shape != (n,):
+        raise ValueError(
+            f"tasks must be (N,)=({n},) per-node task ids, "
+            f"got {tasks.shape}")
+    lo, hi = int(jnp.min(tasks)), int(jnp.max(tasks))
+    if lo < 0 or hi >= task.n_tasks:
+        raise ValueError(
+            f"tasks ids span [{lo}, {hi}] but the TaskLaneConfig declares "
+            f"{task.n_tasks} tasks {task.names}")
+    return tasks, task
+
+
+def _resolve_task_host(task: TaskLaneConfig | None, host_params):
+    """With ``per_task_host``, ``host_params`` must arrive as one tree per
+    task; stack them leaf-wise so each node's host step can gather its
+    task's tree at fixed shapes (:func:`stack_task_params`)."""
+    if task is None or not task.per_task_host:
+        return host_params
+    if not isinstance(host_params, (tuple, list)):
+        raise ValueError(
+            f"per_task_host=True needs host_params as a sequence of "
+            f"{task.n_tasks} per-task param trees "
+            f"(one per {task.names}), got {type(host_params).__name__}")
+    if len(host_params) != task.n_tasks:
+        raise ValueError(
+            f"per_task_host=True needs {task.n_tasks} host param trees "
+            f"for tasks {task.names}, got {len(host_params)}")
+    return stack_task_params(host_params)
+
+
 def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
                       labels: jnp.ndarray | None, per_node: bool,
                       intermittent: IntermittentConfig | None = None,
-                      slot0: int = 0) -> dict:
-    """Masked fleet aggregates from (S, N) traces — the single-device
-    mirror of the sharded engine's psum'd quantities (int counters are
-    exactly equal across engines; tests cross-check them).  The activity
-    mask is the engine's EMITTED alive lane (exogenous ∧ ¬browned_out);
-    ``exo_alive`` is the exogenous trace alone, needed to count the slots
-    the brown-out hysteresis suppressed.
+                      slot0=0, tasks: jnp.ndarray | None = None,
+                      task: TaskLaneConfig | None = None,
+                      mask: jnp.ndarray | None = None,
+                      reduce=None) -> dict:
+    """Masked fleet aggregates from (S, N) traces — ONE function for both
+    engines: the single-device driver calls it host-side after the run
+    (``mask=None``, identity ``reduce``); the sharded engine calls it
+    inside the shard_map region on its local tile, with the static padding
+    ``mask`` composed into the activity mask and ``reduce`` wrapping every
+    aggregate in a ``psum`` — int counters are exactly equal across engines
+    because every reduction here is an associative integer sum (tests
+    cross-check them).  The activity mask is the engine's EMITTED alive
+    lane (exogenous ∧ ¬browned_out); ``exo_alive`` is the exogenous trace
+    alone, needed to count the slots the brown-out hysteresis suppressed.
 
     With ``intermittent`` the completion aggregate excludes D6 (a suspended
     inference put nothing on the wire), the histogram grows to the 9-code
@@ -851,36 +850,69 @@ def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
     added; ``slot0`` is the absolute slot index of this run's first slot —
     emissions whose ``it_src`` predates it (a resumed segment finishing an
     earlier segment's inference) are masked out of the accuracy counters
-    here and rescored by the streamed driver over the concatenated traces."""
+    here and rescored by the streamed driver over the concatenated traces.
+
+    With the task lane (``tasks``/``task``) every completion/miss/accuracy
+    count additionally splits per task id via
+    :func:`repro.obs.categorical_counts` — integer histograms over the
+    broadcast (S, N) task ids, so the splits psum exactly like the totals:
+    ``completed_by_task``, ``deadline_miss_by_task`` (an alive slot that
+    put no result on the wire missed its slot deadline) and, with labels,
+    ``correct_by_task``."""
+    red = reduce if reduce is not None else (lambda x: x)
     act = traces["alive"]
+    if mask is not None:
+        act = act & mask[None, :]
     if intermittent is None:
         sent = (traces["decision"] != DEFER) & act
         n_bins = N_DECISIONS
     else:
+        # D6 suspends with nothing on the wire; D7/D8 are completions
         sent = ((traces["decision"] != DEFER)
                 & (traces["decision"] != D6_PARTIAL) & act)
         n_bins = N_INTERMITTENT_DECISIONS
+    bo = traces["brownout"] & exo_alive
+    bo_event = traces["bo_event"]
+    if mask is not None:
+        # padding nodes are exogenously dead: they never brown "in" and
+        # contribute to neither brown-out count
+        bo = bo & mask[None, :]
+        bo_event = bo_event & mask[None, :]
     aggs = {
-        "bytes_on_wire": jnp.sum(jnp.where(act, traces["payload"], 0.0)),
-        "bytes_on_wire_i32": _wire_byte_pair(traces["payload"], act),
-        "decision_histogram": categorical_counts(
-            traces["decision"], n_bins, act),
-        "completed": jnp.sum(sent.astype(jnp.int32)),
-        "alive_slots": jnp.sum(act.astype(jnp.int32)),
-        "brownout_slots": jnp.sum(
-            (traces["brownout"] & exo_alive).astype(jnp.int32)),
-        "brownout_events": jnp.sum(traces["bo_event"].astype(jnp.int32)),
+        "bytes_on_wire": red(
+            jnp.sum(jnp.where(act, traces["payload"], 0.0))),
+        "bytes_on_wire_i32": red(_wire_byte_pair(traces["payload"], act)),
+        "decision_histogram": red(categorical_counts(
+            traces["decision"], n_bins, act)),
+        "completed": red(jnp.sum(sent.astype(jnp.int32))),
+        "alive_slots": red(jnp.sum(act.astype(jnp.int32))),
+        "brownout_slots": red(jnp.sum(bo.astype(jnp.int32))),
+        "brownout_events": red(jnp.sum(bo_event.astype(jnp.int32))),
     }
     if intermittent is not None:
         emit = traces["it_emit"]
-        aggs["it_full"] = jnp.sum(((emit == 2) & act).astype(jnp.int32))
-        aggs["it_early"] = jnp.sum(((emit == 1) & act).astype(jnp.int32))
+        aggs["it_full"] = red(
+            jnp.sum(((emit == 2) & act).astype(jnp.int32)))
+        aggs["it_early"] = red(
+            jnp.sum(((emit == 1) & act).astype(jnp.int32)))
+    tasks_b = (None if tasks is None else
+               jnp.broadcast_to(tasks[None, :], act.shape))
+    if task is not None:
+        aggs["completed_by_task"] = red(
+            categorical_counts(tasks_b, task.n_tasks, sent))
+        aggs["deadline_miss_by_task"] = red(
+            categorical_counts(tasks_b, task.n_tasks, act & ~sent))
     if labels is None:
         return aggs
     preds = jnp.argmax(traces["logits"], axis=-1)
+    # per-node labels arrive as (S, N) tracks (under shard_map: the shard's
+    # own tile); a shared track broadcasts over the node axis
     ok = (preds == labels) if per_node else (preds == labels[:, None])
     if intermittent is None:
-        aggs["correct"] = jnp.sum((ok & sent).astype(jnp.int32))
+        aggs["correct"] = red(jnp.sum((ok & sent).astype(jnp.int32)))
+        if task is not None:
+            aggs["correct_by_task"] = red(
+                categorical_counts(tasks_b, task.n_tasks, ok & sent))
         return aggs
     # ladder accuracy scores the slot-aligned host logits; lane emissions
     # score against the label of their SOURCE slot (the staged window's
@@ -893,13 +925,21 @@ def _fleet_aggregates(traces: dict, exo_alive: jnp.ndarray,
     lab = (jnp.take_along_axis(labels, rel_c, axis=0) if per_node
            else labels[rel_c])
     it_ok = (traces["it_label"] == lab) & valid
-    aggs["correct_ladder"] = jnp.sum((ok & ladder_sent).astype(jnp.int32))
-    aggs["it_correct_full"] = jnp.sum(
-        (it_ok & (traces["it_emit"] == 2)).astype(jnp.int32))
-    aggs["it_correct_early"] = jnp.sum(
-        (it_ok & (traces["it_emit"] == 1)).astype(jnp.int32))
+    aggs["correct_ladder"] = red(
+        jnp.sum((ok & ladder_sent).astype(jnp.int32)))
+    aggs["it_correct_full"] = red(
+        jnp.sum((it_ok & (traces["it_emit"] == 2)).astype(jnp.int32)))
+    aggs["it_correct_early"] = red(
+        jnp.sum((it_ok & (traces["it_emit"] == 1)).astype(jnp.int32)))
     aggs["correct"] = (aggs["correct_ladder"] + aggs["it_correct_full"]
                        + aggs["it_correct_early"])
+    if task is not None:
+        aggs["correct_by_task"] = red(
+            categorical_counts(tasks_b, task.n_tasks, ok & ladder_sent)
+            + categorical_counts(tasks_b, task.n_tasks,
+                                 it_ok & (traces["it_emit"] == 2))
+            + categorical_counts(tasks_b, task.n_tasks,
+                                 it_ok & (traces["it_emit"] == 1)))
     return aggs
 
 
@@ -925,7 +965,9 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
                           aux_params: dict | None = None,
                           slot0: int = 0,
                           telemetry=None,
-                          telemetry_state0: dict | None = None):
+                          telemetry_state0: dict | None = None,
+                          tasks: jnp.ndarray | None = None,
+                          task: TaskLaneConfig | None = None):
     """Simulate N independent Seeker nodes over S time slots in one scan.
 
     Args:
@@ -1001,6 +1043,20 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
             from — merged host-side (:func:`repro.obs.metrics_merge`) after
             the run, so counters/histograms accumulate exactly across
             segments and gauges keep the latest level.
+        tasks: optional (N,) int32 per-node task ids — the heterogeneous-
+            task lane (HAR wearables + bearing monitors sharing one fleet).
+            Defaults to :func:`repro.serving.fleet_lanes.
+            fleet_task_assignment` when only ``task`` is given.
+        task: optional :class:`repro.serving.fleet_lanes.TaskLaneConfig` —
+            names, per-task cost scales (the WHOLE decision ladder and the
+            intermittent lane's stage costs scale per node), and the
+            ``per_task_host`` switch (``host_params`` then arrives as one
+            tree per task and each node infers through its task's weights).
+            Adds per-task splits ``completed_by_task``/
+            ``deadline_miss_by_task`` (and ``correct_by_task``/
+            ``accuracy_by_task`` with labels) to the aggregates.  ``None``
+            (with ``tasks=None``) keeps the engine bitwise-identical to
+            the homogeneous fleet.
 
     Returns a dict of per-node traces, time-major:
         ``decisions``/``payload_bytes``/``stored_uj``/``k_trace``: (S, N),
@@ -1045,38 +1101,32 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
     alive_t = _resolve_alive(alive, n, s).T                   # (S, N)
 
     state0 = _stack_pad_state(state0, n, 0, predictor_window, initial_uj)
-    keys0 = (node_keys if node_keys is not None else
-             jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n)))
+    keys0 = node_keys if node_keys is not None else fleet_node_keys(key, n)
     browned0 = _resolve_brownout0(brownout_state0, state0, brownout, n)
     _validate_intermittent_args(intermittent, intermittent_state0,
                                 aux_params, n)
-    tel_spec = _resolve_telemetry(telemetry, intermittent)
+    tasks, task = _resolve_tasks(tasks, task, n)
+    host_params = _resolve_task_host(task, host_params)
+    tel_spec = _resolve_telemetry(telemetry, intermittent, task)
     run_fn = _build_fleet_run(har_cfg, costs, quant_bits, k_max, m_samples,
                               corr_threshold, shared_stream, node_block,
-                              brownout, donate, intermittent, tel_spec)
-    final_intermittent = tel_delta = None
-    if intermittent is None:
-        res_t = run_fn(
-            state0, keys0, browned0, xs_windows, harvest.T, alive_t,
-            signatures, qdnn_params, host_params, gen_params, aac_table)
-        traces, final_state, final_keys, final_brownout = res_t[:4]
-        if tel_spec is not None:
-            tel_delta = res_t[4]
-    else:
+                              brownout, donate, intermittent, tel_spec,
+                              task)
+    it0 = None
+    if intermittent is not None:
         it0 = (intermittent_state0 if intermittent_state0 is not None
                else intermittent_fleet_init(n, har_cfg))
-        xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
-        res_t = run_fn(
-            state0, keys0, browned0, it0, xs_windows, harvest.T, alive_t,
-            xs_slots, signatures, qdnn_params, host_params, gen_params,
-            aac_table, aux_params)
-        (traces, final_state, final_keys, final_brownout,
-         final_intermittent) = res_t[:5]
-        if tel_spec is not None:
-            tel_delta = res_t[5]
+    xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
+    traces, final = run_fn(
+        state0, keys0, browned0, it0, tasks, xs_windows, harvest.T,
+        alive_t, xs_slots, signatures, qdnn_params, host_params, gen_params,
+        aac_table, aux_params)
+    final_state, final_keys = final.node, final.keys
+    final_brownout, final_intermittent = final.brownout, final.intermittent
+    tel_delta = final.telemetry
 
     aggs = _fleet_aggregates(traces, alive_t, labels, per_node_labels,
-                             intermittent, slot0)
+                             intermittent, slot0, tasks=tasks, task=task)
     out = {
         "decisions": traces["decision"],                      # (S, N)
         "payload_bytes": traces["payload"],                   # (S, N)
@@ -1124,6 +1174,16 @@ def seeker_fleet_simulate(windows: jnp.ndarray, harvest: jnp.ndarray, *,
             out["correct_ladder"] = aggs["correct_ladder"]
             out["it_correct_full"] = aggs["it_correct_full"]
             out["it_correct_early"] = aggs["it_correct_early"]
+    if task is not None:
+        out["task_names"] = task.names
+        out["tasks"] = tasks
+        out["completed_by_task"] = aggs["completed_by_task"]
+        out["deadline_miss_by_task"] = aggs["deadline_miss_by_task"]
+        if labels is not None:
+            out["correct_by_task"] = aggs["correct_by_task"]
+            out["accuracy_by_task"] = (
+                aggs["correct_by_task"]
+                / jnp.maximum(aggs["completed_by_task"], 1))
     return out
 
 
@@ -1148,7 +1208,9 @@ def seeker_fleet_simulate_sharded(
         aux_params: dict | None = None,
         slot0: int = 0,
         telemetry=None,
-        telemetry_state0: dict | None = None):
+        telemetry_state0: dict | None = None,
+        tasks: jnp.ndarray | None = None,
+        task: TaskLaneConfig | None = None):
     """:func:`seeker_fleet_simulate` with the node axis sharded over a mesh.
 
     The fleet's node dim is split over the mesh axes the ``"nodes"`` logical
@@ -1189,6 +1251,12 @@ def seeker_fleet_simulate_sharded(
             source-slot-scored accuracy splits join the psum'd set.  A
             common ``node_block`` in both engines makes lane traces
             bit-identical across shard layouts, same as the host logits.
+        tasks/task: the heterogeneous-task lane (see
+            :func:`seeker_fleet_simulate`).  Task ids are sharded over the
+            node axes like harvest; padding nodes get task 0 but are masked
+            out of every per-task count, so ``completed_by_task``/
+            ``deadline_miss_by_task`` (and ``correct_by_task`` with labels)
+            are psum-exact equals of the single-device engine's.
 
     Extra returns: ``decision_histogram`` (N_DECISIONS,) int32 fleet-wide
     decision counts over alive slots, ``completed``/``alive_slots`` () int32,
@@ -1248,36 +1316,31 @@ def seeker_fleet_simulate_sharded(
         (0, pad))
     _validate_intermittent_args(intermittent, intermittent_state0,
                                 aux_params, n)
-    tel_spec = _resolve_telemetry(telemetry, intermittent)
+    tasks, task = _resolve_tasks(tasks, task, n)
+    host_params = _resolve_task_host(task, host_params)
+    if tasks is not None and pad:   # padding nodes run task 0, masked out
+        tasks = jnp.pad(tasks, (0, pad))
+    tel_spec = _resolve_telemetry(telemetry, intermittent, task)
     run_fn = _build_fleet_run_sharded(
         mesh, axis_names, har_cfg, costs, quant_bits, k_max, m_samples,
         corr_threshold, shared_stream, per_node_labels, node_block,
-        brownout, donate, intermittent, tel_spec)
-    final_intermittent = tel_delta = None
-    if intermittent is None:
-        res_t = run_fn(
-            state_full, keys0, browned0, xs_windows, harvest_t, alive_t,
-            mask, labels_arr, signatures, qdnn_params, host_params,
-            gen_params, aac_table)
-        traces, final_state, final_keys, final_brownout, aggs = res_t[:5]
-        if tel_spec is not None:
-            tel_delta = res_t[5]
-    else:
+        brownout, donate, intermittent, tel_spec, task)
+    it0 = None
+    if intermittent is not None:
         it0 = (intermittent_state0 if intermittent_state0 is not None
                else intermittent_fleet_init(n, har_cfg))
         if pad:   # inert lane rows for padding nodes (never engage: dead)
             filler = intermittent_fleet_init(pad, har_cfg)
             it0 = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b], axis=0), it0, filler)
-        xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
-        res_t = run_fn(
-            state_full, keys0, browned0, it0, xs_windows, harvest_t, alive_t,
-            xs_slots, mask, labels_arr, signatures, qdnn_params, host_params,
-            gen_params, aac_table, aux_params)
-        (traces, final_state, final_keys, final_brownout, final_intermittent,
-         aggs) = res_t[:6]
-        if tel_spec is not None:
-            tel_delta = res_t[6]
+    xs_slots = jnp.arange(slot0, slot0 + s, dtype=jnp.int32)
+    traces, final, aggs = run_fn(
+        state_full, keys0, browned0, it0, tasks, xs_windows, harvest_t,
+        alive_t, xs_slots, mask, labels_arr, signatures, qdnn_params,
+        host_params, gen_params, aac_table, aux_params)
+    final_state, final_keys = final.node, final.keys
+    final_brownout, final_intermittent = final.brownout, final.intermittent
+    tel_delta = final.telemetry
 
     out = {
         "decisions": traces["decision"][:, :n],               # (S, N)
@@ -1329,6 +1392,16 @@ def seeker_fleet_simulate_sharded(
             out["correct_ladder"] = aggs["correct_ladder"]
             out["it_correct_full"] = aggs["it_correct_full"]
             out["it_correct_early"] = aggs["it_correct_early"]
+    if task is not None:
+        out["task_names"] = task.names
+        out["tasks"] = tasks[:n]
+        out["completed_by_task"] = aggs["completed_by_task"]
+        out["deadline_miss_by_task"] = aggs["deadline_miss_by_task"]
+        if labels is not None:
+            out["correct_by_task"] = aggs["correct_by_task"]
+            out["accuracy_by_task"] = (
+                aggs["correct_by_task"]
+                / jnp.maximum(aggs["completed_by_task"], 1))
     return out
 
 
@@ -1352,7 +1425,9 @@ def seeker_fleet_simulate_streamed(
         intermittent_state0: IntermittentState | None = None,
         aux_params: dict | None = None,
         telemetry=None,
-        telemetry_state0: dict | None = None):
+        telemetry_state0: dict | None = None,
+        tasks: jnp.ndarray | None = None,
+        task: TaskLaneConfig | None = None):
     """Feed the fleet scan in ``chunk``-slot window segments instead of
     materializing the whole (N, S, T, C) stream up front.
 
@@ -1389,6 +1464,12 @@ def seeker_fleet_simulate_streamed(
             segment resumes from the previous segment's ``res["telemetry"]``
             (the :func:`repro.obs.metrics_merge` chain), so the final lanes
             are bitwise-equal to one long telemetered run.
+        tasks/task: the heterogeneous-task lane (see
+            :func:`seeker_fleet_simulate`) — task ids are static per-node,
+            so every segment reuses the same resolved assignment; per-task
+            completion/miss counters sum exactly, and ``correct_by_task`` is
+            rescored over the concatenated traces (like ``correct``) so
+            cross-segment staged emissions land in the right task bucket.
 
     Returns the engine dict with traces concatenated over time, counter
     aggregates (``decision_histogram``, ``completed``, ``alive_slots``,
@@ -1415,6 +1496,7 @@ def seeker_fleet_simulate_streamed(
             window_fn = lambda a, b: arr[:, a:b]              # noqa: E731
     labels_full = None if labels is None else jnp.asarray(labels)
     alive_full = None if alive is None else _resolve_alive(alive, n, s)
+    tasks, task = _resolve_tasks(tasks, task, n)
 
     kw = dict(signatures=signatures, qdnn_params=qdnn_params,
               host_params=host_params, gen_params=gen_params,
@@ -1424,22 +1506,19 @@ def seeker_fleet_simulate_streamed(
               predictor_window=predictor_window, initial_uj=initial_uj,
               brownout=brownout, node_block=node_block, donate=donate,
               intermittent=intermittent, aux_params=aux_params,
-              telemetry=telemetry)
+              telemetry=telemetry, tasks=tasks, task=task)
     if mesh is not None:
         kw["mesh"] = mesh
     engine = (seeker_fleet_simulate if mesh is None
               else seeker_fleet_simulate_sharded)
 
-    trace_keys = ["decisions", "payload_bytes", "stored_uj", "k_trace",
-                  "logits", "preds", "alive", "brownout"]
-    counter_keys = ["decision_histogram", "completed", "alive_slots",
-                    "brownout_slots", "brownout_events", "correct"]
-    if intermittent is not None:
-        trace_keys += ["it_emit", "it_label", "it_conf", "it_src",
-                       "it_stage"]
-        counter_keys += ["it_full", "it_early", "correct_ladder"]
+    # the segment keys to concatenate/sum come from the lane registry — a
+    # new lane that declares trace_keys/counter_keys streams automatically
+    active = _active_lanes(intermittent, task, brownout)
+    trace_keys = list(fleet_trace_keys(active))
+    counter_keys = list(fleet_counter_keys(active))
 
-    tel_spec = _resolve_telemetry(telemetry, intermittent)
+    tel_spec = _resolve_telemetry(telemetry, intermittent, task)
     state, keys, browned = state0, node_keys, brownout_state0
     it_state = intermittent_state0
     tel_state = telemetry_state0
@@ -1529,6 +1608,35 @@ def seeker_fleet_simulate_streamed(
                               + out["it_correct_early"])
         out["fleet_accuracy"] = (out["correct"]
                                  / jnp.maximum(counters["completed"], 1))
+    if task is not None:
+        out["task_names"] = task.names
+        out["tasks"] = tasks
+        if labels_full is not None:
+            # like ``correct``: per-segment correct_by_task counters cannot
+            # see cross-segment staged emissions, so rescore the split once
+            # over the concatenated traces (integer counts — exact)
+            tasks_b = jnp.broadcast_to(tasks[None, :], out["alive"].shape)
+            lab_t = labels_full.astype(jnp.int32)
+            ok = out["preds"] == (lab_t if lab_t.ndim == 2
+                                  else lab_t[:, None])
+            if intermittent is None:
+                sent = (out["decisions"] != DEFER) & out["alive"]
+                out["correct_by_task"] = categorical_counts(
+                    tasks_b, task.n_tasks, ok & sent)
+            else:
+                sent = ((out["decisions"] != DEFER)
+                        & (out["decisions"] != D6_PARTIAL) & out["alive"])
+                ladder_sent = sent & (out["decisions"] <= D4_SAMPLING)
+                out["correct_by_task"] = (
+                    categorical_counts(tasks_b, task.n_tasks,
+                                       ok & ladder_sent)
+                    + categorical_counts(tasks_b, task.n_tasks,
+                                         it_ok & (out["it_emit"] == 2))
+                    + categorical_counts(tasks_b, task.n_tasks,
+                                         it_ok & (out["it_emit"] == 1)))
+            out["accuracy_by_task"] = (
+                out["correct_by_task"]
+                / jnp.maximum(counters["completed_by_task"], 1))
     if mesh is not None:
         out["padded_nodes"] = res["padded_nodes"]
         out["node_axes"] = res["node_axes"]

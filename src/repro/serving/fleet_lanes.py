@@ -1,0 +1,420 @@
+"""The fleet carry-lane registry: one registration site per per-node lane.
+
+PR 5 (brown-outs), PR 7 (the intermittent lane) and PR 8 (telemetry) each
+paid a multiplicative cost to land one per-node capability: a positional,
+conditionally-shaped scan carry (``state, keys, browned[, it][, metrics]``)
+threaded through three near-duplicate engine bodies plus the resume
+contract, the streamed driver's key lists, the telemetry spec and the docs.
+This module makes that contract *structural*:
+
+* :class:`FleetCarry` is the typed scan carry of ALL three fleet engines
+  (single-device, sharded, streamed segments).  Absent lanes are ``None`` —
+  a ``None`` field is an empty pytree, so jit signatures, scan carries and
+  ``shard_map`` specs need no conditional shapes, and ``lane=None`` stays
+  bitwise-off by construction (no inputs, no ops);
+* :class:`FleetLane` is one lane's REGISTRATION: its initializer, its
+  freeze-on-dead behavior, its resume-contract fields, the result keys of
+  its psum'd aggregates, the per-segment trace/counter keys the streamed
+  driver chains, and the telemetry lanes it owns.  The engines, the
+  streamed driver, :func:`repro.serving.fleet.fleet_telemetry_spec`, the
+  resume-contract test harness (``tests/test_resume_contract.py``) and the
+  lane-conformance check (``tests/test_lane_conformance.py``) all derive
+  from :data:`FLEET_LANES` — adding a lane means adding ONE entry here
+  (plus the lane's own step function), not editing six engine sites;
+* the heterogeneous-task lane (:class:`TaskLaneConfig`) is the first lane
+  shipped through the protocol: per-node task identity (HAR wearables and
+  bearing-vibration monitors sharing one fleet), task-scaled per-stage
+  energy costs, optional per-task host DNNs, and per-task
+  completed/correct/deadline-miss splits in the psum'd aggregates.
+
+Intermittent-computing systems (Islam et al., arXiv:2503.06663; Gobieski et
+al., arXiv:1810.07751) live or die on exactly this kind of disciplined
+suspended-state contract; docs/RESUME_CONTRACT.md documents the obligations
+each registration declares.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.decision import DEFER, D6_PARTIAL, N_INTERMITTENT_DECISIONS
+from ..core.energy import BEARING_COST_SCALE
+from ..obs import (Lane, counter, counter_add, gauge, gauge_set, histogram,
+                   hist_observe)
+
+__all__ = ["FleetCarry", "FleetLane", "FLEET_LANES", "TaskLaneConfig",
+           "fleet_lane", "fleet_telemetry_lanes", "fleet_trace_keys",
+           "fleet_counter_keys", "fleet_task_assignment", "stack_task_params",
+           "FREEZE_KINDS"]
+
+N_DECISIONS = DEFER + 1   # D0..D4 + DEFER: bins of the ladder histogram
+
+
+class FleetCarry(NamedTuple):
+    """The typed scan carry shared by every fleet engine.
+
+    One field per carried lane, in registration order; an absent lane is
+    ``None`` (an empty pytree — no jit inputs, no scan slots, no shard_map
+    leaves), which is what keeps ``lane=None`` engines bitwise-identical to
+    engines built before the lane existed.  Input lanes (churn's ``alive``
+    trace) and static lanes (task identity) are per-slot/per-run arguments,
+    not carry fields — see their registrations.
+    """
+
+    node: Any            # stacked SeekerNodeState — always present
+    keys: Any            # (N, 2) per-node PRNG keys — always present
+    brownout: Any        # (N,) bool browned-out flag — always present (inert
+                         # all-False when brownout config is None)
+    intermittent: Any    # stacked IntermittentState | None
+    telemetry: Any       # {lane name: int32 array} | None
+
+
+# freeze-on-dead vocabulary a lane must declare (conformance-checked):
+#   keep     - dead/browned-out slots hold the lane's carry bitwise frozen
+#              (the engine's keep() select)
+#   trickle  - keep, except a declared physical side-channel still runs
+#              (the brown-out lane's supercap trickle-charge)
+#   merge    - the lane is a fleet-level accumulator, never frozen per node
+#              (telemetry: dead nodes simply contribute zero)
+#   input    - the lane is a per-slot input, not carried state (churn)
+#   static   - per-node constants; freezing is moot (task identity)
+FREEZE_KINDS = ("keep", "trickle", "merge", "input", "static")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetLane:
+    """One lane's single registration site.
+
+    ``init`` is the lane's initializer as a ``"module:attr"`` reference (the
+    conformance check resolves it); ``resume_in``/``resume_out`` are the
+    engine kwargs / result keys of its resume-contract slice;
+    ``aggregates`` the result keys of its (psum'd) fleet aggregates;
+    ``trace_keys``/``counter_keys`` what the streamed driver concatenates /
+    sums per segment; ``telemetry`` the registry lanes it owns (a function
+    of the active-lane set — the decision histogram widens when the
+    intermittent lane is on) and ``telemetry_update`` advances them one
+    slot from the engine's masked ``out_trace``.
+
+    ``config_kwarg`` names the engine argument whose non-``None`` value
+    activates the lane (``None`` = always on); ``outputs_when_off`` marks
+    lanes whose traces/aggregates/telemetry are emitted even when inactive
+    (the brown-out flag lane: the carry slot and its counters exist — as
+    inert zeros — in every engine, which is what keeps ``brownout=None``
+    bitwise).
+    """
+
+    name: str
+    doc: str
+    carry_field: str | None
+    config_kwarg: str | None
+    init: str
+    freeze: str
+    resume_in: tuple[str, ...]
+    resume_out: tuple[str, ...]
+    aggregates: tuple[str, ...]
+    trace_keys: tuple[str, ...]
+    counter_keys: tuple[str, ...]
+    telemetry: Callable[[frozenset], tuple[Lane, ...]] | None = None
+    telemetry_update: Callable[..., dict] | None = None
+    outputs_when_off: bool = False
+
+    def __post_init__(self):
+        if self.freeze not in FREEZE_KINDS:
+            raise ValueError(
+                f"lane {self.name!r}: freeze must be one of {FREEZE_KINDS}, "
+                f"got {self.freeze!r}")
+        if self.carry_field is not None:
+            if self.carry_field not in FleetCarry._fields:
+                raise ValueError(
+                    f"lane {self.name!r}: carry_field {self.carry_field!r} "
+                    f"is not a FleetCarry field {FleetCarry._fields}")
+            if not self.resume_in or not self.resume_out:
+                raise ValueError(
+                    f"lane {self.name!r} carries state but declares no "
+                    f"resume contract — streamed segment chains would "
+                    f"silently replay it")
+
+    def active(self, active_names: frozenset) -> bool:
+        """Does this lane emit traces/aggregates for this engine build?"""
+        return (self.config_kwarg is None or self.outputs_when_off
+                or self.name in active_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskLaneConfig:
+    """Heterogeneous multi-workload fleets: per-node task identity.
+
+    The paper evaluates Seeker on HAR *and* predictive maintenance; a mixed
+    fleet assigns every node a task id (``tasks`` (N,) int32 — HAR wearables
+    and bearing-vibration monitors sharing one deployment).  ``cost_scale``
+    scales the WHOLE Table-2 cost ladder (and the intermittent lane's
+    per-stage costs) per task: a bearing monitor's 48-kHz vibration
+    front-end pays more per window than a 50-Hz IMU — the default scale is
+    :data:`repro.core.energy.BEARING_COST_SCALE`.
+
+    ``per_task_host`` switches the host/DNN step to per-task weights: pass
+    ``host_params`` as a length-``n_tasks`` tuple of trees (stacked by
+    :func:`stack_task_params`; node ``i`` infers through tree
+    ``tasks[i]``).  The backbone tensor shapes stay shared — mixed fleets
+    run one window shape, e.g. bearing streams resampled to the HAR (T, C)
+    grid (:func:`repro.data.sensors.bearing_stream` with ``t=60``, tiled to
+    3 channels) — so the lane changes WHICH weights a node runs, never the
+    compiled shapes.
+
+    Frozen + hashable: the config keys the engines' compile caches like
+    ``BrownoutConfig`` and ``IntermittentConfig`` do.
+    """
+
+    names: tuple[str, ...] = ("har", "bearing")
+    cost_scale: tuple[float, ...] = (1.0, BEARING_COST_SCALE)
+    per_task_host: bool = False
+
+    def __post_init__(self):
+        if len(self.names) < 1:
+            raise ValueError("TaskLaneConfig needs at least one task")
+        if len(self.cost_scale) != len(self.names):
+            raise ValueError(
+                f"TaskLaneConfig: {len(self.names)} task names but "
+                f"{len(self.cost_scale)} cost scales")
+        if any(not s > 0.0 for s in self.cost_scale):
+            raise ValueError(
+                f"TaskLaneConfig.cost_scale must be > 0, got "
+                f"{self.cost_scale}")
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.names)
+
+
+def fleet_task_assignment(n_nodes: int, n_tasks: int = 2) -> jnp.ndarray:
+    """Round-robin (N,) task ids — the default mixed-fleet layout (task
+    populations within one node of equal, interleaved so every shard of a
+    sharded fleet carries every task)."""
+    return (jnp.arange(n_nodes, dtype=jnp.int32) % n_tasks).astype(jnp.int32)
+
+
+def stack_task_params(params_by_task) -> Any:
+    """Stack per-task param trees leaf-wise onto a leading task axis.  The
+    engines gather node ``i``'s tree with ``tree_map(lambda p: p[tasks[i]])``
+    inside the vmapped step — same compiled shapes for every node."""
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves, axis=0), *params_by_task)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry ownership: each lane declares the registry lanes it owns and how
+# one slot of the engine's masked out_trace advances them.  The spec in
+# repro.serving.fleet.fleet_telemetry_spec is the union of these — spec and
+# carry cannot drift apart.
+# ---------------------------------------------------------------------------
+
+def _sent_mask(out_trace: dict, active: frozenset) -> jnp.ndarray:
+    """Completed == put a result on the wire: not DEFER, and (with the
+    intermittent lane) not a D6 suspension."""
+    dec = out_trace["decision"]
+    sent = (dec != DEFER) & out_trace["alive"]
+    if "intermittent" in active:
+        sent = sent & (dec != D6_PARTIAL)
+    return sent
+
+
+def _node_telemetry(active: frozenset) -> tuple[Lane, ...]:
+    n_bins = (N_INTERMITTENT_DECISIONS if "intermittent" in active
+              else N_DECISIONS)
+    return (counter("fleet.wire_bytes", "B"),
+            counter("fleet.completed", "windows"),
+            counter("fleet.alive_slots", "slots"),
+            gauge("fleet.stored_uj", "uJ"),
+            histogram("fleet.decisions", n_bins, log=False,
+                      unit="decisions"))
+
+
+def _node_telemetry_update(spec, metrics, out_trace, *, exo_alive_t, active,
+                           tasks=None):
+    act = out_trace["alive"]
+    m = counter_add(spec, metrics, "fleet.wire_bytes",
+                    out_trace["payload"], act)
+    m = counter_add(spec, m, "fleet.completed",
+                    _sent_mask(out_trace, active))
+    m = counter_add(spec, m, "fleet.alive_slots", act)
+    m = gauge_set(spec, m, "fleet.stored_uj",
+                  jnp.sum(jnp.where(
+                      act, jnp.floor(out_trace["stored"]).astype(jnp.int32),
+                      0)))
+    return hist_observe(spec, m, "fleet.decisions", out_trace["decision"],
+                        act)
+
+
+def _brownout_telemetry(active: frozenset) -> tuple[Lane, ...]:
+    return (counter("fleet.brownout_slots", "slots"),
+            counter("fleet.brownout_events", "events"))
+
+
+def _brownout_telemetry_update(spec, metrics, out_trace, *, exo_alive_t,
+                               active, tasks=None):
+    m = counter_add(spec, metrics, "fleet.brownout_slots",
+                    out_trace["brownout"] & exo_alive_t)
+    return counter_add(spec, m, "fleet.brownout_events",
+                       out_trace["bo_event"])
+
+
+def _intermittent_telemetry(active: frozenset) -> tuple[Lane, ...]:
+    return (counter("fleet.it_full", "windows"),
+            counter("fleet.it_early", "windows"))
+
+
+def _intermittent_telemetry_update(spec, metrics, out_trace, *, exo_alive_t,
+                                   active, tasks=None):
+    act = out_trace["alive"]
+    emit = out_trace["it_emit"]
+    m = counter_add(spec, metrics, "fleet.it_full", (emit == 2) & act)
+    return counter_add(spec, m, "fleet.it_early", (emit == 1) & act)
+
+
+def _task_telemetry(active: frozenset) -> tuple[Lane, ...]:
+    # per-task completion counts as a categorical histogram over task ids;
+    # the bin count rides the active-set tag "task:K" (the spec is a pure
+    # function of the active set, so engines with different task counts get
+    # different — correctly sized — specs)
+    for tag in active:
+        if tag.startswith("task:"):
+            n_tasks = int(tag.split(":", 1)[1])
+            return (histogram("fleet.task_completed", max(n_tasks, 2),
+                              log=False, unit="windows"),)
+    return ()
+
+
+def _task_telemetry_update(spec, metrics, out_trace, *, exo_alive_t, active,
+                           tasks=None):
+    sent = _sent_mask(out_trace, active)
+    return hist_observe(spec, metrics, "fleet.task_completed",
+                        jnp.broadcast_to(tasks, sent.shape), sent)
+
+
+# ---------------------------------------------------------------------------
+# THE registry.  Order = carry order = documentation order.
+# ---------------------------------------------------------------------------
+
+FLEET_LANES: tuple[FleetLane, ...] = (
+    FleetLane(
+        name="node",
+        doc="Stacked per-node Seeker state: supercap charge, harvest "
+            "predictor, AAC label continuity.",
+        carry_field="node", config_kwarg=None,
+        init="repro.serving.fleet:fleet_node_init", freeze="keep",
+        resume_in=("state0",), resume_out=("final_state",),
+        aggregates=("bytes_on_wire", "bytes_on_wire_i32",
+                    "decision_histogram", "completed", "alive_slots",
+                    "correct"),
+        trace_keys=("decisions", "payload_bytes", "stored_uj", "k_trace",
+                    "logits", "preds"),
+        counter_keys=("decision_histogram", "completed", "alive_slots",
+                      "correct"),
+        telemetry=_node_telemetry, telemetry_update=_node_telemetry_update),
+    FleetLane(
+        name="prng",
+        doc="Per-node PRNG keys: node i's stream is fold_in(key, i), split "
+            "3-ways per slot (carry/sensor/host) exactly like the "
+            "single-node scan.",
+        carry_field="keys", config_kwarg=None,
+        init="repro.serving.fleet:fleet_node_keys", freeze="keep",
+        resume_in=("node_keys",), resume_out=("final_keys",),
+        aggregates=(), trace_keys=(), counter_keys=()),
+    FleetLane(
+        name="churn",
+        doc="Exogenous dropout/rejoin: an (N, S) alive trace input; dead "
+            "slots freeze every 'keep' lane and emit DEFER with zero "
+            "payload.",
+        carry_field=None, config_kwarg="alive",
+        init="repro.core.energy:fleet_alive_traces", freeze="input",
+        resume_in=(), resume_out=(),
+        aggregates=(), trace_keys=("alive",), counter_keys=(),
+        outputs_when_off=True),
+    FleetLane(
+        name="brownout",
+        doc="Endogenous churn: supercap-hysteresis brown-out flag in the "
+            "carry; browned-out slots freeze like dead ones but the "
+            "harvester keeps trickle-charging.",
+        carry_field="brownout", config_kwarg="brownout",
+        init="repro.serving.fleet:_resolve_brownout0", freeze="trickle",
+        resume_in=("brownout_state0",), resume_out=("final_brownout",),
+        aggregates=("brownout_slots", "brownout_events"),
+        trace_keys=("brownout",),
+        counter_keys=("brownout_slots", "brownout_events"),
+        telemetry=_brownout_telemetry,
+        telemetry_update=_brownout_telemetry_update,
+        outputs_when_off=True),
+    FleetLane(
+        name="intermittent",
+        doc="Staged partial inference: suspended activations ride the carry "
+            "across slots and brown-outs; DEFER slots become D6/D7/D8.",
+        carry_field="intermittent", config_kwarg="intermittent",
+        init="repro.serving.edge_host:intermittent_fleet_init", freeze="keep",
+        resume_in=("intermittent_state0", "slot0"),
+        resume_out=("final_intermittent",),
+        aggregates=("it_full", "it_early", "correct_ladder",
+                    "it_correct_full", "it_correct_early"),
+        trace_keys=("it_emit", "it_label", "it_conf", "it_src", "it_stage"),
+        counter_keys=("it_full", "it_early", "correct_ladder"),
+        telemetry=_intermittent_telemetry,
+        telemetry_update=_intermittent_telemetry_update),
+    FleetLane(
+        name="telemetry",
+        doc="Registry metrics lanes riding the carry; a fleet-level "
+            "accumulator merged across segments, never frozen per node.",
+        carry_field="telemetry", config_kwarg="telemetry",
+        init="repro.obs:metrics_init", freeze="merge",
+        resume_in=("telemetry_state0",), resume_out=("telemetry",),
+        aggregates=(), trace_keys=(), counter_keys=()),
+    FleetLane(
+        name="task",
+        doc="Heterogeneous multi-workload fleets: static per-node task ids "
+            "switch energy-cost scale, host weights and the per-task "
+            "aggregate splits.",
+        carry_field=None, config_kwarg="task",
+        init="repro.serving.fleet_lanes:fleet_task_assignment",
+        freeze="static",
+        resume_in=(), resume_out=(),
+        aggregates=("completed_by_task", "deadline_miss_by_task",
+                    "correct_by_task"),
+        trace_keys=(), counter_keys=("completed_by_task",
+                                     "deadline_miss_by_task"),
+        telemetry=_task_telemetry, telemetry_update=_task_telemetry_update),
+)
+
+
+def fleet_lane(name: str) -> FleetLane:
+    """Look one lane up by name (KeyError with the known set otherwise)."""
+    for ln in FLEET_LANES:
+        if ln.name == name:
+            return ln
+    raise KeyError(f"no fleet lane {name!r}; registered: "
+                   f"{[ln.name for ln in FLEET_LANES]}")
+
+
+def fleet_telemetry_lanes(active: frozenset) -> tuple[Lane, ...]:
+    """Union of the telemetry lanes every active (or always-emitting) lane
+    owns — the registry-derived body of
+    :func:`repro.serving.fleet.fleet_telemetry_spec`."""
+    out: list[Lane] = []
+    for ln in FLEET_LANES:
+        if ln.telemetry is not None and ln.active(active):
+            out.extend(ln.telemetry(active))
+    return tuple(out)
+
+
+def fleet_trace_keys(active: frozenset) -> tuple[str, ...]:
+    """Per-segment (S, N) trace keys the streamed driver concatenates, in
+    registration order."""
+    return tuple(k for ln in FLEET_LANES if ln.active(active)
+                 for k in ln.trace_keys)
+
+
+def fleet_counter_keys(active: frozenset) -> tuple[str, ...]:
+    """Additive integer aggregate keys the streamed driver sums exactly
+    across segments, in registration order."""
+    return tuple(k for ln in FLEET_LANES if ln.active(active)
+                 for k in ln.counter_keys)

@@ -15,10 +15,10 @@ tests/test_fleet_sharded.py's ``_BROWNOUT_CODE`` subprocess snippet):
 * hysteresis: a node drains below ``off_uj`` → browns out (DEFER, zero
   payload, frozen PRNG/predictor — bitwise the PR-4 frozen-node lanes),
   trickle-charges while down, and rejoins at ``restart_uj``;
-* ``brownout=None`` keeps the engine bitwise (the all-lane equality against
-  a run of the unchanged legacy path);
-* the streamed driver carries the brown-out flag through the resume
-  contract bitwise, and rejects S == 0 streams with a clear error;
+* the streamed driver rejects S == 0 streams with a clear error — the
+  ``brownout=None``-is-bitwise-legacy and streamed-resume-bitwise contracts
+  moved to the registry-wide harness in tests/test_resume_contract.py
+  (every lane combination, one parametrized sweep);
 * ``bytes_on_wire_i32`` is exact where the float32 ``bytes_on_wire``
   already is not.
 """
@@ -141,19 +141,13 @@ def test_brownout_config_validates():
 # Engine-level: the endogenous alive lane
 # ---------------------------------------------------------------------------
 
-def test_brownout_none_is_bitwise_legacy(setup):
-    """Acceptance: brownout=None (and alive=None) leaves every output lane
-    bitwise — the emitted alive lane is all-True, the brown-out lane empty,
-    and the exact byte pair agrees with the float sum at this scale."""
+def test_wire_byte_pair_agrees_with_float_sum(setup):
+    """At this scale the float32 byte total is still exact, so the int pair
+    must agree with it (the off-state sweep itself lives in
+    tests/test_resume_contract.py)."""
     key, wins, labels, harvest, kw = setup
     res = seeker_fleet_simulate(wins, harvest, labels=labels, **kw)
-    assert bool(jnp.all(res["alive"]))
-    assert not bool(jnp.any(res["brownout"]))
-    assert int(res["brownout_slots"]) == 0
-    assert int(res["brownout_events"]) == 0
     assert wire_bytes_exact(res) == int(float(res["bytes_on_wire"]))
-    # legacy keys and values are untouched (spot-check the invariants the
-    # churn suite pins in depth: this run IS the churn-free engine)
     assert int(res["alive_slots"]) == S * N
 
 
@@ -282,33 +276,6 @@ def test_brownout_composes_with_exogenous_churn(setup):
         frozen = ~e[t]
         np.testing.assert_array_equal(stored[t][frozen], prev[frozen])
         prev = stored[t]
-
-
-def test_streamed_brownout_rides_resume_contract(setup):
-    """Acceptance: chunked segments resume the brown-out flag bitwise —
-    traces, counters (brownout_slots exactly), final flag."""
-    key, wins, labels, harvest, kw = setup
-    cfg = BrownoutConfig(off_uj=10.0, restart_uj=30.0)
-    full = seeker_fleet_simulate(wins, harvest, labels=labels, brownout=cfg,
-                                 initial_uj=12.0, **kw)
-    assert bool(jnp.any(full["brownout"])), "fixture must brown out"
-    for chunk in (3, 5, S):
-        stream = seeker_fleet_simulate_streamed(
-            wins, harvest, chunk=chunk, labels=labels, brownout=cfg,
-            initial_uj=12.0, **kw)
-        for k in ("decisions", "payload_bytes", "stored_uj", "logits",
-                  "alive", "brownout"):
-            np.testing.assert_array_equal(
-                np.asarray(stream[k]), np.asarray(full[k]),
-                err_msg=f"{k} (chunk={chunk})")
-        for k in ("brownout_slots", "brownout_events", "completed",
-                  "alive_slots", "correct"):
-            assert int(stream[k]) == int(full[k]), (k, chunk)
-        np.testing.assert_array_equal(np.asarray(stream["final_brownout"]),
-                                      np.asarray(full["final_brownout"]))
-        np.testing.assert_array_equal(np.asarray(stream["final_keys"]),
-                                      np.asarray(full["final_keys"]))
-        assert wire_bytes_exact(stream) == wire_bytes_exact(full)
 
 
 def test_streamed_empty_stream_raises(setup):

@@ -529,6 +529,87 @@ print("OK")
 """
 
 
+_MIXED_TASK_CODE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.seeker_har import HAR
+from repro.core import BrownoutConfig, fleet_harvest_traces
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import (TaskLaneConfig, seeker_fleet_simulate,
+                           seeker_fleet_simulate_sharded,
+                           seeker_fleet_simulate_streamed)
+from repro.sharding import make_mesh_compat
+
+assert jax.device_count() == 8, jax.device_count()
+S, N, BLOCK = 6, 13, 4
+key = jax.random.PRNGKey(0)
+params = har_init(key, HAR)
+gen = init_generator(key, HAR.window, HAR.channels)
+wins, labels = har_stream(key, S)
+harvest = fleet_harvest_traces(key, N, S)
+mesh = make_mesh_compat((8,), ("data",))
+cfg = TaskLaneConfig()   # round-robin har/bearing ids, bearing cost scale
+kw = dict(signatures=class_signatures(), qdnn_params=params,
+          host_params=params, gen_params=gen, har_cfg=HAR, labels=labels,
+          node_block=BLOCK, donate=False, task=cfg,
+          brownout=BrownoutConfig(off_uj=8.0, restart_uj=28.0),
+          initial_uj=10.0)
+
+ref = seeker_fleet_simulate(wins, harvest, **kw)
+sh = seeker_fleet_simulate_sharded(wins, harvest, mesh=mesh, **kw)
+stream = seeker_fleet_simulate_streamed(wins, harvest, chunk=4, mesh=mesh,
+                                        **kw)
+
+# --- mixed fleet traces bitwise across all three drivers -------------------
+for k in ("decisions", "payload_bytes", "stored_uj", "logits", "alive",
+          "brownout"):
+    np.testing.assert_array_equal(np.asarray(sh[k]), np.asarray(ref[k]),
+                                  err_msg="sharded " + k)
+    np.testing.assert_array_equal(np.asarray(stream[k]), np.asarray(ref[k]),
+                                  err_msg="streamed " + k)
+assert sh["task_names"] == stream["task_names"] == ("har", "bearing")
+np.testing.assert_array_equal(np.asarray(sh["tasks"]), np.asarray(ref["tasks"]))
+print("mixed traces OK")
+
+# --- per-task splits: psum'd ints EXACTLY equal single-device --------------
+for k in ("completed_by_task", "deadline_miss_by_task", "correct_by_task"):
+    np.testing.assert_array_equal(np.asarray(sh[k]), np.asarray(ref[k]),
+                                  err_msg="sharded " + k)
+    np.testing.assert_array_equal(np.asarray(stream[k]), np.asarray(ref[k]),
+                                  err_msg="streamed " + k)
+
+# recompute the split from the unsharded traces: padding (N=13 on 8 devices)
+# must never enter a per-task count
+tasks = np.asarray(ref["tasks"])
+sent = (np.asarray(ref["decisions"]) != 5) & np.asarray(ref["alive"])
+comp = np.asarray(sh["completed_by_task"])
+miss = np.asarray(sh["deadline_miss_by_task"])
+for t in range(cfg.n_tasks):
+    assert comp[t] == sent[:, tasks == t].sum(), t
+assert comp.sum() == int(sh["completed"])
+assert comp.sum() + miss.sum() == int(sh["alive_slots"])
+ok = np.asarray(ref["preds"]) == np.asarray(labels)[:, None]
+corr = np.asarray(sh["correct_by_task"])
+for t in range(cfg.n_tasks):
+    assert corr[t] == (ok & sent)[:, tasks == t].sum(), t
+print("per-task psum splits OK")
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_mixed_task_fleet_psum_exact_8dev():
+    """ISSUE 9 acceptance on the mesh: a mixed HAR+bearing fleet (task lane,
+    round-robin ids, bearing cost scale) is bitwise identical single-device
+    vs sharded vs streamed under brown-outs with N=13 padding, and the
+    per-task aggregate splits (completed / deadline-miss / correct by task)
+    are psum-exact integers that partition the fleet totals, recomputed
+    from the unsharded traces."""
+    assert "OK" in _run(_MIXED_TASK_CODE, devices=8)
+
+
 @pytest.mark.slow
 def test_sharded_fleet_bitwise_equivalence_8dev():
     """Sharded == unsharded bitwise on an 8-virtual-device CPU mesh, for

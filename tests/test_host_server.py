@@ -466,3 +466,63 @@ def test_fleet_serve_step_engine_alive_composes(setup):
     a, b = _by_node(out["slot_output"]), _by_node(both["slot_output"])
     for n in a:
         np.testing.assert_array_equal(a[n], b[n])
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous task fleets on the host tier (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_task_id_rides_payload_into_cache_and_weights(setup):
+    """The SAME wire payload sent by an HAR node and a bearing node must (a)
+    occupy two distinct cache rows — the task id is a payload leaf, so the
+    signature differs — and (b) come back through that task's stacked host
+    weights, not a shared tree."""
+    from repro.models.har import har_init as _init
+    from repro.serving import stack_task_params
+
+    key, params, gen, wins, labels, wire = setup
+    params_b = _init(jax.random.fold_in(key, 5), HAR)
+    cfg = _cfg(batch_size=2, n_nodes=2, n_tasks=2)
+    stacked = stack_task_params((params, params_b))
+    two = jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a[:1], (2,)
+                                                            + a.shape[1:]),
+                                 wire)
+    entries = cluster_entries(two, cfg.m, tasks=jnp.asarray([0, 1]))
+    nid = jnp.arange(2, dtype=jnp.int32)
+    mask = jnp.ones((2,), bool)
+    kw = dict(cfg=cfg, host_params=stacked, gen_params=gen, base_key=key)
+
+    state, out = host_serve_slot(host_server_init(cfg), entries, nid, mask,
+                                 **kw)
+    assert host_server_stats(state)["cache_misses"] == 2   # no collision
+    a = _by_node(out)
+    assert not np.array_equal(a[0], a[1]), \
+        "identical payload, different tasks -> different host weights"
+
+    # node 0 (task 0, weights == the shared tree) matches the n_tasks=1 path
+    cfg1 = _cfg(batch_size=2, n_nodes=2)
+    e1 = cluster_entries(two, cfg1.m)
+    _, out1 = host_serve_slot(host_server_init(cfg1), e1, nid, mask,
+                              cfg=cfg1, host_params=params, gen_params=gen,
+                              base_key=key)
+    np.testing.assert_array_equal(a[0], _by_node(out1)[0])
+
+
+def test_batch_task_counts_masks_invalid_rows(setup):
+    from repro.host import batch_task_counts
+    from repro.host.queue import queue_init, queue_push_batch
+    from repro.host.scheduler import edf_pop_batch
+
+    key, params, gen, wins, labels, wire = setup
+    cfg = _cfg(batch_size=4, n_nodes=8)
+    entries = cluster_entries(jax.tree_util.tree_map(lambda a: a[:3], wire),
+                              cfg.m, tasks=jnp.asarray([0, 1, 1]))
+    q = queue_init(jax.tree_util.tree_map(lambda a: a[0], entries),
+                   cfg.queue_capacity)
+    arr = jnp.zeros((3,), jnp.int32)
+    q, _ = queue_push_batch(q, entries, jnp.arange(3, dtype=jnp.int32),
+                            arr, arr + cfg.qos_slots, jnp.ones((3,), bool))
+    q, batch, _ = edf_pop_batch(q, cfg.batch_size)
+    counts = np.asarray(batch_task_counts(batch, 2))
+    assert counts.tolist() == [1, 2]                  # 4th row is padding
+    assert counts.sum() == int(np.asarray(batch.valid).sum())

@@ -15,8 +15,9 @@ tests/test_fleet_sharded.py's ``_INTERMITTENT_CODE`` subprocess snippet):
 * early exits are confidence-gated and monotone in ``exit_threshold``;
 * the per-source-slot accuracy gather matches a numpy recomputation from
   the raw traces;
-* ``intermittent=None`` keeps the engine bitwise-identical to the legacy
-  path, and half-configured runs raise instead of silently dropping state;
+* half-configured runs raise instead of silently dropping state (the
+  ``intermittent=None``-is-bitwise and streamed-driver contracts moved to
+  the registry-wide sweep in tests/test_resume_contract.py);
 * the acceptance metric: under scarce harvest the staged lane completes
   strictly more inferences than freeze-and-lose.
 """
@@ -171,19 +172,6 @@ def test_lane_suspends_when_broke():
 # Engine integration: None-parity, validation, early exit
 # ---------------------------------------------------------------------------
 
-def test_none_mode_is_bitwise_legacy(setup):
-    """intermittent=None takes the untouched 3-tuple-carry path: every lane
-    of a run without the kwarg equals a run that never heard of it."""
-    key, params, aux, wins, labels, harvest, kw = setup
-    a = seeker_fleet_simulate(wins, harvest, **kw)
-    b = seeker_fleet_simulate(wins, harvest, intermittent=None,
-                              intermittent_state0=None, aux_params=None,
-                              **kw)
-    for k in ("decisions", "payload_bytes", "stored_uj", "logits"):
-        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
-    assert "it_emit" not in a and "it_emit" not in b
-
-
 def test_half_configured_runs_raise(setup):
     key, params, aux, wins, labels, harvest, kw = setup
     it0 = intermittent_fleet_init(N, HAR)
@@ -254,16 +242,8 @@ def test_accuracy_gather_matches_numpy(setup):
 # The resume contract (docs/RESUME_CONTRACT.md)
 # ---------------------------------------------------------------------------
 
-def _assert_bitwise(a, b, keys):
-    for k in keys:
-        np.testing.assert_array_equal(
-            np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
-
-
 IT_KEYS = ("decisions", "payload_bytes", "stored_uj", "it_emit", "it_label",
            "it_conf", "it_src", "it_stage", "logits")
-IT_COUNTERS = ("completed", "it_full", "it_early", "correct",
-               "it_correct_full", "it_correct_early", "brownout_slots")
 
 
 def test_manual_resume_matches_long_run(setup):
@@ -291,30 +271,10 @@ def test_manual_resume_matches_long_run(setup):
         b["final_intermittent"], full["final_intermittent"])
 
 
-def test_streamed_resume_bitwise(setup):
-    """Suspend → brown-out → trickle-charge → resume, chained through the
-    streamed driver in 3-slot segments: bitwise one long run, including
-    inferences whose suspension spans a segment boundary (the driver's
-    cross-segment rescoring path)."""
-    key, params, aux, wins, labels, harvest, kw = setup
-    full = seeker_fleet_simulate(wins, harvest, **_it_kw(kw, aux))
-    streamed = seeker_fleet_simulate_streamed(wins, harvest, chunk=3,
-                                              **_it_kw(kw, aux))
-    _assert_bitwise(full, streamed, IT_KEYS)
-    for k in IT_COUNTERS:
-        assert int(full[k]) == int(streamed[k]), k
-    jax.tree_util.tree_map(
-        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
-                                                   np.asarray(y)),
-        full["final_intermittent"], streamed["final_intermittent"])
-    # the regime actually exercises the hard paths: brown-outs happened,
-    # and at least one emission's source slot lies in an earlier segment
-    emit = np.asarray(streamed["it_emit"])
-    src = np.asarray(streamed["it_src"])
-    slots = np.arange(S)[:, None]
-    assert int(streamed["brownout_slots"]) > 0
-    assert ((emit > 0) & (src // 3 < slots // 3)).any(), \
-        "no emission crossed a segment boundary — weaken the harvest"
+# The streamed-driver and lane=None bitwise contracts moved to
+# tests/test_resume_contract.py: one registry-parametrized harness sweeping
+# EVERY lane combination (including the cross-segment rescoring path this
+# file used to pin per-lane).
 
 
 # ---------------------------------------------------------------------------

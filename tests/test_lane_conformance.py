@@ -1,0 +1,103 @@
+"""Static conformance of the fleet lane registry (ISSUE 9).
+
+Fail-fast companion to tests/test_docs.py: before any engine runs, every
+lane registered in :data:`repro.serving.FLEET_LANES` must carry the full
+protocol — an ``init`` reference that resolves to a real callable, a legal
+freeze kind, a resume contract for anything it actually carries, aggregate
+declarations consistent with the counters it streams, and a section in
+docs/RESUME_CONTRACT.md.  Adding a lane is ONE registration; forgetting any
+of its declared duties is a test failure here, not a silent engine bug.
+"""
+import importlib
+import pathlib
+import re
+
+import pytest
+
+from repro.serving.fleet_lanes import (FLEET_LANES, FREEZE_KINDS, FleetCarry,
+                                       FleetLane, fleet_lane)
+
+DOC = pathlib.Path(__file__).resolve().parents[1] / "docs" / \
+    "RESUME_CONTRACT.md"
+LANE_IDS = [ln.name for ln in FLEET_LANES]
+
+
+def _lane(name) -> FleetLane:
+    return fleet_lane(name)
+
+
+def test_registry_covers_every_carry_field():
+    """Each FleetCarry field is owned by exactly one registered lane."""
+    owners = [ln.carry_field for ln in FLEET_LANES
+              if ln.carry_field is not None]
+    assert sorted(owners) == sorted(set(owners)), \
+        f"duplicate carry-field owners: {owners}"
+    assert set(owners) == set(FleetCarry._fields), \
+        f"carry fields without a registered lane: " \
+        f"{set(FleetCarry._fields) - set(owners)}"
+
+
+def test_lane_names_unique():
+    assert len(LANE_IDS) == len(set(LANE_IDS))
+
+
+@pytest.mark.parametrize("name", LANE_IDS)
+def test_lane_declares_protocol(name):
+    """init / freeze / resume / aggregate declarations are all present and
+    well-formed — the harness in tests/test_resume_contract.py relies on
+    every one of them."""
+    ln = _lane(name)
+    assert ln.doc and ln.doc.strip(), f"{name}: missing doc"
+    assert ln.freeze in FREEZE_KINDS, f"{name}: freeze {ln.freeze!r}"
+    assert ln.init and ":" in ln.init, \
+        f"{name}: init must be a 'module:attr' reference, got {ln.init!r}"
+    # a lane that owns a carry field must say how to resume it
+    if ln.carry_field is not None:
+        assert ln.resume_in, f"{name}: carried lane without resume_in"
+        assert ln.resume_out, f"{name}: carried lane without resume_out"
+    # counters it streams must be declared aggregates
+    missing = set(ln.counter_keys) - set(ln.aggregates) - {
+        "decision_histogram", "completed", "alive_slots", "correct"}
+    assert not set(ln.counter_keys) - set(ln.aggregates), \
+        f"{name}: counter_keys {missing} not declared in aggregates"
+
+
+@pytest.mark.parametrize("name", LANE_IDS)
+def test_lane_init_reference_resolves(name):
+    """The registered ``module:attr`` init is a real importable callable."""
+    mod, attr = _lane(name).init.split(":")
+    fn = getattr(importlib.import_module(mod), attr, None)
+    assert callable(fn), f"{name}: init {mod}:{attr} does not resolve"
+
+
+@pytest.mark.parametrize("name", LANE_IDS)
+def test_lane_documented_in_resume_contract(name):
+    """Every registered lane has its section in docs/RESUME_CONTRACT.md —
+    an undocumented lane fails here before the engines ever run."""
+    text = DOC.read_text()
+    assert re.search(rf"`{re.escape(name)}`", text), \
+        f"lane {name!r} is not documented in docs/RESUME_CONTRACT.md"
+
+
+@pytest.mark.parametrize("name", LANE_IDS)
+def test_lane_resume_keys_documented(name):
+    """The resume-contract doc names each carried lane's resume keys, so the
+    doc cannot drift from the registry."""
+    text = DOC.read_text()
+    ln = _lane(name)
+    for k in (*ln.resume_in, *ln.resume_out):
+        assert f"`{k}`" in text, \
+            f"lane {name!r}: resume key {k!r} missing from " \
+            f"docs/RESUME_CONTRACT.md"
+
+
+def test_active_off_states():
+    """Lanes with no config kwarg are always active; output lanes advertise
+    their off-state presence correctly."""
+    for ln in FLEET_LANES:
+        if ln.config_kwarg is None:
+            assert ln.active(frozenset()), ln.name
+    assert _lane("brownout").outputs_when_off
+    assert _lane("churn").outputs_when_off
+    assert not _lane("intermittent").outputs_when_off
+    assert not _lane("task").outputs_when_off

@@ -1,0 +1,243 @@
+"""The resume contract as a PROPERTY of the lane registry (ISSUE 9).
+
+One harness over :data:`repro.serving.FLEET_LANES` instead of per-lane
+copies (the brown-out and intermittent variants this file replaced lived in
+tests/test_brownout.py / tests/test_intermittent.py):
+
+* for EVERY combination of configurable lanes, the streamed chunked driver
+  equals one long run bitwise — traces, counters, and every lane's declared
+  ``resume_out`` state;
+* lanes that are off emit their registered off-state (``lane=None`` is
+  bitwise the lane-absent engine: empty brown-out lane, all-True alive
+  lane, no intermittent/task keys at all);
+* the telemetry lane is a pure observer: adding it to any combination
+  changes no other output bit;
+* spelling every lane kwarg out as ``None`` is bitwise identical to never
+  mentioning them.
+
+The combinations and the keys compared are DERIVED from the registry
+(``config_kwarg``, ``trace_keys``, ``counter_keys``, ``resume_out``), so a
+new registered lane is swept here without editing this file — the
+conformance companion (tests/test_lane_conformance.py) fails if a lane
+skips the declarations this harness relies on.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core import (BrownoutConfig, IntermittentConfig,
+                        fleet_alive_traces, fleet_harvest_traces)
+from repro.core.recovery import init_generator
+from repro.data.sensors import class_signatures, har_stream
+from repro.models.har import har_aux_init, har_init
+from repro.serving import (FLEET_LANES, TaskLaneConfig,
+                           seeker_fleet_simulate,
+                           seeker_fleet_simulate_streamed)
+from repro.serving.fleet import _active_lanes
+from repro.serving.fleet_lanes import fleet_counter_keys, fleet_trace_keys
+
+S, N, CHUNK = 6, 3, 2
+SCARCITY = 0.04           # scarce enough that brown-outs and DEFERs happen
+BO = BrownoutConfig(off_uj=8.0, restart_uj=28.0)
+IT = IntermittentConfig()
+TASK = TaskLaneConfig()
+
+CONFIGURABLE = tuple(ln.name for ln in FLEET_LANES
+                     if ln.config_kwarg is not None)
+COMBOS = [frozenset(c) for r in range(len(CONFIGURABLE) + 1)
+          for c in itertools.combinations(CONFIGURABLE, r)]
+
+
+def _combo_id(combo):
+    return "+".join(sorted(combo)) or "none"
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    wins, labels = har_stream(key, S)
+    return dict(
+        key=key, wins=wins, labels=labels,
+        harvest=fleet_harvest_traces(key, N, S) * SCARCITY,
+        alive=fleet_alive_traces(jax.random.fold_in(key, 3), N, S, duty=0.8),
+        aux=har_aux_init(jax.random.fold_in(key, 7), HAR),
+        kw=dict(signatures=class_signatures(), qdnn_params=params,
+                host_params=params,
+                gen_params=init_generator(key, HAR.window, HAR.channels),
+                har_cfg=HAR, key=key, donate=False, initial_uj=12.0))
+
+
+_MEMO: dict = {}
+
+
+def _combo_kw(ctx, combo):
+    kw = dict(ctx["kw"], labels=ctx["labels"])
+    if "churn" in combo:
+        kw["alive"] = ctx["alive"]
+    if "brownout" in combo:
+        kw["brownout"] = BO
+    if "intermittent" in combo:
+        kw.update(intermittent=IT, aux_params=ctx["aux"])
+    if "telemetry" in combo:
+        kw["telemetry"] = True
+    if "task" in combo:
+        kw["task"] = TASK
+    return kw
+
+
+def _run(ctx, combo):
+    if combo not in _MEMO:
+        kw = _combo_kw(ctx, combo)
+        full = seeker_fleet_simulate(ctx["wins"], ctx["harvest"], **kw)
+        streamed = seeker_fleet_simulate_streamed(
+            ctx["wins"], ctx["harvest"], chunk=CHUNK, **kw)
+        _MEMO[combo] = (full, streamed)
+    return _MEMO[combo]
+
+
+def _active(combo):
+    return _active_lanes(IT if "intermittent" in combo else None,
+                         TASK if "task" in combo else None,
+                         BO if "brownout" in combo else None)
+
+
+def _lane_on(ln, combo):
+    """Is this registered lane enabled for this kwarg combo (always-on
+    lanes and always-emitting output lanes included)?"""
+    return (ln.config_kwarg is None or ln.outputs_when_off
+            or ln.name in combo)
+
+
+def _is_static(v):
+    """Non-array metadata (e.g. ``task_names``) — compared by ``==``;
+    NamedTuple carries are pytrees, not metadata, despite being tuples."""
+    return isinstance(v, (int, float, str)) or (
+        isinstance(v, tuple) and all(isinstance(x, str) for x in v))
+
+
+def _assert_tree_equal(a, b, msg):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("combo", COMBOS, ids=_combo_id)
+def test_streamed_chunks_equal_one_long_run(ctx, combo):
+    """Registry sweep of the contract: chunked streaming == one long run,
+    bitwise, for every lane combination — the keys compared are the lanes'
+    own trace/counter/resume declarations."""
+    full, streamed = _run(ctx, combo)
+    active = _active(combo)
+    for k in fleet_trace_keys(active):
+        np.testing.assert_array_equal(
+            np.asarray(streamed[k]), np.asarray(full[k]),
+            err_msg=f"trace {k} [{_combo_id(combo)}]")
+    for k in fleet_counter_keys(active):
+        if k in full:
+            assert np.array_equal(np.asarray(streamed[k]),
+                                  np.asarray(full[k])), \
+                f"counter {k} [{_combo_id(combo)}]"
+    for ln in FLEET_LANES:
+        if not _lane_on(ln, combo):
+            continue
+        for k in ln.resume_out:
+            if k in full or k in streamed:
+                _assert_tree_equal(full[k], streamed[k],
+                                   f"{ln.name}.{k} [{_combo_id(combo)}]")
+
+
+@pytest.mark.parametrize(
+    "combo", [c for c in COMBOS if "telemetry" not in c], ids=_combo_id)
+def test_telemetry_lane_is_pure_observer(ctx, combo):
+    """Folding the metrics carry into any combination changes nothing else:
+    every non-telemetry output of the telemetered run is bitwise the bare
+    run's."""
+    bare, _ = _run(ctx, combo)
+    tel, _ = _run(ctx, combo | {"telemetry"})
+    assert "telemetry" in tel and "telemetry" not in bare
+    for k, v in bare.items():
+        if _is_static(v):
+            assert tel[k] == v, k
+        else:
+            _assert_tree_equal(v, tel[k], f"{k} perturbed by telemetry")
+
+
+@pytest.mark.parametrize("combo", COMBOS, ids=_combo_id)
+def test_off_lanes_emit_registered_off_state(ctx, combo):
+    """A lane that is off is ABSENT, not zeroed: no traces, no counters, no
+    resume keys — except the always-on output lanes (alive, brownout),
+    which emit their registered inert values."""
+    full, _ = _run(ctx, combo)
+    if "brownout" not in combo:
+        assert not bool(np.any(np.asarray(full["brownout"])))
+        assert int(full["brownout_slots"]) == 0
+        assert int(full["brownout_events"]) == 0
+        if "churn" not in combo:
+            assert bool(np.all(np.asarray(full["alive"])))
+    for ln in FLEET_LANES:
+        if _lane_on(ln, combo):
+            continue
+        for k in (*ln.trace_keys, *ln.counter_keys, *ln.aggregates,
+                  *ln.resume_out):
+            assert k not in full, \
+                f"off lane {ln.name} leaked key {k} [{_combo_id(combo)}]"
+
+
+def test_explicit_none_kwargs_equal_absent(ctx):
+    """``lane=None`` spelled out for every registered lane is bitwise the
+    run that never heard of any of them."""
+    kw = dict(ctx["kw"], labels=ctx["labels"])
+    a = seeker_fleet_simulate(ctx["wins"], ctx["harvest"], **kw)
+    b = seeker_fleet_simulate(
+        ctx["wins"], ctx["harvest"], alive=None, brownout=None,
+        brownout_state0=None, intermittent=None, intermittent_state0=None,
+        aux_params=None, tasks=None, task=None, telemetry=None,
+        telemetry_state0=None, **kw)
+    assert set(a) == set(b)
+    for k, v in a.items():
+        if _is_static(v):
+            assert b[k] == v, k
+        else:
+            _assert_tree_equal(v, b[k], k)
+
+
+def test_cross_segment_emission_rescored_bitwise(ctx):
+    """The hard path of the streamed contract: an inference SUSPENDED in one
+    segment and emitted in a later one must keep its globally indexed source
+    slot, and the driver's cross-segment accuracy rescore (``correct``,
+    ``correct_by_task``) must still equal the long run exactly.  Uses a
+    longer scarce trace than the sweep so the regime provably crosses a
+    boundary."""
+    s2, chunk = 18, 3
+    key = ctx["key"]
+    wins, labels = har_stream(key, s2)
+    harvest = fleet_harvest_traces(key, N, s2) * SCARCITY
+    kw = dict(ctx["kw"], labels=labels, brownout=BO, intermittent=IT,
+              aux_params=ctx["aux"], task=TASK)
+    full = seeker_fleet_simulate(wins, harvest, **kw)
+    streamed = seeker_fleet_simulate_streamed(wins, harvest, chunk=chunk,
+                                              **kw)
+    emit = np.asarray(streamed["it_emit"])
+    src = np.asarray(streamed["it_src"])
+    slots = np.arange(s2)[:, None]
+    assert int(streamed["brownout_slots"]) > 0, "fixture must brown out"
+    assert ((emit > 0) & (src // chunk < slots // chunk)).any(), \
+        "no emission crossed a segment boundary — weaken the harvest"
+    for k in ("decisions", "it_emit", "it_src", "it_label", "stored_uj"):
+        np.testing.assert_array_equal(np.asarray(streamed[k]),
+                                      np.asarray(full[k]), err_msg=k)
+    for k in ("correct", "correct_ladder", "it_correct_full",
+              "it_correct_early", "completed"):
+        assert int(streamed[k]) == int(full[k]), k
+    np.testing.assert_array_equal(np.asarray(streamed["correct_by_task"]),
+                                  np.asarray(full["correct_by_task"]))
+    np.testing.assert_array_equal(
+        np.asarray(streamed["completed_by_task"]),
+        np.asarray(full["completed_by_task"]))

@@ -1,0 +1,192 @@
+"""Heterogeneous multi-workload fleets — the `task` lane (ISSUE 9).
+
+One fleet mixes HAR wearables (task 0) and bearing-vibration monitors
+(task 1) through the registered lane protocol:
+
+* per-task aggregate splits (`completed_by_task`, `deadline_miss_by_task`,
+  `correct_by_task` / `accuracy_by_task`) PARTITION the fleet totals;
+* task-switched energy costs bite ONLY the scaled task — HAR nodes stay
+  bitwise-identical to the task-less engine;
+* per-node (S, N) label tracks score each node against its own task's
+  stream; a shared (S,) track with per-node streams is rejected with an
+  error that names the offending shapes and the accepted forms;
+* ``per_task_host`` routes each node through its own stacked host weights
+  without touching the other task's outputs;
+* malformed ``tasks`` arrays fail loudly.
+
+The streamed/chunked contract for this lane is swept (with every other
+lane combination) by tests/test_resume_contract.py; the sharded psum-exact
+contract lives in tests/test_fleet_sharded.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.seeker_har import HAR
+from repro.core import fleet_harvest_traces
+from repro.core.decision import DEFER
+from repro.core.recovery import init_generator
+from repro.data.sensors import bearing_stream, class_signatures, har_stream
+from repro.models.har import har_init
+from repro.serving import (TaskLaneConfig, seeker_fleet_simulate,
+                           stack_task_params)
+
+S, N = 10, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = har_init(key, HAR)
+    gen = init_generator(key, HAR.window, HAR.channels)
+    wins, labels = har_stream(key, S)
+    harvest = fleet_harvest_traces(key, N, S)
+    kw = dict(signatures=class_signatures(), qdnn_params=params,
+              host_params=params, gen_params=gen, har_cfg=HAR, key=key,
+              donate=False)
+    return key, wins, labels, harvest, kw
+
+
+def _mixed_streams(key):
+    """Per-node (N, S, T, C) streams: even nodes play HAR windows, odd nodes
+    bearing vibration resampled to the shared (T, C) grid; (S, N) labels."""
+    har_w, har_l = har_stream(key, S)
+    brg_w, brg_l = bearing_stream(jax.random.fold_in(key, 11), S, t=HAR.window)
+    brg_w = jnp.tile(brg_w, (1, 1, HAR.channels))        # (S, T, 1) -> (S, T, C)
+    streams = jnp.stack([har_w if i % 2 == 0 else brg_w for i in range(N)])
+    labels = jnp.stack([har_l if i % 2 == 0 else brg_l for i in range(N)],
+                       axis=1)                           # (S, N)
+    return streams, labels
+
+
+def test_per_task_aggregates_partition_fleet_totals(setup):
+    key, wins, labels, harvest, kw = setup
+    res = seeker_fleet_simulate(wins, harvest, labels=labels,
+                                task=TaskLaneConfig(), **kw)
+    assert res["task_names"] == ("har", "bearing")
+    comp = np.asarray(res["completed_by_task"])
+    miss = np.asarray(res["deadline_miss_by_task"])
+    corr = np.asarray(res["correct_by_task"])
+    assert comp.shape == miss.shape == corr.shape == (2,)
+    assert comp.sum() == int(res["completed"])
+    assert corr.sum() == int(res["correct"])
+    # every alive slot either completed or missed its deadline
+    assert comp.sum() + miss.sum() == int(res["alive_slots"])
+    acc = np.asarray(res["accuracy_by_task"])
+    np.testing.assert_allclose(acc, corr / np.maximum(comp, 1), rtol=1e-6)
+    # recompute the split from the traces
+    tasks = np.asarray(res["tasks"])
+    sent = (np.asarray(res["decisions"]) != DEFER) & np.asarray(res["alive"])
+    for t in range(2):
+        assert comp[t] == sent[:, tasks == t].sum()
+
+
+def test_cost_scale_bites_scaled_task_only(setup):
+    """Doubling task 1's energy costs changes bearing nodes' decisions and
+    leaves every HAR node's traces BITWISE untouched — task identity is
+    per-node, not fleet-global."""
+    key, wins, labels, harvest, kw = setup
+    base = seeker_fleet_simulate(wins, harvest, labels=labels, **kw)
+    mixed = seeker_fleet_simulate(
+        wins, harvest, labels=labels,
+        task=TaskLaneConfig(cost_scale=(1.0, 2.0)), **kw)
+    tasks = np.asarray(mixed["tasks"])
+    har_nodes, brg_nodes = tasks == 0, tasks == 1
+    for k in ("decisions", "stored_uj", "payload_bytes", "k_trace"):
+        np.testing.assert_array_equal(
+            np.asarray(mixed[k])[:, har_nodes],
+            np.asarray(base[k])[:, har_nodes], err_msg=f"HAR {k}")
+    assert (np.asarray(mixed["decisions"])[:, brg_nodes]
+            != np.asarray(base["decisions"])[:, brg_nodes]).any(), \
+        "cost_scale=2.0 never changed a bearing decision; weaken harvest"
+
+
+def test_unit_cost_scale_is_bitwise_costless(setup):
+    """A task lane with all-1.0 scales splits aggregates but cannot perturb
+    a single trace bit."""
+    key, wins, labels, harvest, kw = setup
+    base = seeker_fleet_simulate(wins, harvest, labels=labels, **kw)
+    res = seeker_fleet_simulate(
+        wins, harvest, labels=labels,
+        task=TaskLaneConfig(cost_scale=(1.0, 1.0)), **kw)
+    for k in ("decisions", "stored_uj", "payload_bytes", "logits"):
+        np.testing.assert_array_equal(np.asarray(res[k]),
+                                      np.asarray(base[k]), err_msg=k)
+    assert int(np.asarray(res["completed_by_task"]).sum()) \
+        == int(base["completed"])
+
+
+def test_per_node_label_tracks_score_each_task(setup):
+    """Mixed streams + per-task (S, N) label tracks: correct_by_task equals
+    scoring each node's preds against ITS OWN track."""
+    key, wins, labels, harvest, kw = setup
+    streams, tracks = _mixed_streams(key)
+    res = seeker_fleet_simulate(streams, harvest, labels=tracks,
+                                task=TaskLaneConfig(), **kw)
+    sent = (np.asarray(res["decisions"]) != DEFER) & np.asarray(res["alive"])
+    ok = np.asarray(res["preds"]) == np.asarray(tracks)
+    tasks = np.asarray(res["tasks"])
+    for t in range(2):
+        want = (ok & sent)[:, tasks == t].sum()
+        assert int(res["correct_by_task"][t]) == want, t
+
+
+def test_mixed_fleet_shared_labels_raise_with_shapes(setup):
+    """The satellite-6 negative: per-node streams + one shared (S,) label
+    track is ambiguous, and the error names the offending shape AND both
+    accepted forms so the fix is in the message."""
+    key, wins, labels, harvest, kw = setup
+    streams, _ = _mixed_streams(key)
+    with pytest.raises(ValueError, match="ambiguous") as ei:
+        seeker_fleet_simulate(streams, harvest, labels=labels,
+                              task=TaskLaneConfig(), **kw)
+    msg = str(ei.value)
+    assert f"({S},)" in msg and f"({S}, {N})" in msg, msg
+    assert "accepted forms" in msg, msg
+
+
+def test_tasks_validation(setup):
+    key, wins, labels, harvest, kw = setup
+    with pytest.raises(ValueError, match=r"tasks must be \(N,\)"):
+        seeker_fleet_simulate(wins, harvest,
+                              tasks=jnp.zeros((N - 1,), jnp.int32), **kw)
+    with pytest.raises(ValueError, match="declares 2 tasks"):
+        seeker_fleet_simulate(wins, harvest,
+                              tasks=jnp.full((N,), 5, jnp.int32),
+                              task=TaskLaneConfig(), **kw)
+
+
+def test_per_task_host_routes_stacked_weights(setup):
+    """per_task_host: nodes of task 0 are bitwise-blind to what task 1's
+    host weights are — each node infers through its own stacked tree."""
+    key, wins, labels, harvest, kw = setup
+    params_b = har_init(jax.random.fold_in(key, 21), HAR)
+    cfg = TaskLaneConfig(per_task_host=True)
+    kw_a = {k: v for k, v in kw.items() if k != "host_params"}
+    same = seeker_fleet_simulate(
+        wins, harvest, labels=labels, task=cfg,
+        host_params=(kw["host_params"], kw["host_params"]), **kw_a)
+    split = seeker_fleet_simulate(
+        wins, harvest, labels=labels, task=cfg,
+        host_params=(kw["host_params"], params_b), **kw_a)
+    tasks = np.asarray(same["tasks"])
+    np.testing.assert_array_equal(
+        np.asarray(split["logits"])[:, tasks == 0],
+        np.asarray(same["logits"])[:, tasks == 0])
+    assert not np.array_equal(np.asarray(split["logits"])[:, tasks == 1],
+                              np.asarray(same["logits"])[:, tasks == 1])
+    # malformed: per_task_host demands one tree per task
+    with pytest.raises(ValueError, match="per_task_host"):
+        seeker_fleet_simulate(wins, harvest, labels=labels, task=cfg,
+                              host_params=(kw["host_params"],), **kw_a)
+
+
+def test_stack_task_params_shapes():
+    key = jax.random.PRNGKey(0)
+    a = har_init(key, HAR)
+    b = har_init(jax.random.fold_in(key, 1), HAR)
+    stacked = stack_task_params((a, b))
+    la = jax.tree_util.tree_leaves(a)
+    for leaf, ref in zip(jax.tree_util.tree_leaves(stacked), la):
+        assert leaf.shape == (2,) + ref.shape
